@@ -1,0 +1,83 @@
+//! Fig 4b + method sweep: how much of the cache gets error reduction
+//! matters, and GEAR wins across compression ratios (error-level view).
+//!
+//! ```bash
+//! cargo run --release --example compare_methods
+//! ```
+
+use gear_serve::gear::compose::{compress, Backbone, GearConfig, Method};
+use gear_serve::gear::error::rel_error;
+use gear_serve::gear::KvKind;
+use gear_serve::util::rng::Rng;
+use gear_serve::util::table::{pct, sig, Table};
+use gear_serve::workload::synth_kv::{generate, SynthKvParams};
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let (n, d, heads) = (512usize, 128usize, 4usize);
+    let x = generate(&mut rng, n, d, &SynthKvParams::key());
+
+    // --- Fig 4b: apply low-rank error reduction to only the most recent
+    // p% of prefill tokens. Older tokens stay quant-only.
+    let mut t = Table::new("Fig 4b — error reduction applied to p% most recent tokens")
+        .header(&["p", "rel err (whole cache)"]);
+    let quant_only = Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) };
+    let gear_l = Method::gear_l_default(2);
+    for p in [1.0f64, 0.75, 0.5, 0.25, 0.0] {
+        let split = n - (n as f64 * p) as usize;
+        // Old segment: quant only. Recent segment: GEAR-L.
+        let old = x.slice_rows(0, split);
+        let recent = x.slice_rows(split, n);
+        let mut recon = Vec::with_capacity(n * d);
+        if split > 0 {
+            let c = compress(&old, KvKind::Key, &GearConfig::new(quant_only, heads));
+            recon.extend_from_slice(c.reconstruct().data());
+        }
+        if split < n {
+            let c = compress(&recent, KvKind::Key, &GearConfig::new(gear_l, heads));
+            recon.extend_from_slice(c.reconstruct().data());
+        }
+        t.row(vec![pct(p), sig(rel_error(x.data(), &recon))]);
+    }
+    t.print();
+    println!("expected shape (paper Fig 4b): error grows as p shrinks\n");
+
+    // --- Accuracy-free ratio sweep (Fig 4c error-level companion).
+    let mut t2 = Table::new("Method sweep — error vs size across ratios")
+        .header(&["method", "KV size", "rel err"]);
+    for m in [
+        Method::QuantOnly { bits: 8, backbone: Backbone::Kivi(64) },
+        Method::QuantOnly { bits: 4, backbone: Backbone::Kivi(64) },
+        Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) },
+        Method::gear_l_default(4),
+        Method::gear_l_default(2),
+        Method::gear_default(4),
+        Method::gear_default(2),
+    ] {
+        let c = compress(&x, KvKind::Key, &GearConfig::new(m, heads));
+        t2.row(vec![
+            m.label(),
+            pct(c.kv_size_frac()),
+            sig(rel_error(x.data(), c.reconstruct().data())),
+        ]);
+    }
+    t2.print();
+
+    // Value-cache regime too (flatter channels).
+    let xv = generate(&mut rng, n, d, &SynthKvParams::value());
+    let mut t3 = Table::new("Same sweep on the Value-cache regime")
+        .header(&["method", "KV size", "rel err"]);
+    for m in [
+        Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) },
+        Method::gear_l_default(2),
+        Method::gear_default(2),
+    ] {
+        let c = compress(&xv, KvKind::Value, &GearConfig::new(m, heads));
+        t3.row(vec![
+            m.label(),
+            pct(c.kv_size_frac()),
+            sig(rel_error(xv.data(), c.reconstruct().data())),
+        ]);
+    }
+    t3.print();
+}

@@ -1,0 +1,42 @@
+//! Quickstart: compress a KV matrix with GEAR and inspect error vs size.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gear_serve::gear::compose::{compress, Backbone, GearConfig, Method};
+use gear_serve::gear::error::rel_error;
+use gear_serve::gear::KvKind;
+use gear_serve::util::rng::Rng;
+use gear_serve::util::table::{pct, sig, Table};
+use gear_serve::workload::synth_kv::{generate, SynthKvParams};
+
+fn main() {
+    // A Key-cache-like matrix: 512 tokens x 128 channels with the
+    // heavy-tailed fixed channels the paper analyzes.
+    let mut rng = Rng::new(0);
+    let kv = generate(&mut rng, 512, 128, &SynthKvParams::key());
+
+    let mut table = Table::new("GEAR quickstart: compress 512x128 Key cache")
+        .header(&["method", "KV size vs FP16", "relative error"]);
+
+    for method in [
+        Method::Fp16,
+        Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) },
+        Method::gear_l_default(2),
+        Method::gear_default(2),
+    ] {
+        let cfg = GearConfig::new(method, 4);
+        let compressed = compress(&kv, KvKind::Key, &cfg);
+        let recon = compressed.reconstruct();
+        table.row(vec![
+            method.label(),
+            pct(compressed.kv_size_frac()),
+            sig(rel_error(kv.data(), recon.data())),
+        ]);
+    }
+    table.print();
+
+    println!("\nThe GEAR rows keep ~4x compression while cutting the 2-bit");
+    println!("quantization error by an order of magnitude — the paper's core claim.");
+}

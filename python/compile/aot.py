@@ -1,0 +1,267 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts for the Rust runtime.
+
+Emits HLO *text* (never ``.serialize()``): jax >= 0.5 writes protos with
+64-bit instruction ids that the runtime's xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  weights.bin              trained checkpoint (trains first if missing)
+  prefill_{n}.hlo.txt      tokens [1,n] -> (last_logits, K [L,n,d], V [L,n,d])
+  decode_{n}.hlo.txt       (token, pos, K, V, cur_len) -> (logits, k_new, v_new)
+  gear_attn_{n}.hlo.txt    fused GEAR decode attention (Pallas, interpret)
+  golden/*.bin             cross-language test vectors (GSRV tensor maps)
+  manifest.txt             key=value description of everything above
+
+Weights are passed as runtime *arguments* in the manifest's `param_order`
+(never baked as constants: the HLO text printer elides large literals).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import tasks
+from .kernels import fused_attn, ref
+from .model import (
+    BOS,
+    ModelConfig,
+    decode_graph,
+    encode,
+    forward,
+    load_checkpoint,
+    prefill_graph,
+)
+
+PREFILL_BUCKETS = [64, 128, 256]
+DECODE_BUCKETS = [128, 256, 512]
+GEAR_ATTN_BUCKET = 256
+GOLDEN_PROMPT = "a=3;b=7;c=a+b;d=c*b;d?\n"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_tensor_map(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    """GSRV tensor-map format (rust/src/model/weights.rs::read_tensor_map)."""
+    with open(path, "wb") as f:
+        f.write(b"GSRV")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors:
+            arr = np.asarray(arr, np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def param_order(params, cfg: ModelConfig) -> list[str]:
+    """GSRV tensor names in jax pytree-flatten order.
+
+    Weights are passed as runtime arguments (NOT baked as constants: the
+    HLO *text* printer elides large literals as ``constant({...})``, which
+    silently corrupts them through the text interchange). The Rust runtime
+    rebuilds the argument list from weights.bin in exactly this order.
+    """
+    import jax.tree_util as jtu
+
+    def path_to_name(path) -> str:
+        keys = []
+        for p in path:
+            if isinstance(p, jtu.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jtu.SequenceKey):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        if keys[0] == "blocks":
+            i, leaf = keys[1], keys[2]
+            if leaf in ("wq", "wk", "wv", "wo"):
+                return f"blocks.{i}.attn.{leaf}"
+            if leaf in ("w1", "w2", "b1", "b2"):
+                return f"blocks.{i}.mlp.{leaf}"
+            return f"blocks.{i}.{leaf}"
+        return keys[0]
+
+    leaves = jtu.tree_flatten_with_path(params)[0]
+    return [path_to_name(path) for path, _ in leaves]
+
+
+def lower_model_graphs(params, cfg: ModelConfig, outdir: str, manifest: list[str]) -> None:
+    pspec = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    manifest.append("param_order=" + ",".join(param_order(params, cfg)))
+
+    # Prefill buckets.
+    for n in PREFILL_BUCKETS:
+        fn = jax.jit(lambda p, toks: prefill_graph(p, cfg, toks))
+        spec = jax.ShapeDtypeStruct((1, n), jnp.int32)
+        path = os.path.join(outdir, f"prefill_{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(fn.lower(pspec, spec)))
+        manifest.append(f"prefill_{n}=prefill_{n}.hlo.txt")
+        print(f"[aot] wrote {path}")
+
+    # Decode buckets.
+    for n in DECODE_BUCKETS:
+        fn = jax.jit(
+            lambda p, token, pos, k, v, cur: decode_graph(p, cfg, token, pos, k, v, cur)
+        )
+        s_i = jax.ShapeDtypeStruct((), jnp.int32)
+        s_kv = jax.ShapeDtypeStruct((cfg.n_layers, n, cfg.d_model), jnp.float32)
+        path = os.path.join(outdir, f"decode_{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(fn.lower(pspec, s_i, s_i, s_kv, s_kv, s_i)))
+        manifest.append(f"decode_{n}=decode_{n}.hlo.txt")
+        print(f"[aot] wrote {path}")
+
+
+def lower_gear_attn(cfg: ModelConfig, outdir: str, manifest: list[str]) -> None:
+    n, d, h, r = GEAR_ATTN_BUCKET, cfg.d_model, cfg.n_heads, 4
+    dh = d // h
+    fn = jax.jit(
+        lambda q, codes, scales, zeros, a, b, v, cur: fused_attn.gear_attn_pallas(
+            q, codes, scales, zeros, a, b, v, cur, n_heads=h
+        )
+    )
+    specs = (
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((n, d), jnp.int32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((h, n, r), jnp.float32),
+        jax.ShapeDtypeStruct((h, dh, r), jnp.float32),
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    path = os.path.join(outdir, f"gear_attn_{n}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(fn.lower(*specs)))
+    manifest.append(f"gear_attn_{n}=gear_attn_{n}.hlo.txt")
+    print(f"[aot] wrote {path}")
+
+
+def write_golden(params, cfg: ModelConfig, outdir: str, manifest: list[str]) -> None:
+    gdir = os.path.join(outdir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+
+    # (1) Model parity: prompt ids -> full-forward last logits.
+    ids = np.array([BOS] + encode(GOLDEN_PROMPT), np.int32)
+    logits = forward(params, cfg, jnp.asarray(ids[None, :]))[0, -1]
+    write_tensor_map(
+        os.path.join(gdir, "parity.bin"),
+        [("tokens", ids.astype(np.float32)), ("last_logits", np.asarray(logits))],
+    )
+    manifest.append("golden_parity=golden/parity.bin")
+
+    # (2) Quantization vectors: shared input, dequant under several schemes.
+    rng = np.random.default_rng(1234)
+    x = rng.normal(size=(48, 32)).astype(np.float32)
+    x[:, 5] *= 9.0  # a heavy channel
+    tensors: list[tuple[str, np.ndarray]] = [("x", x)]
+    for bits, axis, group, name in [
+        (4, 1, 16, "deq_b4_row_g16"),
+        (2, 1, 32, "deq_b2_row_g32"),
+        (2, 0, 48, "deq_b2_col_full"),
+        (8, 1, 32, "deq_b8_row_g32"),
+    ]:
+        deq = ref.quant_dequant_ref(jnp.asarray(x), bits, axis, group)
+        tensors.append((name, np.asarray(deq)))
+    write_tensor_map(os.path.join(gdir, "quant.bin"), tensors)
+    manifest.append("golden_quant=golden/quant.bin")
+
+    # (3) Outlier filter vectors.
+    sp, rem = ref.filter_outliers_ref(jnp.asarray(x), 0.125, 1)
+    write_tensor_map(
+        os.path.join(gdir, "outlier.bin"),
+        [("x", x), ("sparse", np.asarray(sp)), ("remainder", np.asarray(rem))],
+    )
+    manifest.append("golden_outlier=golden/outlier.bin")
+
+    # (4) Fused attention oracle (used to validate both the Pallas kernel's
+    # HLO artifact and the Rust fused path).
+    n, d, h, r = 32, cfg.d_model, cfg.n_heads, 4
+    dh = d // h
+    q = rng.normal(size=(d,)).astype(np.float32)
+    codes = rng.integers(0, 16, size=(n, d)).astype(np.int32)
+    scales = (np.abs(rng.normal(size=(d,))) * 0.1 + 0.01).astype(np.float32)
+    zeros = rng.normal(size=(d,)).astype(np.float32) * 0.1
+    a = rng.normal(size=(h, n, r)).astype(np.float32) * 0.05
+    b = rng.normal(size=(h, dh, r)).astype(np.float32) * 0.05
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    ctx = ref.gear_attn_ref(
+        jnp.asarray(q), jnp.asarray(codes), jnp.asarray(scales), jnp.asarray(zeros),
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(v), h,
+    )
+    write_tensor_map(
+        os.path.join(gdir, "gear_attn.bin"),
+        [
+            ("q", q),
+            ("codes", codes.astype(np.float32)),
+            ("scales", scales),
+            ("zeros", zeros),
+            ("a", a),
+            ("b", b),
+            ("v", v),
+            ("ctx", np.asarray(ctx)),
+        ],
+    )
+    manifest.append("golden_gear_attn=golden/gear_attn.bin")
+    print(f"[aot] wrote golden vectors to {gdir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--skip-model-graphs", action="store_true",
+                    help="only weights + golden (fast CI path)")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    weights_path = os.path.join(outdir, "weights.bin")
+    if not os.path.exists(weights_path):
+        print("[aot] no checkpoint found; training (set GEAR_TRAIN_STEPS to tune)")
+        from .train import train
+
+        steps = int(os.environ.get("GEAR_TRAIN_STEPS", "1500"))
+        batch = int(os.environ.get("GEAR_TRAIN_BATCH", "8"))
+        train(weights_path, steps, batch, seed=0)
+    params, cfg = load_checkpoint(weights_path)
+    print(f"[aot] model {cfg}")
+
+    manifest: list[str] = [
+        f"vocab={cfg.vocab}",
+        f"d_model={cfg.d_model}",
+        f"n_layers={cfg.n_layers}",
+        f"n_heads={cfg.n_heads}",
+        f"max_seq={cfg.max_seq}",
+        "weights=weights.bin",
+        f"golden_prompt={GOLDEN_PROMPT!r}",
+    ]
+    write_golden(params, cfg, outdir, manifest)
+    if not args.skip_model_graphs:
+        lower_model_graphs(params, cfg, outdir, manifest)
+        lower_gear_attn(cfg, outdir, manifest)
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] manifest with {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Layer-2 GEAR pipeline in JAX, composed from the layer-1 kernels.
+
+This is the build-path mirror of ``rust/src/gear/compose.rs``: the same
+D̂ + L + S decomposition, used to (a) validate kernels against ``ref.py``
+at build time and (b) lower the fused decode-attention graph to HLO for
+the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import quant as kq
+from .kernels import power_iter as kp
+from .kernels import ref
+
+
+def gear_compress_recon(x, kind: str, bits: int, group: int, s: float, r: int,
+                        n_heads: int = 4, iters: int = 3, seed: int = 0):
+    """GEAR reconstruction using the Pallas kernels.
+
+    Mirrors ``ref.gear_ref`` but runs the quantization and power-iteration
+    hot-spots through Pallas. Returns the reconstructed matrix.
+    """
+    axis = 0 if kind == "key" else 1
+    sparse, rem = ref.filter_outliers_ref(x, s, axis)
+    dq = kq.quant_dequant_pallas(rem, bits, axis, group)
+    resid = rem - dq
+    if r > 0:
+        n, d = x.shape
+        assert d % n_heads == 0
+        dh = d // n_heads
+        parts = []
+        for h in range(n_heads):
+            sub = resid[:, h * dh : (h + 1) * dh]
+            a, b = kp.power_iter_pallas(sub, r, iters, seed + h)
+            parts.append(a @ b.T)
+        low = jnp.concatenate(parts, axis=1)
+    else:
+        low = 0.0
+    return dq + low + sparse
+
+
+def rel_error(x, xhat) -> float:
+    return float(jnp.linalg.norm(x - xhat) / jnp.linalg.norm(x))

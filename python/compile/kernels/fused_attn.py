@@ -1,0 +1,72 @@
+"""Pallas kernel: fused GEAR attention (dequant + low-rank + attend).
+
+The paper's CUDA contribution fuses dequantization with the attention
+matmul; this is the TPU-shaped analogue. One kernel invocation computes a
+single decode-step query against a compressed K cache and a dense V tile:
+
+    scores[t,h] = (q_h · (zeros + codes[t]·scales)_h
+                   + (B_hᵀ q_h) · A_h[t]) / sqrt(d_H)
+    ctx         = softmax_t(scores) @ V
+
+The low-rank correction uses the factored form `(Bᵀq)·A[t]` — the paper's
+"down-projection first" optimization — so the n×d low-rank matrix is never
+materialized in VMEM.
+
+VMEM budget (DESIGN.md §Hardware-Adaptation): codes int8 n×d + V f32 n×d +
+factors ≈ 5·n·d bytes; at n=512, d=128 that is ~320 KiB — inside a TPU
+core's ~16 MiB VMEM with room for double-buffering. `interpret=True` for
+CPU execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gear_attn_kernel(q_ref, codes_ref, scales_ref, zeros_ref, a_ref, b_ref, v_ref, len_ref,
+                      o_ref, *, n_heads: int):
+    q = q_ref[...]                # [d]
+    codes = codes_ref[...]        # [n, d] int8/int32
+    scales = scales_ref[...]      # [d] (per-channel, KCVT Key layout)
+    zeros = zeros_ref[...]        # [d]
+    a = a_ref[...]                # [H, n, r]
+    b = b_ref[...]                # [H, dh, r]
+    v = v_ref[...]                # [n, d]
+    cur_len = len_ref[0]          # int32: valid rows
+
+    n, d = codes.shape
+    dh = d // n_heads
+    # Dequantize the K tile in registers/VMEM.
+    k = zeros[None, :] + codes.astype(jnp.float32) * scales[None, :]
+    kh = k.reshape(n, n_heads, dh)
+    qh = q.reshape(n_heads, dh)
+    scores = jnp.einsum("hd,nhd->hn", qh, kh)
+    # Low-rank correction, factored: w_h = B_hᵀ q_h; scores += w_h · A_h[t].
+    w = jnp.einsum("hdr,hd->hr", b, qh)
+    scores = scores + jnp.einsum("hr,hnr->hn", w, a)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    valid = (jax.lax.iota(jnp.int32, n) < cur_len)[None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    vh = v.reshape(n, n_heads, dh)
+    o_ref[...] = jnp.einsum("hn,nhd->hd", probs, vh).reshape(d)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads",))
+def gear_attn_pallas(q, codes, scales, zeros, a, b, v, cur_len, n_heads: int):
+    """Fused GEAR decode attention.
+
+    q: [d]; codes: [n, d] integer codes; scales/zeros: [d] per-channel
+    quantization params; a: [H, n, r], b: [H, dh, r] low-rank K factors;
+    v: [n, d] dense values; cur_len: int32 valid-row count. Returns [d].
+    """
+    n, d = codes.shape
+    return pl.pallas_call(
+        functools.partial(_gear_attn_kernel, n_heads=n_heads),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(q, codes, scales, zeros, a, b, v, jnp.asarray(cur_len, jnp.int32).reshape(1))

@@ -1,0 +1,69 @@
+"""Pallas kernel: blocked matmuls for the power-iteration SVD solver.
+
+Algorithm 2's cost is two skinny GEMMs per sweep (`A = X B`, `B = Xᵀ A`);
+this module provides them as a tiled Pallas matmul (the MXU-shaped
+hot-spot) and composes the full solver around jnp QR (QR runs once, on a
+(n, r) panel — not a hot-spot).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 64
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] @ y_ref[...]
+
+
+@jax.jit
+def matmul_pallas(x, y):
+    """Tiled `x @ y` (tiles the rows of x; y is small/skinny and stays
+    resident — the power-iteration shape)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    pad_m = (-m) % BLOCK_M
+    xp = jnp.pad(x, ((0, pad_m), (0, 0)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m + pad_m, n), jnp.float32),
+        grid=((m + pad_m) // BLOCK_M,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, n), lambda i: (i, 0)),
+        interpret=True,
+    )(xp, y)
+    return out[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("r", "iters", "seed"))
+def power_iter_pallas(x, r: int, iters: int, seed: int = 0):
+    """Power-iteration low-rank factorization using the Pallas matmul.
+
+    Returns (A [n, r], B [d, r]). Semantics match
+    ``ref.power_iter_ref`` (same PRNG, same sweep structure).
+    """
+    n, d = x.shape
+    r = max(1, min(r, n, d))
+    iters = max(1, iters)
+    key = jax.random.PRNGKey(seed)
+    b = jax.random.normal(key, (d, r), jnp.float32)
+    a = jnp.zeros((n, r), jnp.float32)
+    xt = x.T
+    for l in range(iters):
+        last = l == iters - 1
+        if last:
+            b, _ = jnp.linalg.qr(b)
+        a = matmul_pallas(x, b)
+        if last:
+            a, _ = jnp.linalg.qr(a)
+        b = matmul_pallas(xt, a)
+    return a, b

@@ -1,0 +1,105 @@
+"""Pallas kernel: group-wise asymmetric fake-quantization (layer 1).
+
+The compute hot-spot of the backbone `D̂ = Quant_b(X)` as a Pallas kernel.
+The grid tiles the token axis; each program instance quantizes a
+`(BLOCK_N, d)` tile held in VMEM.
+
+Hardware adaptation (paper targets CUDA): the CUDA kernel fuses
+dequantization into the attention GEMM over warps; on TPU the analogous
+structure is a VMEM-resident tile dequantized right before the MXU matmul.
+BlockSpec expresses the HBM→VMEM schedule the paper wrote with threadblocks.
+`interpret=True` everywhere — the CPU PJRT plugin cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 64
+
+
+def _qdq_row_kernel(x_ref, o_ref, *, bits: int, group: int):
+    """Quantize-dequantize one (BLOCK_N, d) tile with per-row groups."""
+    x = x_ref[...]
+    n, d = x.shape
+    levels = 2**bits - 1
+    g = min(group, d)
+    # Whole tile is in VMEM; reshape to (n, n_groups, g). d % g == 0 is
+    # enforced by the wrapper (ragged tails are handled there).
+    xg = x.reshape(n, d // g, g)
+    mn = jnp.min(xg, axis=-1, keepdims=True)
+    mx = jnp.max(xg, axis=-1, keepdims=True)
+    delta = (mx - mn) / levels
+    safe = jnp.where(delta > 0, delta, 1.0)
+    code = jnp.clip(jnp.round((xg - mn) / safe), 0, levels)
+    deq = jnp.where(delta > 0, mn + code * delta, mn)
+    o_ref[...] = deq.reshape(n, d)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "axis", "group"))
+def quant_dequant_pallas(x, bits: int, axis: int, group: int):
+    """Group-wise fake-quantization via Pallas.
+
+    x: [n, d] f32. axis=1: per-token groups of `group` along rows; axis=0:
+    per-channel groups along columns (implemented by transposing around the
+    row kernel — on TPU this would instead flip the BlockSpec index map).
+    """
+    if axis == 0:
+        return quant_dequant_pallas(x.T, bits, 1, group).T
+    n, d = x.shape
+    g = min(group, d)
+    main_d = (d // g) * g
+
+    def run(xpart):
+        nn, dd = xpart.shape
+        pad_n = (-nn) % BLOCK_N
+        xp = jnp.pad(xpart, ((0, pad_n), (0, 0)))
+        grid = ((nn + pad_n) // BLOCK_N,)
+        out = pl.pallas_call(
+            functools.partial(_qdq_row_kernel, bits=bits, group=g),
+            out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
+            grid=grid,
+            in_specs=[pl.BlockSpec((BLOCK_N, dd), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((BLOCK_N, dd), lambda i: (i, 0)),
+            interpret=True,
+        )(xp)
+        return out[:nn]
+
+    if main_d == 0:
+        # d < group: a single ragged group spanning the whole row.
+        return run_single_group(x, bits)
+    out_main = run(x[:, :main_d])
+    if main_d == d:
+        return out_main
+    # Ragged tail group: quantized as its own (smaller) group.
+    out_tail = run_single_group(x[:, main_d:], bits)
+    return jnp.concatenate([out_main, out_tail], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def run_single_group(x, bits: int):
+    """One group per row (whole-vector / KCVT grouping) via the same kernel."""
+    n, d = x.shape
+    pad_n = (-n) % BLOCK_N
+    xp = jnp.pad(x, ((0, pad_n), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_qdq_row_kernel, bits=bits, group=d),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
+        grid=((n + pad_n) // BLOCK_N,),
+        in_specs=[pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+        interpret=True,
+    )(xp)
+    return out[:n]
+
+
+def kcvt_pallas(x, bits: int, kind: str):
+    """KCVT backbone: per-channel Key / per-token Value, whole-vector groups."""
+    if kind == "key":
+        return quant_dequant_pallas(x, bits, 0, x.shape[0])
+    return quant_dequant_pallas(x, bits, 1, x.shape[1])

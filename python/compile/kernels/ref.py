@@ -1,0 +1,175 @@
+"""Pure-jnp reference oracles for the Pallas kernels (layer 1).
+
+Every kernel in this package has an exact (or tolerance-bounded) oracle
+here; ``tests/test_kernels.py`` sweeps shapes/bit-widths with hypothesis and
+asserts allclose. These functions are also the semantics the Rust
+implementations in ``rust/src/gear/`` mirror.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_dequant_ref(x, bits: int, axis: int, group: int):
+    """Group-wise asymmetric fake-quantization (Eq. 2 of the paper).
+
+    x: [n, d]. axis=1: groups of `group` entries along each row (per-token);
+    axis=0: groups along each column (per-channel). Returns the dequantized
+    tensor (same shape).
+    """
+    n, d = x.shape
+    levels = 2**bits - 1
+    if axis == 1:
+        g = min(group, d)
+        pad = (-d) % g
+        xp = jnp.pad(x, ((0, 0), (0, pad)))
+        xg = xp.reshape(n, (d + pad) // g, g)
+        mn = jnp.min(xg, axis=-1, keepdims=True)
+        mx = jnp.max(xg, axis=-1, keepdims=True)
+    else:
+        g = min(group, n)
+        pad = (-n) % g
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        xg = xp.reshape((n + pad) // g, g, d)
+        mn = jnp.min(xg, axis=1, keepdims=True)
+        mx = jnp.max(xg, axis=1, keepdims=True)
+    delta = (mx - mn) / levels
+    # Degenerate groups (constant) quantize to the zero-point exactly.
+    safe = jnp.where(delta > 0, delta, 1.0)
+    code = jnp.clip(jnp.round((xg - mn) / safe), 0, levels)
+    deq = jnp.where(delta > 0, mn + code * delta, mn)
+    if axis == 1:
+        out = deq.reshape(n, d + pad)[:, :d]
+    else:
+        out = deq.reshape(n + pad, d)[:n, :]
+    # Padding rows/cols contribute fake group extremes; recompute exactly for
+    # the tail group when padding was needed (the Rust side has no padding).
+    if pad:
+        out = _quant_dequant_tail_exact(x, out, bits, axis, g)
+    return out
+
+
+def _quant_dequant_tail_exact(x, out, bits, axis, g):
+    """Fix the final (ragged) group with an exact computation."""
+    n, d = x.shape
+    levels = 2**bits - 1
+    if axis == 1:
+        lo = (d // g) * g
+        tail = x[:, lo:]
+        mn = jnp.min(tail, axis=1, keepdims=True)
+        mx = jnp.max(tail, axis=1, keepdims=True)
+    else:
+        lo = (n // g) * g
+        tail = x[lo:, :]
+        mn = jnp.min(tail, axis=0, keepdims=True)
+        mx = jnp.max(tail, axis=0, keepdims=True)
+    delta = (mx - mn) / levels
+    safe = jnp.where(delta > 0, delta, 1.0)
+    code = jnp.clip(jnp.round((tail - mn) / safe), 0, levels)
+    deq = jnp.where(delta > 0, mn + code * delta, mn)
+    if axis == 1:
+        return out.at[:, lo:].set(deq)
+    return out.at[lo:, :].set(deq)
+
+
+def filter_outliers_ref(x, s: float, axis: int):
+    """Per-vector top/bottom s/2 extraction (Eq. 4).
+
+    Returns (sparse, remainder) with sparse + remainder == x. axis=0:
+    per-channel vectors (Key); axis=1: per-token vectors (Value).
+    """
+    n, d = x.shape
+    vec_len = n if axis == 0 else d
+    k = int(round(vec_len * s / 2.0))
+    if k == 0:
+        return jnp.zeros_like(x), x
+    xt = x.T if axis == 0 else x  # vectors along rows now
+    top = jax.lax.top_k(xt, k)[1]
+    bottom = jax.lax.top_k(-xt, k)[1]
+    idx = jnp.concatenate([top, bottom], axis=1)
+    mask_t = jnp.zeros_like(xt, dtype=bool)
+    rows = jnp.arange(xt.shape[0])[:, None]
+    mask_t = mask_t.at[rows, idx].set(True)
+    mask = mask_t.T if axis == 0 else mask_t
+    sparse = jnp.where(mask, x, 0.0)
+    return sparse, x - sparse
+
+
+def power_iter_ref(x, r: int, iters: int, seed: int = 0):
+    """Power-iteration low-rank factorization (paper Algorithm 2).
+
+    Returns (A [n, r], B [d, r]) with A @ B.T ~= top-r of x.
+    """
+    n, d = x.shape
+    r = max(1, min(r, n, d))
+    key = jax.random.PRNGKey(seed)
+    b = jax.random.normal(key, (d, r), jnp.float32)
+    a = jnp.zeros((n, r), jnp.float32)
+    for l in range(max(1, iters)):
+        last = l == max(1, iters) - 1
+        if last:
+            b, _ = jnp.linalg.qr(b)
+        a = x @ b
+        if last:
+            a, _ = jnp.linalg.qr(a)
+        b = x.T @ a
+    return a, b
+
+
+def headwise_lowrank_ref(x, n_heads: int, r: int, iters: int, seed: int = 0):
+    """Head-wise low-rank approximation: reconstructed dense matrix."""
+    n, d = x.shape
+    assert d % n_heads == 0
+    dh = d // n_heads
+    parts = []
+    for h in range(n_heads):
+        sub = x[:, h * dh : (h + 1) * dh]
+        a, b = power_iter_ref(sub, r, iters, seed + h)
+        parts.append(a @ b.T)
+    return jnp.concatenate(parts, axis=1)
+
+
+def gear_ref(x, kind: str, bits: int, group: int, s: float, r: int, iters: int = 3):
+    """Full GEAR pipeline on one matrix: returns the reconstruction.
+
+    kind: "key" (per-channel axis) or "value" (per-token axis).
+    """
+    axis = 0 if kind == "key" else 1
+    sparse, rem = filter_outliers_ref(x, s, axis)
+    dq = quant_dequant_ref(rem, bits, axis, group)
+    resid = rem - dq
+    n_heads = 4 if x.shape[1] % 4 == 0 else 1
+    low = headwise_lowrank_ref(resid, n_heads, r, iters) if r > 0 else 0.0
+    return dq + low + sparse
+
+
+def fused_attn_ref(q, k_deq, v_deq, n_heads: int):
+    """Single-query multi-head attention over n cached tokens.
+
+    q: [d]; k_deq/v_deq: [n, d] (already dequantized). Returns ctx [d].
+    """
+    n, d = k_deq.shape
+    dh = d // n_heads
+    qh = q.reshape(n_heads, dh)
+    kh = k_deq.reshape(n, n_heads, dh)
+    vh = v_deq.reshape(n, n_heads, dh)
+    scores = jnp.einsum("hd,nhd->hn", qh, kh) / jnp.sqrt(jnp.float32(dh))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hn,nhd->hd", probs, vh).reshape(d)
+
+
+def gear_attn_ref(q, codes, scales, zeros, a_k, b_k, v_deq, n_heads: int):
+    """Oracle for the fused GEAR attention kernel: dequantize the 8-bit-ish
+    integer codes (per-channel scales/zeros), add the head-wise low-rank
+    correction, then attend.
+
+    codes: [n, d] int32; scales/zeros: [d]; a_k: [H, n, r]; b_k: [H, dh, r].
+    """
+    n, d = codes.shape
+    k_deq = zeros[None, :] + codes.astype(jnp.float32) * scales[None, :]
+    h, _, r = a_k.shape
+    dh = d // h
+    low = jnp.einsum("hnr,hdr->nhd", a_k, b_k).reshape(n, d)
+    return fused_attn_ref(q, k_deq + low, v_deq, n_heads)

@@ -1,0 +1,301 @@
+"""Layer-2: the tiny-GPT model in JAX (build path only).
+
+Architecture must match ``rust/src/model/transformer.rs`` exactly:
+pre-LN decoder-only transformer, learned positional embeddings, GELU (tanh)
+MLP, untied LM head, LayerNorm eps 1e-5 with biased variance. The golden
+parity test (``tests/test_parity`` + rust ``tests/golden.rs``) enforces it.
+
+The character vocabulary is shared verbatim with
+``rust/src/model/config.rs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --- tokenizer (keep in lockstep with rust/src/model/config.rs) -------------
+
+VOCAB_CHARS = "0123456789abcdefghijklmnopqrstuvwxyz=+-*%;?> \n"
+PAD, BOS, EOS = 0, 1, 2
+N_SPECIAL = 3
+VOCAB_SIZE = N_SPECIAL + len(VOCAB_CHARS)
+
+_CHAR_TO_ID = {c: N_SPECIAL + i for i, c in enumerate(VOCAB_CHARS)}
+_ID_TO_CHAR = {N_SPECIAL + i: c for i, c in enumerate(VOCAB_CHARS)}
+
+
+def encode(text: str) -> list[int]:
+    return [_CHAR_TO_ID[c] for c in text]
+
+
+def encode_with_bos(text: str) -> list[int]:
+    return [BOS] + encode(text)
+
+
+def decode_ids(ids) -> str:
+    return "".join(_ID_TO_CHAR.get(int(i), "") for i in ids)
+
+
+# --- config ------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    max_seq: int = 640
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def mlp_dim(self) -> int:
+        return 4 * self.d_model
+
+
+# --- parameters ---------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Initialize parameters (scaled-normal init)."""
+    rng = np.random.default_rng(seed)
+    s = 0.02
+
+    def normal(*shape):
+        return jnp.asarray(rng.normal(0.0, s, size=shape), dtype=jnp.float32)
+
+    params = {
+        "emb": normal(cfg.vocab, cfg.d_model),
+        "pos": normal(cfg.max_seq, cfg.d_model),
+        "head": normal(cfg.d_model, cfg.vocab),
+        "ln_f.g": jnp.ones(cfg.d_model, jnp.float32),
+        "ln_f.b": jnp.zeros(cfg.d_model, jnp.float32),
+        "blocks": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["blocks"].append(
+            {
+                "ln1.g": jnp.ones(cfg.d_model, jnp.float32),
+                "ln1.b": jnp.zeros(cfg.d_model, jnp.float32),
+                "wq": normal(cfg.d_model, cfg.d_model),
+                "wk": normal(cfg.d_model, cfg.d_model),
+                "wv": normal(cfg.d_model, cfg.d_model),
+                "wo": normal(cfg.d_model, cfg.d_model),
+                "ln2.g": jnp.ones(cfg.d_model, jnp.float32),
+                "ln2.b": jnp.zeros(cfg.d_model, jnp.float32),
+                "w1": normal(cfg.d_model, cfg.mlp_dim),
+                "b1": jnp.zeros(cfg.mlp_dim, jnp.float32),
+                "w2": normal(cfg.mlp_dim, cfg.d_model),
+                "b2": jnp.zeros(cfg.d_model, jnp.float32),
+            }
+        )
+    return params
+
+
+# --- forward -------------------------------------------------------------------
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, blk, h, mask):
+    """Dense causal multi-head attention. h: [B, T, d]; mask: [T, T] bool."""
+    b, t, d = h.shape
+    nh, dh = cfg.n_heads, cfg.head_dim
+    q = (h @ blk["wq"]).reshape(b, t, nh, dh)
+    k = (h @ blk["wk"]).reshape(b, t, nh, dh)
+    v = (h @ blk["wv"]).reshape(b, t, nh, dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, t, d)
+    return ctx @ blk["wo"], k.reshape(b, t, d), v.reshape(b, t, d)
+
+
+def forward(params, cfg: ModelConfig, tokens):
+    """Full forward: tokens [B, T] int32 -> logits [B, T, vocab]."""
+    b, t = tokens.shape
+    x = params["emb"][tokens] + params["pos"][:t][None, :, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for blk in params["blocks"]:
+        h = _layernorm(x, blk["ln1.g"], blk["ln1.b"])
+        attn, _, _ = _attention(cfg, blk, h, mask)
+        x = x + attn
+        h = _layernorm(x, blk["ln2.g"], blk["ln2.b"])
+        x = x + jax.nn.gelu(h @ blk["w1"] + blk["b1"], approximate=True) @ blk["w2"] + blk["b2"]
+    x = _layernorm(x, params["ln_f.g"], params["ln_f.b"])
+    return x @ params["head"]
+
+
+def prefill_graph(params, cfg: ModelConfig, tokens):
+    """AOT prefill: tokens [1, T] -> (last_logits [vocab], K [L,T,d], V [L,T,d]).
+
+    Mirrors the rust engine's prefill: exact dense attention, K/V exported
+    for the cache.
+    """
+    b, t = tokens.shape
+    assert b == 1
+    x = params["emb"][tokens] + params["pos"][:t][None, :, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    ks, vs = [], []
+    for blk in params["blocks"]:
+        h = _layernorm(x, blk["ln1.g"], blk["ln1.b"])
+        attn, k, v = _attention(cfg, blk, h, mask)
+        ks.append(k[0])
+        vs.append(v[0])
+        x = x + attn
+        h = _layernorm(x, blk["ln2.g"], blk["ln2.b"])
+        x = x + jax.nn.gelu(h @ blk["w1"] + blk["b1"], approximate=True) @ blk["w2"] + blk["b2"]
+    x = _layernorm(x, params["ln_f.g"], params["ln_f.b"])
+    logits = (x @ params["head"])[0, -1]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_graph(params, cfg: ModelConfig, token, pos, k_cache, v_cache, cur_len):
+    """AOT decode step with a dense KV cache of bucket size N.
+
+    token: int32 scalar; pos: int32 scalar; k_cache/v_cache: [L, N, d]
+    (rows >= cur_len are garbage and masked); cur_len: int32 scalar =
+    tokens already cached (the new token attends to cur_len + 1 rows).
+
+    Returns (logits [vocab], new_k [L, d], new_v [L, d]). The caller writes
+    new_k/new_v into row cur_len of its cache.
+    """
+    d, nh, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    n = k_cache.shape[1]
+    x = params["emb"][token] + params["pos"][pos]
+    new_ks, new_vs = [], []
+    for li, blk in enumerate(params["blocks"]):
+        h = _layernorm(x, blk["ln1.g"], blk["ln1.b"])
+        q = h @ blk["wq"]
+        k_new = h @ blk["wk"]
+        v_new = h @ blk["wv"]
+        new_ks.append(k_new)
+        new_vs.append(v_new)
+        # Attend over cached rows + the new token's row.
+        k_all = jax.lax.dynamic_update_slice(k_cache[li], k_new[None, :], (cur_len, 0))
+        v_all = jax.lax.dynamic_update_slice(v_cache[li], v_new[None, :], (cur_len, 0))
+        kh = k_all.reshape(n, nh, dh)
+        vh = v_all.reshape(n, nh, dh)
+        qh = q.reshape(nh, dh)
+        scores = jnp.einsum("hd,nhd->hn", qh, kh) / jnp.sqrt(jnp.float32(dh))
+        valid = (jnp.arange(n) <= cur_len)[None, :]
+        scores = jnp.where(valid, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("hn,nhd->hd", probs, vh).reshape(d)
+        x = x + ctx @ blk["wo"]
+        h = _layernorm(x, blk["ln2.g"], blk["ln2.b"])
+        x = x + jax.nn.gelu(h @ blk["w1"] + blk["b1"], approximate=True) @ blk["w2"] + blk["b2"]
+    x = _layernorm(x, params["ln_f.g"], params["ln_f.b"])
+    return x @ params["head"], jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+# --- checkpoint I/O (GSRV format, see rust/src/model/weights.rs) ---------------
+
+MAGIC = b"GSRV"
+VERSION = 1
+
+
+def flatten_params(params, cfg: ModelConfig) -> list[tuple[str, np.ndarray]]:
+    out = [
+        ("emb", params["emb"]),
+        ("pos", params["pos"]),
+        ("head", params["head"]),
+        ("n_heads", np.array([cfg.n_heads], np.float32)),
+        ("ln_f.g", params["ln_f.g"]),
+        ("ln_f.b", params["ln_f.b"]),
+    ]
+    for i, blk in enumerate(params["blocks"]):
+        for name in [
+            "ln1.g", "ln1.b", "ln2.g", "ln2.b", "b1", "b2",
+        ]:
+            out.append((f"blocks.{i}.{'mlp.' if name in ('b1', 'b2') else ''}{name}", blk[name]))
+        for name in ["wq", "wk", "wv", "wo"]:
+            out.append((f"blocks.{i}.attn.{name}", blk[name]))
+        out.append((f"blocks.{i}.mlp.w1", blk["w1"]))
+        out.append((f"blocks.{i}.mlp.w2", blk["w2"]))
+    return [(n, np.asarray(t, np.float32)) for n, t in out]
+
+
+def save_checkpoint(path: str, params, cfg: ModelConfig) -> None:
+    tensors = flatten_params(params, cfg)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors:
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def load_checkpoint(path: str) -> tuple[dict, ModelConfig]:
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == MAGIC, "bad magic"
+    version, count = struct.unpack_from("<II", data, 4)
+    assert version == VERSION
+    off = 12
+    tensors = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + nlen].decode()
+        off += nlen
+        (ndim,) = struct.unpack_from("<I", data, off)
+        off += 4
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, "<f4", count=n, offset=off).reshape(dims)
+        off += 4 * n
+        tensors[name] = jnp.asarray(arr)
+
+    vocab, d_model = tensors["emb"].shape
+    max_seq = tensors["pos"].shape[0]
+    n_heads = int(tensors["n_heads"][0])
+    n_layers = 0
+    while f"blocks.{n_layers}.attn.wq" in tensors:
+        n_layers += 1
+    cfg = ModelConfig(vocab, d_model, n_layers, n_heads, max_seq)
+    params = {
+        "emb": tensors["emb"],
+        "pos": tensors["pos"],
+        "head": tensors["head"],
+        "ln_f.g": tensors["ln_f.g"],
+        "ln_f.b": tensors["ln_f.b"],
+        "blocks": [],
+    }
+    for i in range(n_layers):
+        params["blocks"].append(
+            {
+                "ln1.g": tensors[f"blocks.{i}.ln1.g"],
+                "ln1.b": tensors[f"blocks.{i}.ln1.b"],
+                "wq": tensors[f"blocks.{i}.attn.wq"],
+                "wk": tensors[f"blocks.{i}.attn.wk"],
+                "wv": tensors[f"blocks.{i}.attn.wv"],
+                "wo": tensors[f"blocks.{i}.attn.wo"],
+                "ln2.g": tensors[f"blocks.{i}.ln2.g"],
+                "ln2.b": tensors[f"blocks.{i}.ln2.b"],
+                "w1": tensors[f"blocks.{i}.mlp.w1"],
+                "b1": tensors[f"blocks.{i}.mlp.b1"],
+                "w2": tensors[f"blocks.{i}.mlp.w2"],
+                "b2": tensors[f"blocks.{i}.mlp.b2"],
+            }
+        )
+    return params, cfg

@@ -1,0 +1,85 @@
+"""Synthetic task generators — Python mirror of rust/src/workload/tasks.rs.
+
+Formats must stay byte-identical between the two implementations (the Rust
+side evaluates what this side trains). Distributions match; exact instances
+need not (different PRNGs).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+VARS = "abcdefghijklmnopqrstuvwxyz"
+
+
+def gen_program(rng: np.random.Generator, steps: int):
+    """Returns (program_text, cot_text, answer_char)."""
+    steps = max(2, min(24, steps))
+    names = list(VARS)
+    rng.shuffle(names)
+    names = names[:steps]
+    values: list[int] = []
+    text, cot = [], []
+    for i, name in enumerate(names):
+        if i < 2:
+            v = int(rng.integers(10))
+            values.append(v)
+            text.append(f"{name}={v};")
+        else:
+            a = int(rng.integers(i))
+            b = int(rng.integers(i))
+            if b == a:
+                b = (b + 1) % i
+            op = rng.choice(["+", "-", "*"])
+            if op == "+":
+                v = (values[a] + values[b]) % 10
+            elif op == "-":
+                v = (10 + values[a] - values[b]) % 10
+            else:
+                v = (values[a] * values[b]) % 10
+            values.append(v)
+            text.append(f"{name}={names[a]}{op}{names[b]};")
+        cot.append(f"{name}={values[i]};")
+    answer = str(values[-1])
+    text.append(f"{names[-1]}?")
+    cot.append(f">{answer}")
+    return "".join(text), "".join(cot), answer
+
+
+def chain_arith_instance(rng: np.random.Generator, steps: int, shots: int):
+    """Returns (prompt, completion, answer)."""
+    prompt = []
+    for _ in range(shots):
+        t, c, _ = gen_program(rng, steps)
+        prompt.append(t + "\n" + c + "\n")
+    t, c, ans = gen_program(rng, steps)
+    prompt.append(t + "\n")
+    return "".join(prompt), c + "\n", ans
+
+
+def kv_recall_instance(rng: np.random.Generator, pairs: int):
+    pairs = max(2, min(200, pairs))
+    keys, vals, used = [], [], set()
+    while len(keys) < pairs:
+        k = f"{VARS[int(rng.integers(26))]}{int(rng.integers(10))}"
+        if k not in used:
+            used.add(k)
+            keys.append(k)
+            vals.append(int(rng.integers(10)))
+    prompt = "".join(f"{k}={v};" for k, v in zip(keys, vals))
+    qi = int(rng.integers(pairs))
+    prompt += f"{keys[qi]}?\n"
+    ans = str(vals[qi])
+    return prompt, f">{ans}\n", ans
+
+
+def training_example(rng: np.random.Generator):
+    """Sample one (prompt, completion) pair from the training mixture."""
+    if rng.random() < 0.55:
+        steps = int(rng.integers(3, 7))
+        shots = int(rng.integers(0, 3))
+        p, c, _ = chain_arith_instance(rng, steps, shots)
+    else:
+        pairs = int(rng.integers(4, 24))
+        p, c, _ = kv_recall_instance(rng, pairs)
+    return p, c

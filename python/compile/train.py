@@ -1,0 +1,165 @@
+"""Build-time trainer: fits the tiny-GPT on the synthetic task mixture and
+writes ``artifacts/weights.bin`` (GSRV format, loaded by the Rust engine).
+
+Runs once under ``make artifacts``; never on the request path. Training is
+plain JAX with a hand-rolled Adam (no optax in the offline environment).
+
+Env overrides: GEAR_TRAIN_STEPS, GEAR_TRAIN_BATCH, GEAR_TRAIN_SEED.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tasks
+from .model import (
+    BOS,
+    EOS,
+    PAD,
+    ModelConfig,
+    encode,
+    forward,
+    init_params,
+    save_checkpoint,
+)
+
+MAX_LEN = 384
+
+
+def make_batch(rng: np.random.Generator, batch: int):
+    """Pack (prompt, completion) pairs into padded id/weight arrays.
+
+    Loss weights: 0.2 on prompt tokens (language modeling signal), 1.0 on
+    completion tokens + EOS, 0 on padding.
+    """
+    toks = np.full((batch, MAX_LEN), PAD, np.int32)
+    wts = np.zeros((batch, MAX_LEN), np.float32)
+    for i in range(batch):
+        while True:
+            p, c = tasks.training_example(rng)
+            ids = [BOS] + encode(p) + encode(c) + [EOS]
+            if len(ids) <= MAX_LEN:
+                break
+        n = len(ids)
+        plen = 1 + len(encode(p))
+        toks[i, :n] = ids
+        wts[i, 1:plen] = 0.05         # light LM signal on (mostly random) prompts
+        wts[i, plen:n] = 1.0          # predict completion + EOS
+    return jnp.asarray(toks), jnp.asarray(wts)
+
+
+def loss_fn(params, cfg, toks, wts):
+    logits = forward(params, cfg, toks[:, :-1])
+    targets = toks[:, 1:]
+    w = wts[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.98, eps=1e-9):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(out_path: str, steps: int, batch: int, seed: int, cfg: ModelConfig | None = None):
+    cfg = cfg or ModelConfig()
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, seed)
+    opt = adam_init(params)
+    base_lr = 3e-3
+    warmup = max(1, steps // 20)
+
+    @jax.jit
+    def step_fn(params, opt, toks, wts, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, toks, wts)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        toks, wts = make_batch(rng, batch)
+        frac = step / steps
+        lr = base_lr * min(step / warmup, 0.5 * (1 + np.cos(np.pi * frac)) + 0.05)
+        params, opt, loss = step_fn(params, opt, toks, wts, jnp.float32(lr))
+        if step % max(1, steps // 20) == 0 or step == 1:
+            print(
+                f"[train] step {step}/{steps} loss {float(loss):.4f} "
+                f"lr {lr:.2e} ({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+
+    acc = quick_eval(params, cfg, np.random.default_rng(seed + 1))
+    print(f"[train] greedy eval: {acc}")
+    save_checkpoint(out_path, params, cfg)
+    print(f"[train] wrote {out_path}")
+    return params, cfg, acc
+
+
+def greedy_generate(params, cfg, prompt_ids, max_new=48):
+    """Slow (re-prefill per token) greedy decoding, for eval only."""
+    ids = list(prompt_ids)
+    nl = encode("\n")[0]
+    for _ in range(max_new):
+        toks = jnp.asarray([ids], jnp.int32)
+        logits = forward(params, cfg, toks)[0, -1]
+        nxt = int(jnp.argmax(logits))
+        if nxt in (EOS, nl):
+            ids.append(nxt)
+            break
+        ids.append(nxt)
+    return ids[len(prompt_ids):]
+
+
+def quick_eval(params, cfg, rng, n=20):
+    """Answer accuracy on held-out instances of both tasks."""
+    from .model import decode_ids
+
+    results = {}
+    for name, gen in [
+        ("chain-arith", lambda: tasks.chain_arith_instance(rng, 5, 2)),
+        ("kv-recall", lambda: tasks.kv_recall_instance(rng, 16)),
+    ]:
+        correct = 0
+        for _ in range(n):
+            p, _, ans = gen()
+            out = greedy_generate(params, cfg, [BOS] + encode(p))
+            text = decode_ids(out)
+            got = text[text.rfind(">") + 1 : text.rfind(">") + 2] if ">" in text else ""
+            correct += got == ans
+        results[name] = correct / n
+    return results
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts/weights.bin"
+    steps = int(os.environ.get("GEAR_TRAIN_STEPS", "1500"))
+    batch = int(os.environ.get("GEAR_TRAIN_BATCH", "8"))
+    seed = int(os.environ.get("GEAR_TRAIN_SEED", "0"))
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    train(out, steps, batch, seed)
+
+
+if __name__ == "__main__":
+    main()

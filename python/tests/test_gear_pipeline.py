@@ -1,0 +1,56 @@
+"""GEAR pipeline behaviour in JAX: the paper's error-ordering claims must
+hold at the kernel level before anything touches the serving stack."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import gear
+from compile.kernels import ref
+
+
+def kv_like(seed, n, d, kind):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    tail = 1.0 if kind == "key" else 0.3
+    x *= np.exp(rng.normal(0, tail, size=d)).astype(np.float32)[None, :]
+    mask = rng.random(size=(n, d)) < 0.01
+    x = np.where(mask, x * 8, x)
+    return jnp.asarray(x)
+
+
+def err(x, recon):
+    return float(jnp.linalg.norm(x - recon) / jnp.linalg.norm(x))
+
+
+def test_gear_reduces_error_over_quant_only():
+    for kind in ["key", "value"]:
+        x = kv_like(0, 128, 64, kind)
+        e_q = err(x, gear.gear_compress_recon(x, kind, 2, 32, 0.0, 0))
+        e_gl = err(x, gear.gear_compress_recon(x, kind, 2, 32, 0.0, 4))
+        e_g = err(x, gear.gear_compress_recon(x, kind, 2, 32, 0.02, 4))
+        assert e_gl < e_q, f"{kind}: GEAR-L {e_gl} !< quant {e_q}"
+        assert e_g < e_q, f"{kind}: GEAR {e_g} !< quant {e_q}"
+
+
+def test_pallas_pipeline_matches_ref_pipeline():
+    x = kv_like(1, 96, 32, "key")
+    got = gear.gear_compress_recon(x, "key", 2, 32, 0.02, 4)
+    want = ref.gear_ref(x, "key", 2, 32, 0.02, 4)
+    # Same quant + outlier semantics; low-rank uses the same PRNG seed.
+    assert abs(err(x, got) - err(x, want)) < 0.02
+
+
+def test_higher_bits_lower_error():
+    x = kv_like(2, 96, 32, "value")
+    errs = [err(x, gear.gear_compress_recon(x, "value", b, 32, 0.02, 4)) for b in (2, 4, 8)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_residual_spectrum_decays():
+    # Fig 2b: quantization residual has fast-decaying spectrum.
+    x = kv_like(3, 128, 64, "key")
+    dq = ref.quant_dequant_ref(x, 2, 0, 128)
+    resid = np.asarray(x - dq)
+    sv = np.linalg.svd(resid[:, :16], compute_uv=False)
+    energy = (sv**2) / (sv**2).sum()
+    assert energy[:4].sum() > 0.25, f"top-4 energy {energy[:4].sum()}"

@@ -1,0 +1,174 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_attn, power_iter, quant, ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def randmat(seed, n, d, heavy_channels=False):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    if heavy_channels:
+        scale = np.exp(rng.normal(0, 1.0, size=d)).astype(np.float32)
+        x *= scale[None, :]
+    return jnp.asarray(x)
+
+
+# --- quant kernel ------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 90),
+    d=st.integers(1, 70),
+    bits=st.sampled_from([2, 4, 8]),
+    group=st.integers(1, 80),
+    axis=st.sampled_from([0, 1]),
+    seed=st.integers(0, 10_000),
+)
+def test_quant_pallas_matches_ref(n, d, bits, group, axis, seed):
+    x = randmat(seed, n, d)
+    got = quant.quant_dequant_pallas(x, bits, axis, group)
+    want = ref.quant_dequant_ref(x, bits, axis, group)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quant_error_bounded_by_half_step(bits):
+    x = randmat(7, 64, 32)
+    deq = quant.quant_dequant_pallas(x, bits, 1, 16)
+    # Per group of 16, error <= (max-min)/(2^b-1)/2.
+    xg = np.asarray(x).reshape(64, 2, 16)
+    step = (xg.max(-1) - xg.min(-1)) / (2**bits - 1)
+    err = np.abs(np.asarray(deq).reshape(64, 2, 16) - xg)
+    assert (err <= step[..., None] / 2 + 1e-5).all()
+
+
+def test_kcvt_key_is_per_channel():
+    # A constant column must be reproduced exactly regardless of other
+    # columns' ranges (per-channel grouping isolates it).
+    x = np.asarray(randmat(3, 40, 8)).copy()
+    x[:, 2] = 5.0
+    deq = quant.kcvt_pallas(jnp.asarray(x), 2, "key")
+    np.testing.assert_allclose(np.asarray(deq)[:, 2], 5.0, atol=1e-6)
+
+
+def test_eight_bit_nearly_lossless():
+    x = randmat(11, 128, 64, heavy_channels=True)
+    deq = quant.quant_dequant_pallas(x, 8, 0, 128)
+    rel = float(jnp.linalg.norm(x - deq) / jnp.linalg.norm(x))
+    assert rel < 0.01
+
+
+# --- outlier filter ----------------------------------------------------------
+
+
+@given(
+    n=st.integers(4, 60),
+    d=st.integers(4, 60),
+    s=st.sampled_from([0.0, 0.02, 0.1, 0.25]),
+    axis=st.sampled_from([0, 1]),
+    seed=st.integers(0, 10_000),
+)
+def test_outlier_split_is_exact(n, d, s, axis, seed):
+    x = randmat(seed, n, d)
+    sp, rem = ref.filter_outliers_ref(x, s, axis)
+    np.testing.assert_allclose(np.asarray(sp + rem), np.asarray(x), atol=1e-6)
+    vec_len = n if axis == 0 else d
+    k = int(round(vec_len * s / 2.0))
+    n_vecs = d if axis == 0 else n
+    assert int((np.asarray(sp) != 0).sum()) <= 2 * k * n_vecs
+
+
+def test_outliers_are_extremes():
+    x = np.zeros((4, 32), np.float32)
+    x += np.random.default_rng(0).normal(0, 0.1, x.shape).astype(np.float32)
+    x[:, 3] = 50.0
+    x[:, 17] = -50.0
+    sp, rem = ref.filter_outliers_ref(jnp.asarray(x), 0.0625, 1)  # k=1/side
+    assert (np.asarray(sp)[:, 3] == 50.0).all()
+    assert (np.asarray(sp)[:, 17] == -50.0).all()
+    assert np.abs(np.asarray(rem)).max() < 1.0
+
+
+# --- power iteration ---------------------------------------------------------
+
+
+@given(
+    n=st.integers(8, 48),
+    d=st.integers(8, 48),
+    r=st.integers(1, 6),
+    seed=st.integers(0, 1_000),
+)
+def test_power_iter_pallas_matches_ref(n, d, r, seed):
+    x = randmat(seed, n, d)
+    a1, b1 = power_iter.power_iter_pallas(x, r, 4, seed=0)
+    a2, b2 = ref.power_iter_ref(x, r, 4, seed=0)
+    # Factors must agree (same PRNG + same sweeps -> identical).
+    np.testing.assert_allclose(np.asarray(a1 @ b1.T), np.asarray(a2 @ b2.T), atol=1e-3)
+
+
+def test_power_iter_recovers_planted_rank():
+    rng = np.random.default_rng(5)
+    u = rng.normal(size=(64, 3)).astype(np.float32)
+    v = rng.normal(size=(3, 32)).astype(np.float32)
+    x = jnp.asarray(u @ v)
+    a, b = power_iter.power_iter_pallas(x, 3, 5)
+    resid = float(jnp.linalg.norm(x - a @ b.T) / jnp.linalg.norm(x))
+    assert resid < 1e-2
+
+
+def test_power_iter_residual_close_to_svd():
+    x = randmat(9, 40, 24, heavy_channels=True)
+    r = 4
+    a, b = power_iter.power_iter_pallas(x, r, 6)
+    resid = float(jnp.linalg.norm(x - a @ b.T))
+    sv = np.linalg.svd(np.asarray(x), compute_uv=False)
+    exact = float(np.sqrt((sv[r:] ** 2).sum()))
+    assert resid <= exact * 1.2 + 1e-6
+
+
+# --- fused attention ---------------------------------------------------------
+
+
+@given(
+    n=st.integers(2, 40),
+    heads=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 1_000),
+)
+def test_gear_attn_pallas_matches_ref(n, heads, seed):
+    d, r = 32, 3
+    dh = d // heads
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 4, size=(n, d)), jnp.int32)
+    scales = jnp.asarray(np.abs(rng.normal(size=(d,))) * 0.2 + 0.01, jnp.float32)
+    zeros = jnp.asarray(rng.normal(size=(d,)) * 0.1, jnp.float32)
+    a = jnp.asarray(rng.normal(size=(heads, n, r)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(heads, dh, r)) * 0.1, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    got = fused_attn.gear_attn_pallas(q, codes, scales, zeros, a, b, v, n, heads)
+    want = ref.gear_attn_ref(q, codes, scales, zeros, a, b, v, heads)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_gear_attn_masks_invalid_rows():
+    # Rows beyond cur_len must not affect the output.
+    d, n, heads = 16, 8, 2
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 4, size=(n, d)), jnp.int32)
+    scales = jnp.ones((d,), jnp.float32) * 0.1
+    zeros = jnp.zeros((d,), jnp.float32)
+    a = jnp.zeros((heads, n, 2), jnp.float32)
+    b = jnp.zeros((heads, d // heads, 2), jnp.float32)
+    v1 = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    v2 = v1.at[5:].set(999.0)
+    o1 = fused_attn.gear_attn_pallas(q, codes, scales, zeros, a, b, v1, 5, heads)
+    o2 = fused_attn.gear_attn_pallas(q, codes, scales, zeros, a, b, v2, 5, heads)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)

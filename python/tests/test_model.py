@@ -1,0 +1,92 @@
+"""Model graph shape/consistency tests + checkpoint round-trip."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import (
+    BOS,
+    EOS,
+    VOCAB_SIZE,
+    ModelConfig,
+    decode_graph,
+    decode_ids,
+    encode,
+    encode_with_bos,
+    forward,
+    init_params,
+    load_checkpoint,
+    prefill_graph,
+    save_checkpoint,
+)
+
+CFG = ModelConfig(vocab=VOCAB_SIZE, d_model=32, n_layers=2, n_heads=4, max_seq=64)
+
+
+def test_tokenizer_roundtrip():
+    s = "a=3;b=7;c=a+b;c?\n>0"
+    assert decode_ids(encode(s)) == s
+    assert encode("0") == [3] and encode("a") == [13] and encode("\n") == [48]
+    assert encode_with_bos("a")[0] == BOS
+
+
+def test_forward_shapes_and_finite():
+    params = init_params(CFG, 0)
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, CFG.vocab, (2, 10)), jnp.int32)
+    logits = forward(params, CFG, toks)
+    assert logits.shape == (2, 10, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_prefill_graph_matches_forward():
+    params = init_params(CFG, 0)
+    ids = jnp.asarray([[BOS] + encode("a=1;a?\n")], jnp.int32)
+    full = forward(params, CFG, ids)[0, -1]
+    last, k, v = prefill_graph(params, CFG, ids)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full), rtol=1e-5, atol=1e-5)
+    assert k.shape == (CFG.n_layers, ids.shape[1], CFG.d_model)
+    assert v.shape == k.shape
+
+
+def test_decode_graph_matches_forward():
+    """Incremental decode with the dense-cache graph == full forward."""
+    params = init_params(CFG, 0)
+    ids = [BOS] + encode("a=1;b=2;a?\n")
+    n_bucket = 32
+    _, k, v = prefill_graph(params, CFG, jnp.asarray([ids], jnp.int32))
+    kc = jnp.zeros((CFG.n_layers, n_bucket, CFG.d_model)).at[:, : len(ids)].set(k)
+    vc = jnp.zeros((CFG.n_layers, n_bucket, CFG.d_model)).at[:, : len(ids)].set(v)
+    tok = encode("0")[0]
+    logits, k_new, v_new = decode_graph(
+        params, CFG, jnp.int32(tok), jnp.int32(len(ids)), kc, vc, jnp.int32(len(ids))
+    )
+    ref = forward(params, CFG, jnp.asarray([ids + [tok]], jnp.int32))[0, -1]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref), rtol=2e-4, atol=2e-4)
+    assert k_new.shape == (CFG.n_layers, CFG.d_model)
+    assert v_new.shape == (CFG.n_layers, CFG.d_model)
+
+
+def test_checkpoint_roundtrip():
+    params = init_params(CFG, 3)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "w.bin")
+        save_checkpoint(path, params, CFG)
+        params2, cfg2 = load_checkpoint(path)
+        assert cfg2 == CFG
+        toks = jnp.asarray([[BOS, 5, 6]], jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(forward(params, CFG, toks)), np.asarray(forward(params2, cfg2, toks))
+        )
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params = init_params(CFG, 1)
+    a = jnp.asarray([[BOS, 5, 6, 7, 8]], jnp.int32)
+    b = a.at[0, 4].set(9)
+    la = forward(params, CFG, a)
+    lb = forward(params, CFG, b)
+    np.testing.assert_allclose(np.asarray(la[0, :4]), np.asarray(lb[0, :4]), atol=1e-6)

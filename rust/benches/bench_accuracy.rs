@@ -1,0 +1,228 @@
+//! Generative-accuracy experiments over the trained model:
+//! Table 1 (hard CoT tasks), Table 2 (easy tasks), Table 8 (outlier-aware),
+//! Table 10 (H₂O), Fig 4a (s/r ablation), Fig 4c (accuracy vs ratio).
+//!
+//! Requires `make artifacts` (trained checkpoint). Flags: `--table1`,
+//! `--table2`, `--table8`, `--table10`, `--fig4a`, `--fig4c`, `--quick`
+//! (fewer instances), `--n <count>`.
+
+use gear_serve::coordinator::engine::{Engine, EngineConfig};
+use gear_serve::coordinator::request::GenRequest;
+use gear_serve::gear::compose::{Backbone, Method};
+use gear_serve::gear::size::predict_cache_frac;
+use gear_serve::kvcache::CacheSpec;
+use gear_serve::model::config::Tokenizer;
+use gear_serve::model::{Model, ModelWeights};
+use gear_serve::runtime::artifacts::Artifacts;
+use gear_serve::util::table::{pct, Table};
+use gear_serve::workload::tasks::{self, Task, TaskInstance};
+
+fn load() -> Option<ModelWeights> {
+    if !Artifacts::available() {
+        eprintln!("bench_accuracy: artifacts not built (run `make artifacts`); skipping");
+        return None;
+    }
+    Some(ModelWeights::load(&Artifacts::default_dir().join("weights.bin")).unwrap())
+}
+
+fn accuracy(weights: &ModelWeights, spec: &CacheSpec, set: &[TaskInstance]) -> f64 {
+    let tok = Tokenizer::new();
+    let mut e = Engine::new(Model::new(weights.clone()), EngineConfig::new(*spec));
+    for (i, inst) in set.iter().enumerate() {
+        e.submit(
+            GenRequest::greedy(i as u64, tok.encode_with_bos(&inst.prompt), 56)
+                .with_newline_stop(),
+        );
+    }
+    let results = e.run_to_completion();
+    let correct = results
+        .iter()
+        .filter(|r| tasks::score(&r.text(), &set[r.id as usize]))
+        .count();
+    correct as f64 / set.len() as f64
+}
+
+/// KV-size % at paper scale (LLaMA-7B dims, prefill 900 + 256 generated).
+fn paper_scale_size(spec: &CacheSpec) -> f64 {
+    match spec {
+        CacheSpec::Fp16 => 1.0,
+        CacheSpec::Compressed { method, buffer, .. } => {
+            predict_cache_frac(*method, 1156, 4096, 32, 32, *buffer)
+        }
+        CacheSpec::H2o { keep, .. } => *keep,
+    }
+}
+
+fn method_rows(bits: u8) -> Vec<(String, CacheSpec)> {
+    let quant = |m: Method, b: usize| CacheSpec::quant(m, b);
+    let mut rows = vec![
+        ("FP16".to_string(), CacheSpec::Fp16),
+        (
+            format!("Per-token Q g=64 ({bits}b)"),
+            quant(Method::QuantOnly { bits, backbone: Backbone::PerTokenGroup(64) }, 64),
+        ),
+        (
+            format!("KIVI g=64 ({bits}b)"),
+            quant(Method::QuantOnly { bits, backbone: Backbone::Kivi(64) }, 64),
+        ),
+    ];
+    if bits == 4 {
+        rows.push((
+            "KCVT (4b)".to_string(),
+            quant(Method::QuantOnly { bits: 4, backbone: Backbone::Kcvt }, 20),
+        ));
+    }
+    rows.push((format!("GEAR-L ({bits}b)"), CacheSpec::gear_l(bits)));
+    rows.push((format!("GEAR ({bits}b)"), CacheSpec::gear(bits)));
+    rows
+}
+
+fn table(title: &str, weights: &ModelWeights, set: &[TaskInstance], bits_list: &[u8]) {
+    let mut t = Table::new(title).header(&["method", "bits", "KV size (7B-scale)", "accuracy"]);
+    for &bits in bits_list {
+        for (name, spec) in method_rows(bits) {
+            if bits != bits_list[0] && name == "FP16" {
+                continue;
+            }
+            let acc = accuracy(weights, &spec, set);
+            let b = if name == "FP16" { 16 } else { bits };
+            t.row(vec![name, b.to_string(), pct(paper_scale_size(&spec)), pct(acc)]);
+        }
+    }
+    t.print();
+    println!();
+}
+
+fn table1(weights: &ModelWeights, n: usize) {
+    let set = tasks::generate_set(Task::ChainArith { steps: 4, shots: 2 }, n, 42);
+    table("Table 1 — hard CoT task (chain-arith), 4-bit and 2-bit", weights, &set, &[4, 2]);
+    println!("expected shape (paper): at 2-bit, quant-only collapses; GEAR(-L) near FP16\n");
+}
+
+fn table2(weights: &ModelWeights, n: usize) {
+    let set = tasks::generate_set(Task::KvRecall { pairs: 20 }, n, 43);
+    table("Table 2 — easy task (kv-recall): compression-insensitive", weights, &set, &[4, 2]);
+}
+
+fn table8(weights: &ModelWeights, n: usize) {
+    let set = tasks::generate_set(Task::ChainArith { steps: 4, shots: 2 }, n, 44);
+    let bb = Backbone::Kivi(64);
+    let mut t = Table::new("Table 8 — outlier-aware quant alone is not enough (2-bit)")
+        .header(&["method", "accuracy"]);
+    for (name, spec) in [
+        ("FP16".to_string(), CacheSpec::Fp16),
+        (
+            "KIVI 2-bit".to_string(),
+            CacheSpec::quant(Method::QuantOnly { bits: 2, backbone: bb }, 64),
+        ),
+        (
+            "Outlier-Aware (s=2%) 2-bit".to_string(),
+            CacheSpec::quant(Method::OutlierAware { bits: 2, backbone: bb, s: 0.02 }, 64),
+        ),
+        ("GEAR-L 2-bit".to_string(), CacheSpec::gear_l(2)),
+        ("GEAR 2-bit".to_string(), CacheSpec::gear(2)),
+    ] {
+        t.row(vec![name, pct(accuracy(weights, &spec, &set))]);
+    }
+    t.print();
+    println!();
+}
+
+fn table10(weights: &ModelWeights, n: usize) {
+    let set = tasks::generate_set(Task::ChainArith { steps: 4, shots: 2 }, n, 45);
+    let mut t = Table::new("Table 10 — token dropping (H2O) fails on reasoning tasks")
+        .header(&["method", "KV size", "accuracy"]);
+    for (name, spec, size) in [
+        ("FP16", CacheSpec::Fp16, 1.0),
+        ("H2O keep=50%", CacheSpec::H2o { keep: 0.5, recent: 16 }, 0.5),
+        ("GEAR 4-bit", CacheSpec::gear(4), paper_scale_size(&CacheSpec::gear(4))),
+    ] {
+        t.row(vec![name.to_string(), pct(size), pct(accuracy(weights, &spec, &set))]);
+    }
+    t.print();
+    println!();
+}
+
+fn fig4a(weights: &ModelWeights, n: usize) {
+    let set = tasks::generate_set(Task::ChainArith { steps: 4, shots: 2 }, n, 46);
+    let bb = Backbone::Kivi(64);
+    let mut t = Table::new("Fig 4a — ablation on sparsity s and rank r (2-bit)")
+        .header(&["s", "r", "accuracy"]);
+    for (s, r) in [(0.0, 0), (0.02, 0), (0.0, 4), (0.02, 2), (0.02, 4), (0.04, 4), (0.02, 8)] {
+        let method = match (s > 0.0, r > 0) {
+            (false, false) => Method::QuantOnly { bits: 2, backbone: bb },
+            (true, false) => Method::OutlierAware { bits: 2, backbone: bb, s },
+            (false, true) => Method::GearL { bits: 2, backbone: bb, r },
+            (true, true) => Method::Gear { bits: 2, backbone: bb, s, r },
+        };
+        let spec = CacheSpec::Compressed { method, buffer: 20, prefill_rank: r, decode_rank: r.min(2) };
+        t.row(vec![
+            format!("{:.0}%", s * 100.0),
+            r.to_string(),
+            pct(accuracy(weights, &spec, &set)),
+        ]);
+    }
+    t.print();
+    println!("expected shape (paper): r=0 rows collapse; small s,r already near-lossless\n");
+}
+
+fn fig4c(weights: &ModelWeights, n: usize) {
+    let set = tasks::generate_set(Task::ChainArith { steps: 4, shots: 2 }, n, 47);
+    let mut t = Table::new("Fig 4c — accuracy vs compression ratio")
+        .header(&["method", "bits", "KV size (7B-scale)", "accuracy"]);
+    for bits in [8u8, 4, 2] {
+        for (name, spec) in [
+            (
+                format!("KIVI {bits}b"),
+                CacheSpec::quant(
+                    Method::QuantOnly { bits, backbone: Backbone::Kivi(64) },
+                    64,
+                ),
+            ),
+            (format!("GEAR-L {bits}b"), CacheSpec::gear_l(bits)),
+            (format!("GEAR {bits}b"), CacheSpec::gear(bits)),
+        ] {
+            t.row(vec![
+                name,
+                bits.to_string(),
+                pct(paper_scale_size(&spec)),
+                pct(accuracy(weights, &spec, &set)),
+            ]);
+        }
+    }
+    t.print();
+    println!();
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let Some(weights) = load() else { return };
+    let quick = args.iter().any(|a| a == "--quick");
+    let n = args
+        .iter()
+        .position(|a| a == "--n")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 8 } else { 14 });
+    let all = !args.iter().any(|a| a.starts_with("--table") || a.starts_with("--fig"));
+    let want = |f: &str| all || args.iter().any(|a| a == f);
+
+    if want("--table1") {
+        table1(&weights, n);
+    }
+    if want("--table2") {
+        table2(&weights, n);
+    }
+    if want("--table8") {
+        table8(&weights, n);
+    }
+    if want("--table10") {
+        table10(&weights, n);
+    }
+    if want("--fig4a") {
+        fig4a(&weights, n);
+    }
+    if want("--fig4c") {
+        fig4c(&weights, n);
+    }
+}

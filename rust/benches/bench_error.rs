@@ -1,0 +1,171 @@
+//! Approximation-error experiments: Fig 1a, Fig 2a, Fig 2b, Fig 2c.
+//!
+//! Run all: `cargo bench --bench bench_error`
+//! One figure: `cargo bench --bench bench_error -- --fig1a`
+
+use gear_serve::gear::compose::{compress, Backbone, GearConfig, Method};
+use gear_serve::gear::error::{energy_captured, rel_error, singular_values};
+use gear_serve::gear::KvKind;
+use gear_serve::tensor::Tensor;
+use gear_serve::util::rng::Rng;
+use gear_serve::util::table::{pct, sig, Table};
+use gear_serve::workload::synth_kv::{generate, SynthKvParams};
+
+const N: usize = 512;
+const D: usize = 128;
+const HEADS: usize = 4;
+
+fn kv(seed: u64, kind: KvKind) -> Tensor {
+    let p = match kind {
+        KvKind::Key => SynthKvParams::key(),
+        KvKind::Value => SynthKvParams::value(),
+    };
+    generate(&mut Rng::new(seed), N, D, &p)
+}
+
+fn err_and_size(x: &Tensor, kind: KvKind, m: Method) -> (f64, f64) {
+    let c = compress(x, kind, &GearConfig::new(m, HEADS));
+    (rel_error(x.data(), c.reconstruct().data()), c.kv_size_frac())
+}
+
+/// Fig 1a: approximation error of methods at 2-bit compression.
+fn fig1a() {
+    let mut t = Table::new("Fig 1a — relative approximation error at 2-bit (synthetic LLaMA-like KV)")
+        .header(&["method", "Key err", "Value err", "KV size"]);
+    let (xk, xv) = (kv(1, KvKind::Key), kv(2, KvKind::Value));
+    for m in [
+        Method::QuantOnly { bits: 2, backbone: Backbone::PerTokenGroup(64) },
+        Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) },
+        Method::OutlierAware { bits: 2, backbone: Backbone::Kivi(64), s: 0.02 },
+        Method::gear_l_default(2),
+        Method::gear_default(2),
+    ] {
+        let (ek, _) = err_and_size(&xk, KvKind::Key, m);
+        let (ev, sz) = err_and_size(&xv, KvKind::Value, m);
+        t.row(vec![m.label(), sig(ek), sig(ev), pct(sz)]);
+    }
+    t.print();
+    println!("expected shape (paper): per-token > KIVI > outlier-aware > GEAR-L > GEAR\n");
+}
+
+/// Fig 2a: single-technique error vs remaining KV size.
+fn fig2a() {
+    let x = kv(3, KvKind::Value);
+    let mut t = Table::new("Fig 2a — single techniques cannot reach high compression")
+        .header(&["technique", "config", "KV size", "rel err"]);
+    for bits in [8u8, 4, 2] {
+        let m = Method::QuantOnly { bits, backbone: Backbone::Kivi(64) };
+        let (e, s) = err_and_size(&x, KvKind::Value, m);
+        t.row(vec!["quant".into(), format!("{bits}-bit"), pct(s), sig(e)]);
+    }
+    for r in [64usize, 32, 16, 8, 4] {
+        let (e, s) = err_and_size(&x, KvKind::Value, Method::LowRankOnly { r });
+        t.row(vec!["low-rank".into(), format!("r={r}"), pct(s), sig(e)]);
+    }
+    for s_frac in [0.5, 0.25, 0.1, 0.05, 0.02] {
+        let (e, s) = err_and_size(&x, KvKind::Value, Method::SparseOnly { s: s_frac });
+        t.row(vec!["sparse".into(), format!("s={:.0}%", s_frac * 100.0), pct(s), sig(e)]);
+    }
+    let (e, s) = err_and_size(&x, KvKind::Value, Method::gear_default(2));
+    t.row(vec!["GEAR (composite)".into(), "2-bit,s=2%,r=4".into(), pct(s), sig(e)]);
+    t.print();
+    println!();
+}
+
+/// Fig 2b: singular-value spectrum of the quantization residual.
+fn fig2b() {
+    let x = kv(4, KvKind::Value);
+    let q = compress(
+        &x,
+        KvKind::Value,
+        &GearConfig::new(Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) }, HEADS),
+    );
+    let recon = q.reconstruct();
+    let resid: Vec<f32> = x.data().iter().zip(recon.data()).map(|(a, b)| a - b).collect();
+    // Head 0's residual block, like the paper's per-head analysis.
+    let dh = D / HEADS;
+    let mut head0 = vec![0.0f32; N * dh];
+    for i in 0..N {
+        head0[i * dh..(i + 1) * dh].copy_from_slice(&resid[i * D..i * D + dh]);
+    }
+    let sv = singular_values(&head0, N, dh);
+    let mut t = Table::new("Fig 2b — residual spectrum decays rapidly (head 0)")
+        .header(&["k", "sigma_k / sigma_1", "energy captured by top-k"]);
+    for k in [1usize, 2, 4, 8, 16, 32] {
+        if k <= sv.len() {
+            t.row(vec![
+                k.to_string(),
+                sig(sv[k - 1] / sv[0]),
+                pct(energy_captured(&sv, k)),
+            ]);
+        }
+    }
+    t.print();
+    println!();
+}
+
+/// Fig 2c: GEAR augments any off-the-shelf quantization backbone.
+fn fig2c() {
+    let x = kv(5, KvKind::Key);
+    let mut t = Table::new("Fig 2c — GEAR improves every backbone (Key cache, 2-bit)")
+        .header(&["backbone", "alone", "+GEAR-L", "+GEAR"]);
+    for bb in [Backbone::PerTokenGroup(64), Backbone::Kcvt, Backbone::Kivi(64)] {
+        let alone = err_and_size(&x, KvKind::Key, Method::QuantOnly { bits: 2, backbone: bb }).0;
+        let gl = err_and_size(&x, KvKind::Key, Method::GearL { bits: 2, backbone: bb, r: 4 }).0;
+        let g =
+            err_and_size(&x, KvKind::Key, Method::Gear { bits: 2, backbone: bb, s: 0.02, r: 4 }).0;
+        t.row(vec![bb.label(), sig(alone), sig(gl), sig(g)]);
+    }
+    t.print();
+    println!();
+}
+
+/// Extension ablation (paper §6.1): adaptive per-head rank allocation vs
+/// uniform, at equal total budget, on the quantization residual.
+fn adaptive_ablation() {
+    use gear_serve::gear::adaptive::adaptive_decompose;
+    use gear_serve::gear::lowrank::HeadwiseLowRank;
+    let x = kv(6, KvKind::Key);
+    let q = compress(
+        &x,
+        KvKind::Key,
+        &GearConfig::new(Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) }, HEADS),
+    );
+    let recon = q.reconstruct();
+    let resid: Vec<f32> = x.data().iter().zip(recon.data()).map(|(a, b)| a - b).collect();
+    let mut t = Table::new("§6.1 extension — adaptive vs uniform rank allocation on the residual")
+        .header(&["total rank budget", "uniform err", "adaptive err"]);
+    for total in [4usize, 8, 16, 32] {
+        let uni = HeadwiseLowRank::decompose(&resid, N, D, HEADS, total / HEADS, 3, &mut Rng::new(8));
+        let ada = adaptive_decompose(&resid, N, D, HEADS, total, 3, &mut Rng::new(8));
+        let err = |hw: &HeadwiseLowRank| {
+            let mut r = vec![0.0f32; N * D];
+            hw.add_into(&mut r);
+            let left: Vec<f32> = resid.iter().zip(&r).map(|(a, b)| a - b).collect();
+            gear_serve::tensor::ops::fro_norm(&left) / gear_serve::tensor::ops::fro_norm(&resid)
+        };
+        t.row(vec![total.to_string(), sig(err(&uni)), sig(err(&ada))]);
+    }
+    t.print();
+    println!();
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let want = |f: &str| args.iter().any(|a| a == f) || !args.iter().any(|a| a.starts_with("--fig") || a.starts_with("--adaptive"));
+    if want("--fig1a") {
+        fig1a();
+    }
+    if want("--fig2a") {
+        fig2a();
+    }
+    if want("--fig2b") {
+        fig2b();
+    }
+    if want("--fig2c") {
+        fig2c();
+    }
+    if want("--adaptive") {
+        adaptive_ablation();
+    }
+}

@@ -1,0 +1,130 @@
+//! Micro-benchmarks of the Rust hot paths (the §Perf measurement tool):
+//! quantize, row dequantization, outlier filter, power iteration, fused
+//! attention vs dense attention. Prints ns/op and effective GB/s.
+
+use gear_serve::gear::compose::{compress, Backbone, GearConfig, Method};
+use gear_serve::gear::lowrank::power_iter_lowrank;
+use gear_serve::gear::outlier::filter_outliers;
+use gear_serve::gear::quant::{QuantScheme, QuantizedMatrix};
+use gear_serve::gear::{Axis, KvKind};
+use gear_serve::tensor::Tensor;
+use gear_serve::util::rng::Rng;
+use gear_serve::util::table::{sig, Table};
+use gear_serve::util::timing::bench_loop;
+use gear_serve::workload::synth_kv::{generate, SynthKvParams};
+
+const N: usize = 512;
+const D: usize = 128;
+const HEADS: usize = 4;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (warmup, iters) = if quick { (2, 10) } else { (5, 40) };
+    let mut rng = Rng::new(7);
+    let x = generate(&mut rng, N, D, &SynthKvParams::key());
+    let q: Vec<f32> = (0..D).map(|_| rng.normal_f32()).collect();
+    let bytes = (N * D * 4) as f64;
+
+    let mut t = Table::new(format!("Kernel micro-benchmarks ({N}x{D})").as_str())
+        .header(&["op", "mean us", "p95 us", "GB/s (f32 in)"]);
+    let mut row = |name: &str, mean_us: f64, p95_us: f64| {
+        let gbs = bytes / (mean_us * 1e-6) / 1e9;
+        t.row(vec![name.into(), sig(mean_us), sig(p95_us), sig(gbs)]);
+    };
+
+    // Quantization (2-bit KIVI).
+    let s = bench_loop(warmup, iters, || {
+        QuantizedMatrix::quantize(&x, 2, QuantScheme::kivi(KvKind::Key, 64))
+    });
+    row("quantize 2b kivi", s.mean_us(), s.p95_ns as f64 / 1e3);
+
+    // Full-matrix dequantization.
+    let qm = QuantizedMatrix::quantize(&x, 2, QuantScheme::kivi(KvKind::Key, 64));
+    let mut scratch = vec![0.0f32; N * D];
+    let s = bench_loop(warmup, iters, || qm.dequantize_into(&mut scratch));
+    row("dequantize 2b (full)", s.mean_us(), s.p95_ns as f64 / 1e3);
+
+    let qm4 = QuantizedMatrix::quantize(&x, 4, QuantScheme::kivi(KvKind::Key, 64));
+    let s = bench_loop(warmup, iters, || qm4.dequantize_into(&mut scratch));
+    row("dequantize 4b (full)", s.mean_us(), s.p95_ns as f64 / 1e3);
+
+    // Outlier filter.
+    let s = bench_loop(warmup, iters, || filter_outliers(&x, 0.02, Axis::Col));
+    row("outlier filter s=2%", s.mean_us(), s.p95_ns as f64 / 1e3);
+
+    // Power iteration (r=4, per-head block).
+    let dh = D / HEADS;
+    let mut head = vec![0.0f32; N * dh];
+    for i in 0..N {
+        head.copy_within(0..0, 0);
+        head[i * dh..(i + 1) * dh].copy_from_slice(&x.row(i)[..dh]);
+    }
+    let s = bench_loop(warmup, iters, || {
+        power_iter_lowrank(&head, N, dh, 4, 3, &mut Rng::new(1))
+    });
+    row("power-iter r=4 (head)", s.mean_us(), s.p95_ns as f64 / 1e3);
+
+    // Full GEAR compression.
+    let cfg = GearConfig::new(Method::gear_default(2), HEADS);
+    let s = bench_loop(warmup, iters, || compress(&x, KvKind::Key, &cfg));
+    row("GEAR compress (full)", s.mean_us(), s.p95_ns as f64 / 1e3);
+
+    // Fused attention scores: compressed vs dense baseline.
+    let cm = compress(&x, KvKind::Key, &cfg);
+    let mut scores = vec![0.0f32; N * HEADS];
+    let s = bench_loop(warmup, iters, || {
+        scores.fill(0.0);
+        cm.scores_into(&q, HEADS, 0.18, &mut scores);
+    });
+    row("fused scores (GEAR 2b)", s.mean_us(), s.p95_ns as f64 / 1e3);
+
+    let dense = Tensor::new(&[N, D], x.data().to_vec());
+    let s = bench_loop(warmup, iters, || {
+        scores.fill(0.0);
+        for tk in 0..N {
+            for h in 0..HEADS {
+                let dh = D / HEADS;
+                scores[tk * HEADS + h] = gear_serve::tensor::ops::dot(
+                    &q[h * dh..(h + 1) * dh],
+                    &dense.row(tk)[h * dh..(h + 1) * dh],
+                );
+            }
+        }
+    });
+    row("dense scores (f32)", s.mean_us(), s.p95_ns as f64 / 1e3);
+
+    // Weighted sum.
+    let probs = vec![1.0 / N as f32; N * HEADS];
+    let mut ctx = vec![0.0f32; D];
+    let s = bench_loop(warmup, iters, || {
+        ctx.fill(0.0);
+        cm.weighted_sum_into(&probs, HEADS, &mut ctx);
+    });
+    row("fused wsum (GEAR 2b)", s.mean_us(), s.p95_ns as f64 / 1e3);
+
+    t.print();
+    println!(
+        "note: backbone variants — kcvt dequant cost vs kivi shows grouping overhead; \
+         see EXPERIMENTS.md §Perf for the iteration log"
+    );
+
+    // Backbone comparison for dequant (the dominant decode cost).
+    let mut t2 = Table::new("Row-dequant cost by backbone (per 512-row sweep)")
+        .header(&["backbone", "mean us"]);
+    for (name, scheme) in [
+        ("per-token g=64", QuantScheme::per_token_group(64)),
+        ("KIVI g=64 (col)", QuantScheme::kivi(KvKind::Key, 64)),
+        ("KCVT (col full)", QuantScheme::kcvt(KvKind::Key)),
+    ] {
+        let qm = QuantizedMatrix::quantize(&x, 2, scheme);
+        let mut rowbuf = vec![0.0f32; D];
+        let mut plan = qm.row_plan();
+        let s = bench_loop(warmup, iters, || {
+            for i in 0..N {
+                qm.dequantize_row_planned(i, &mut plan, &mut rowbuf);
+            }
+        });
+        t2.row(vec![name.into(), sig(s.mean_us())]);
+    }
+    t2.print();
+}

@@ -1,0 +1,171 @@
+//! Efficiency experiments: Fig 3b (peak memory vs batch), Fig 3c
+//! (throughput vs batch), Table 6 (detail), Table 7 (max sequence length),
+//! Fig 5 (larger-memory device).
+//!
+//! Two complementary measurements (DESIGN.md §3):
+//! 1. **Real engine runs** on the tiny model: peak cache bytes are *exact*
+//!    (packed buffers), CPU wall-clock throughput is reported honestly.
+//! 2. **Device-model projection** at the paper's scale (LLaMA-7B dims on a
+//!    V100): byte counts from the analytic size model drive a calibrated
+//!    memory-bandwidth step-time model — this is what reproduces the
+//!    paper's throughput *shape* (batch scaling), which a single CPU core
+//!    cannot exhibit.
+
+use gear_serve::coordinator::device_model::DeviceModel;
+use gear_serve::coordinator::engine::{Engine, EngineConfig};
+use gear_serve::coordinator::request::GenRequest;
+use gear_serve::gear::size::predict_cache_frac;
+use gear_serve::kvcache::CacheSpec;
+use gear_serve::model::config::ModelConfig;
+use gear_serve::model::{Model, ModelWeights};
+use gear_serve::runtime::artifacts::Artifacts;
+use gear_serve::util::table::{sig, Table};
+
+/// Paper inference setting: LLaMA-7B, input 1000, generate 500, weights in
+/// 8-bit (~7 GB).
+const L7B_LAYERS: usize = 32;
+const L7B_D: usize = 4096;
+const L7B_HEADS: usize = 32;
+const SEQ: usize = 1500;
+const WEIGHT_BYTES: usize = 7 << 30;
+
+fn kv_bytes_per_req(spec: &CacheSpec) -> usize {
+    let fp16 = L7B_LAYERS * 2 * SEQ * L7B_D * 2;
+    let frac = match spec {
+        CacheSpec::Fp16 => 1.0,
+        CacheSpec::Compressed { method, buffer, .. } => {
+            predict_cache_frac(*method, SEQ, L7B_D, L7B_LAYERS, L7B_HEADS, *buffer)
+        }
+        CacheSpec::H2o { keep, .. } => *keep,
+    };
+    (fp16 as f64 * frac) as usize
+}
+
+fn specs() -> Vec<(&'static str, CacheSpec)> {
+    vec![
+        ("FP16", CacheSpec::Fp16),
+        ("KIVI-2bit", CacheSpec::parse("kivi-2").unwrap()),
+        ("GEAR-L-2bit", CacheSpec::gear_l(2)),
+        ("GEAR-2bit", CacheSpec::gear(2)),
+    ]
+}
+
+/// Fig 3b + Table 6: peak memory and projected throughput vs batch size.
+fn fig3_table6(dev: &DeviceModel, title: &str) {
+    let mut t = Table::new(title).header(&[
+        "method",
+        "batch",
+        "KV GB/req",
+        "total GB",
+        "fits?",
+        "proj tok/s",
+    ]);
+    for (name, spec) in specs() {
+        let kv = kv_bytes_per_req(&spec);
+        let max_b = dev.max_batch(WEIGHT_BYTES, kv);
+        for b in [1usize, 2, 4, 8, 12, 16, 18, 24, 32] {
+            let total = WEIGHT_BYTES + b * kv;
+            let fits = total <= dev.capacity;
+            if b > max_b && b > 1 && !fits {
+                // Show the first overflowing row, then stop this method.
+                t.row(vec![
+                    name.into(),
+                    b.to_string(),
+                    sig(kv as f64 / (1 << 30) as f64),
+                    sig(total as f64 / (1 << 30) as f64),
+                    "OOM".into(),
+                    "-".into(),
+                ]);
+                break;
+            }
+            let tput = dev.throughput(b, WEIGHT_BYTES, kv, 0);
+            t.row(vec![
+                name.into(),
+                b.to_string(),
+                sig(kv as f64 / (1 << 30) as f64),
+                sig(total as f64 / (1 << 30) as f64),
+                "yes".into(),
+                sig(tput),
+            ]);
+        }
+        t.row(vec![
+            name.into(),
+            format!("max={max_b}"),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            sig(dev.throughput(max_b.max(1), WEIGHT_BYTES, kv, 0)),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
+/// Table 7: max sequence length at batch 1 within device capacity.
+fn table7(dev: &DeviceModel) {
+    let mut t = Table::new("Table 7 — max sequence length (batch 1, V100-16GB model)")
+        .header(&["method", "bytes/token", "max length"]);
+    for (name, spec) in [("FP16", CacheSpec::Fp16), ("GEAR-2bit", CacheSpec::gear(2))] {
+        // Bytes per cached token at 7B scale.
+        let per_tok = kv_bytes_per_req(&spec) / SEQ;
+        let max_len = dev.capacity.saturating_sub(WEIGHT_BYTES) / per_tok;
+        t.row(vec![name.into(), per_tok.to_string(), max_len.to_string()]);
+    }
+    t.print();
+    println!("paper: FP16 5319 vs GEAR 7291 (theirs includes activation overheads we don't model)\n");
+}
+
+/// Real engine sweep on the tiny model: exact peak cache bytes + honest CPU
+/// wall-clock. Single-core, so tokens/s is ~flat in batch — the projection
+/// above carries the batch-scaling claim.
+fn real_engine() {
+    let weights = if Artifacts::available() {
+        ModelWeights::load(&Artifacts::default_dir().join("weights.bin")).unwrap()
+    } else {
+        eprintln!("(artifacts absent: random weights for the real-engine sweep)");
+        ModelWeights::random(ModelConfig::default(), 3)
+    };
+    let prompt: Vec<u32> = (0..100).map(|i| (i % 46) + 3).collect();
+    let mut t = Table::new("Real engine (tiny model, 1 CPU core): exact peak memory")
+        .header(&["method", "batch", "peak cache MiB", "CPU tok/s", "max conc"]);
+    for (name, spec) in specs() {
+        for batch in [1usize, 4, 8] {
+            let mut e = Engine::new(
+                Model::new(weights.clone()),
+                EngineConfig::new(spec).with_max_batch(batch),
+            );
+            for i in 0..batch {
+                e.submit(GenRequest::greedy(i as u64, prompt.clone(), 50));
+            }
+            let _ = e.run_to_completion();
+            t.row(vec![
+                name.into(),
+                batch.to_string(),
+                sig(e.metrics.peak_cache_bytes as f64 / (1 << 20) as f64),
+                sig(e.metrics.throughput()),
+                e.metrics.max_concurrency.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!();
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let all = !args.iter().any(|a| a.starts_with("--fig") || a.starts_with("--table") || a == "--real");
+    let want = |f: &str| all || args.iter().any(|a| a == f);
+    let v100 = DeviceModel::v100();
+    if want("--fig3b") || want("--fig3c") {
+        fig3_table6(&v100, "Fig 3b/3c + Table 6 — V100-16GB projection (LLaMA-7B scale)");
+    }
+    if want("--table7") {
+        table7(&v100);
+    }
+    if want("--fig5") {
+        fig3_table6(&DeviceModel::rtx_titan(), "Fig 5 — RTX-Titan-24GB projection");
+    }
+    if want("--real") {
+        real_engine();
+    }
+}

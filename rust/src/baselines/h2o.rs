@@ -1,0 +1,235 @@
+//! H₂O (Heavy-Hitter Oracle) token-dropping baseline (Zhang et al., 2023).
+//!
+//! Keeps the KV cache at `keep` fraction of the tokens seen so far: the most
+//! recent `recent` tokens are always retained (the "local" window), and the
+//! remaining slots go to *heavy hitters* — tokens with the highest
+//! accumulated attention scores. On every `attend`, per-token attention
+//! probabilities (summed over heads) are added to the running score; when
+//! the cache exceeds its budget, the lowest-scoring non-recent token is
+//! evicted. Storage is FP16-accounted dense, like the paper's H₂O setup.
+
+use crate::gear::size::SizeBreakdown;
+use crate::kvcache::dense::softmax_heads;
+use crate::kvcache::LayerKv;
+use crate::tensor::ops::dot;
+use crate::tensor::Tensor;
+use crate::util::f16::to_f16_precision;
+
+pub struct H2oLayerKv {
+    d: usize,
+    keep: f64,
+    recent: usize,
+    /// Retained rows (K and V index-aligned), in original order.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Accumulated attention mass per retained token.
+    acc: Vec<f32>,
+    /// Total tokens ever seen (drives the budget).
+    seen: usize,
+    scores: Vec<f32>,
+}
+
+impl H2oLayerKv {
+    pub fn new(d: usize, keep: f64, recent: usize) -> Self {
+        assert!((0.0..=1.0).contains(&keep));
+        H2oLayerKv {
+            d,
+            keep,
+            recent: recent.max(1),
+            k: Vec::new(),
+            v: Vec::new(),
+            acc: Vec::new(),
+            seen: 0,
+            scores: Vec::new(),
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.acc.len()
+    }
+
+    fn budget(&self) -> usize {
+        ((self.seen as f64 * self.keep).ceil() as usize).max(self.recent)
+    }
+
+    fn push(&mut self, k: &[f32], v: &[f32]) {
+        self.k.extend(k.iter().map(|&x| to_f16_precision(x)));
+        self.v.extend(v.iter().map(|&x| to_f16_precision(x)));
+        self.acc.push(0.0);
+        self.seen += 1;
+    }
+
+    fn evict_to_budget(&mut self) {
+        while self.n() > self.budget() {
+            // Lowest accumulated score among non-recent tokens.
+            let cutoff = self.n().saturating_sub(self.recent);
+            let Some((victim, _)) = self.acc[..cutoff]
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+            else {
+                break; // everything is within the recent window
+            };
+            let d = self.d;
+            self.k.drain(victim * d..(victim + 1) * d);
+            self.v.drain(victim * d..(victim + 1) * d);
+            self.acc.remove(victim);
+        }
+    }
+
+    /// Tokens dropped so far.
+    pub fn dropped(&self) -> usize {
+        self.seen - self.n()
+    }
+}
+
+impl LayerKv for H2oLayerKv {
+    fn ingest_prefill(&mut self, k: Tensor, v: Tensor, attn_mass: Option<&[f32]>) {
+        assert_eq!(k.cols(), self.d);
+        let n0 = self.n();
+        for i in 0..k.rows() {
+            self.push(k.row(i), v.row(i));
+        }
+        // Seed heavy-hitter statistics from the prefill attention mass (the
+        // accumulated attention each prompt token received), then prune the
+        // prompt to budget — H₂O's oracle over the prompt.
+        if let Some(mass) = attn_mass {
+            assert_eq!(mass.len(), k.rows());
+            for (i, &m) in mass.iter().enumerate() {
+                self.acc[n0 + i] += m;
+            }
+        }
+        self.evict_to_budget();
+    }
+
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        self.push(k, v);
+        self.evict_to_budget();
+    }
+
+    fn len(&self) -> usize {
+        self.n()
+    }
+
+    fn attend(&mut self, q: &[f32], n_heads: usize, out: &mut [f32]) {
+        let (n, d) = (self.n(), self.d);
+        debug_assert_eq!(out.len(), d);
+        let dh = d / n_heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        self.scores.clear();
+        self.scores.resize(n * n_heads, 0.0);
+        for t in 0..n {
+            let krow = &self.k[t * d..(t + 1) * d];
+            for h in 0..n_heads {
+                self.scores[t * n_heads + h] =
+                    scale * dot(&q[h * dh..(h + 1) * dh], &krow[h * dh..(h + 1) * dh]);
+            }
+        }
+        softmax_heads(&mut self.scores, n, n_heads);
+
+        out.fill(0.0);
+        for t in 0..n {
+            let vrow = &self.v[t * d..(t + 1) * d];
+            let mut mass = 0.0f32;
+            for h in 0..n_heads {
+                let p = self.scores[t * n_heads + h];
+                mass += p;
+                crate::tensor::ops::axpy(p, &vrow[h * dh..(h + 1) * dh], &mut out[h * dh..(h + 1) * dh]);
+            }
+            // Heavy-hitter statistic: accumulated attention mass.
+            self.acc[t] += mass;
+        }
+    }
+
+    fn nbytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 2 + self.acc.len() * 4
+    }
+
+    fn breakdown(&self) -> SizeBreakdown {
+        SizeBreakdown {
+            dense_bytes: (self.k.len() + self.v.len()) * 2,
+            meta_bytes: self.acc.len() * 4,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn respects_budget() {
+        let mut rng = Rng::new(100);
+        let d = 8;
+        let mut c = H2oLayerKv::new(d, 0.5, 2);
+        let row: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        for _ in 0..40 {
+            c.append(&row, &row);
+            let mut out = vec![0.0; d];
+            c.attend(&row, 2, &mut out);
+        }
+        assert_eq!(c.len(), 20); // ceil(40 * 0.5)
+        assert_eq!(c.dropped(), 20);
+    }
+
+    #[test]
+    fn keeps_heavy_hitters() {
+        let d = 4;
+        let mut c = H2oLayerKv::new(d, 0.7, 2);
+        // Token 0: key strongly aligned with future queries (heavy hitter).
+        c.append(&[10.0, 10.0, 10.0, 10.0], &[1.0; 4]);
+        let mut out = vec![0.0; d];
+        c.attend(&[5.0, 5.0, 5.0, 5.0], 1, &mut out);
+        // Fillers orthogonal to the query; attend after each so scores
+        // accumulate (as they do in real decoding).
+        for _ in 0..9 {
+            c.append(&[0.0, 0.0, 0.0, 0.0], &[0.0; 4]);
+            c.attend(&[5.0, 5.0, 5.0, 5.0], 1, &mut out);
+        }
+        // Budget = ceil(10 * 0.7) = 7: three fillers evicted, the heavy
+        // hitter (highest accumulated attention) must have survived.
+        assert_eq!(c.len(), 7);
+        assert_eq!(c.dropped(), 3);
+        let has_heavy = (0..c.len()).any(|t| c.k[t * d] > 5.0);
+        assert!(has_heavy, "heavy hitter was evicted");
+    }
+
+    #[test]
+    fn keep_one_drops_nothing() {
+        let d = 4;
+        let mut c = H2oLayerKv::new(d, 1.0, 1);
+        for _ in 0..10 {
+            c.append(&[1.0; 4], &[1.0; 4]);
+        }
+        assert_eq!(c.len(), 10);
+        assert_eq!(c.dropped(), 0);
+    }
+
+    #[test]
+    fn prefill_prunes_to_budget() {
+        let mut rng = Rng::new(101);
+        let d = 8;
+        let k = Tensor::randn(&[20, d], &mut rng, 1.0);
+        let v = Tensor::randn(&[20, d], &mut rng, 1.0);
+        let mut c = H2oLayerKv::new(d, 0.25, 2);
+        c.ingest_prefill(k, v, None);
+        assert_eq!(c.len(), 5); // ceil(20 * 0.25)
+    }
+
+    #[test]
+    fn attend_output_finite() {
+        let mut rng = Rng::new(102);
+        let d = 8;
+        let mut c = H2oLayerKv::new(d, 0.5, 2);
+        for _ in 0..12 {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            c.append(&row, &row);
+            let mut out = vec![0.0; d];
+            c.attend(&row, 2, &mut out);
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Baseline compression methods the paper compares against.
+//!
+//! Quantization baselines (per-token group-wise, KIVI, KCVT) live in
+//! [`crate::gear::quant`] since GEAR composes over them; this module holds
+//! the structurally-different baseline: H₂O token dropping.
+
+pub mod h2o;

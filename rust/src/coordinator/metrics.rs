@@ -1,0 +1,75 @@
+//! Engine metrics: throughput, latency, memory, and the GEAR component
+//! time breakdown (reproduces Fig 3a).
+
+use std::time::Duration;
+
+use crate::util::timing::PhaseTimer;
+
+/// Aggregated over an engine run.
+#[derive(Debug, Default, Clone)]
+pub struct EngineMetrics {
+    pub requests_finished: usize,
+    pub requests_preempted: usize,
+    pub requests_oom: usize,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub wall: Duration,
+    /// Peak KV-cache bytes across the run (from the budget tracker).
+    pub peak_cache_bytes: usize,
+    /// Wall time attributed to GEAR components (quant/sparse/lowrank) vs
+    /// everything else ("other" = model forward + scheduling).
+    pub phases: PhaseTimer,
+    /// Largest number of simultaneously-active requests observed.
+    pub max_concurrency: usize,
+}
+
+impl EngineMetrics {
+    /// Generated tokens per second of wall time.
+    pub fn throughput(&self) -> f64 {
+        self.generated_tokens as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Fig 3a rows: (component, seconds, fraction of total wall).
+    pub fn time_breakdown(&self) -> Vec<(String, f64, f64)> {
+        let total = self.wall.as_secs_f64().max(1e-12);
+        let mut rows = Vec::new();
+        let mut accounted = 0.0;
+        for name in ["quant", "lowrank", "sparse"] {
+            let secs = self.phases.get(name).as_secs_f64();
+            accounted += secs;
+            rows.push((name.to_string(), secs, secs / total));
+        }
+        rows.push(("other (fwd)".to_string(), total - accounted, (total - accounted) / total));
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let m = EngineMetrics {
+            generated_tokens: 100,
+            wall: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert!((m.throughput() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_sums_to_one() {
+        let mut m = EngineMetrics {
+            wall: Duration::from_millis(100),
+            ..Default::default()
+        };
+        m.phases.add("quant", Duration::from_millis(20));
+        m.phases.add("lowrank", Duration::from_millis(10));
+        let rows = m.time_breakdown();
+        assert_eq!(rows.len(), 4);
+        let total: f64 = rows.iter().map(|r| r.2).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!((rows[3].2 - 0.7).abs() < 1e-9, "other = {}", rows[3].2);
+    }
+}

@@ -1,0 +1,22 @@
+//! The serving coordinator (layer 3).
+//!
+//! A vLLM-style engine specialized for GEAR-compressed KV caches:
+//!
+//! * [`request`] — generation requests, results, lifecycle states.
+//! * [`engine`] — continuous-batching prefill/decode loop over a byte-
+//!   budgeted cache pool, with preemption when memory runs out.
+//! * [`metrics`] — latency/throughput counters + the GEAR component time
+//!   breakdown (Fig 3a).
+//! * [`device_model`] — analytic V100-class step-time model used by the
+//!   throughput benches (this testbed is a single CPU core; see DESIGN.md
+//!   §3 on why byte accounting + a bandwidth model reproduces Fig 3b/3c).
+//! * [`server`] — a minimal TCP line-protocol front-end.
+
+pub mod device_model;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{GenRequest, GenResult, RequestId};

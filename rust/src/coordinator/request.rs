@@ -1,0 +1,82 @@
+//! Generation request/response types.
+
+use crate::model::sampler::Sampler;
+
+pub type RequestId = u64;
+
+/// A generation request submitted to the engine.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: RequestId,
+    /// Prompt token ids (tokenized by the caller; BOS already applied).
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampler: Sampler,
+    /// Stop generation at any of these token ids (EOS, '\n', …).
+    pub stop_tokens: Vec<u32>,
+}
+
+impl GenRequest {
+    pub fn greedy(id: RequestId, prompt: Vec<u32>, max_new_tokens: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            sampler: Sampler::Greedy,
+            stop_tokens: vec![crate::model::config::EOS],
+        }
+    }
+
+    /// Also stop on newline (the task formats end answers with '\n').
+    pub fn with_newline_stop(mut self) -> GenRequest {
+        let t = crate::model::config::Tokenizer::new();
+        self.stop_tokens.push(t.encode("\n")[0]);
+        self
+    }
+}
+
+/// Why a request finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Stop,
+    Length,
+    /// Rejected: can never fit in the memory budget even alone.
+    OutOfMemory,
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: RequestId,
+    /// Generated token ids (stop token excluded).
+    pub output: Vec<u32>,
+    pub finish: FinishReason,
+    /// Tokens in the prompt.
+    pub prompt_len: usize,
+    /// Times the request was preempted and re-prefilled.
+    pub preemptions: usize,
+    /// Wall-clock seconds spent queued before first prefill.
+    pub queue_secs: f64,
+    /// Wall-clock seconds from first prefill to finish.
+    pub run_secs: f64,
+}
+
+impl GenResult {
+    pub fn text(&self) -> String {
+        crate::model::config::Tokenizer::new().decode(&self.output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_request_defaults() {
+        let r = GenRequest::greedy(1, vec![1, 2, 3], 16);
+        assert_eq!(r.sampler, Sampler::Greedy);
+        assert_eq!(r.stop_tokens, vec![crate::model::config::EOS]);
+        let r = r.with_newline_stop();
+        assert_eq!(r.stop_tokens.len(), 2);
+    }
+}

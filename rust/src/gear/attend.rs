@@ -1,0 +1,300 @@
+//! Fused attention against a compressed KV matrix — the decode hot path.
+//!
+//! This is the Rust analogue of the paper's fused dequantization-matmul CUDA
+//! kernel plus its factored low-rank forward: the low-rank component is
+//! never materialized. For scores, `qᵀ(A Bᵀ)ᵀ` is computed as
+//! `(Bᵀ q) · A[t]` (down-projection first — §4 "Implementation
+//! optimization"); for the value side, `pᵀ(A Bᵀ)` is `(pᵀ A) Bᵀ`. Both cost
+//! O((n + d_H)·r) per head instead of O(n·d_H·r).
+//!
+//! Layout convention: multi-head scores/probabilities are stored row-major
+//! per token: `s[t * n_heads + h]`.
+
+use super::compose::CompressedMatrix;
+use super::quant::Axis;
+use crate::tensor::ops::dot;
+
+impl CompressedMatrix {
+    /// Accumulate attention scores of query `q` (d-dim, heads concatenated)
+    /// against every stored token: `out[t*H + h] += scale · q_h · K[t]_h`.
+    ///
+    /// `out` must hold `rows * n_heads` values (pre-zeroed by the caller).
+    pub fn scores_into(&self, q: &[f32], n_heads: usize, scale: f32, out: &mut [f32]) {
+        let (n, d) = (self.rows, self.cols);
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(out.len(), n * n_heads);
+        debug_assert_eq!(d % n_heads, 0);
+        let dh = d / n_heads;
+
+        if let Some(dense) = &self.dense {
+            for t in 0..n {
+                let row = &dense[t * d..(t + 1) * d];
+                for h in 0..n_heads {
+                    out[t * n_heads + h] +=
+                        scale * dot(&q[h * dh..(h + 1) * dh], &row[h * dh..(h + 1) * dh]);
+                }
+            }
+            return;
+        }
+
+        // Quantized backbone: dequantize a row at a time into scratch.
+        if let Some(qm) = &self.quant {
+            let t0 = std::time::Instant::now();
+            let mut row = vec![0.0f32; d];
+            let mut plan = qm.row_plan();
+            for t in 0..n {
+                qm.dequantize_row_planned(t, &mut plan, &mut row);
+                for h in 0..n_heads {
+                    out[t * n_heads + h] +=
+                        scale * dot(&q[h * dh..(h + 1) * dh], &row[h * dh..(h + 1) * dh]);
+                }
+            }
+            super::record_phase("quant", t0.elapsed());
+        }
+
+        // Sparse outliers: only touched coordinates contribute.
+        if let Some(sp) = &self.sparse {
+            let t0 = std::time::Instant::now();
+            for (k, &(i, j)) in sp.idx.iter().enumerate() {
+                let (t, c) = (i as usize, j as usize);
+                let h = c / dh;
+                out[t * n_heads + h] += scale * q[c] * sp.val[k];
+            }
+            super::record_phase("sparse", t0.elapsed());
+        }
+
+        // Low-rank, factored: per head w = B_hᵀ q_h (r), then out += w·A_h[t].
+        if let Some(lrh) = &self.lowrank {
+            let t0 = std::time::Instant::now();
+            for (h, lr) in lrh.heads.iter().enumerate() {
+                let qh = &q[h * dh..(h + 1) * dh];
+                let r = lr.r;
+                let mut w = vec![0.0f32; r];
+                for j in 0..dh {
+                    let brow = &lr.b[j * r..(j + 1) * r];
+                    let qj = qh[j];
+                    if qj == 0.0 {
+                        continue;
+                    }
+                    for k in 0..r {
+                        w[k] += qj * brow[k];
+                    }
+                }
+                for t in 0..n {
+                    out[t * n_heads + h] += scale * dot(&w, &lr.a[t * r..(t + 1) * r]);
+                }
+            }
+            super::record_phase("lowrank", t0.elapsed());
+        }
+    }
+
+    /// Accumulate the attention-weighted value sum:
+    /// `out[h*dh + c] += Σ_t p[t*H + h] · V[t]_{h,c}`.
+    pub fn weighted_sum_into(&self, probs: &[f32], n_heads: usize, out: &mut [f32]) {
+        let (n, d) = (self.rows, self.cols);
+        debug_assert_eq!(probs.len(), n * n_heads);
+        debug_assert_eq!(out.len(), d);
+        let dh = d / n_heads;
+
+        if let Some(dense) = &self.dense {
+            for t in 0..n {
+                let row = &dense[t * d..(t + 1) * d];
+                for h in 0..n_heads {
+                    let p = probs[t * n_heads + h];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    crate::tensor::ops::axpy(
+                        p,
+                        &row[h * dh..(h + 1) * dh],
+                        &mut out[h * dh..(h + 1) * dh],
+                    );
+                }
+            }
+            return;
+        }
+
+        if let Some(qm) = &self.quant {
+            let t0 = std::time::Instant::now();
+            let mut row = vec![0.0f32; d];
+            let mut plan = qm.row_plan();
+            for t in 0..n {
+                qm.dequantize_row_planned(t, &mut plan, &mut row);
+                for h in 0..n_heads {
+                    let p = probs[t * n_heads + h];
+                    crate::tensor::ops::axpy(
+                        p,
+                        &row[h * dh..(h + 1) * dh],
+                        &mut out[h * dh..(h + 1) * dh],
+                    );
+                }
+            }
+            super::record_phase("quant", t0.elapsed());
+        }
+
+        if let Some(sp) = &self.sparse {
+            let t0 = std::time::Instant::now();
+            for (k, &(i, j)) in sp.idx.iter().enumerate() {
+                let (t, c) = (i as usize, j as usize);
+                let h = c / dh;
+                out[c] += probs[t * n_heads + h] * sp.val[k];
+            }
+            super::record_phase("sparse", t0.elapsed());
+        }
+
+        // Low-rank, factored: per head w = Σ_t p[t,h] A_h[t] (r), out_h += B_h w.
+        if let Some(lrh) = &self.lowrank {
+            let t0 = std::time::Instant::now();
+            for (h, lr) in lrh.heads.iter().enumerate() {
+                let r = lr.r;
+                let mut w = vec![0.0f32; r];
+                for t in 0..n {
+                    let p = probs[t * n_heads + h];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    crate::tensor::ops::axpy(p, &lr.a[t * r..(t + 1) * r], &mut w);
+                }
+                let oh = &mut out[h * dh..(h + 1) * dh];
+                for j in 0..dh {
+                    oh[j] += dot(&w, &lr.b[j * r..(j + 1) * r]);
+                }
+            }
+            super::record_phase("lowrank", t0.elapsed());
+        }
+    }
+}
+
+/// Reference (unfused) score computation used by tests: reconstruct the full
+/// matrix, then do dense per-head dots.
+pub fn scores_reference(
+    cm: &CompressedMatrix,
+    q: &[f32],
+    n_heads: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let full = cm.reconstruct();
+    let (n, d) = (cm.rows, cm.cols);
+    let dh = d / n_heads;
+    let mut out = vec![0.0f32; n * n_heads];
+    for t in 0..n {
+        for h in 0..n_heads {
+            out[t * n_heads + h] =
+                scale * dot(&q[h * dh..(h + 1) * dh], &full.row(t)[h * dh..(h + 1) * dh]);
+        }
+    }
+    out
+}
+
+/// Reference weighted sum used by tests.
+pub fn weighted_sum_reference(cm: &CompressedMatrix, probs: &[f32], n_heads: usize) -> Vec<f32> {
+    let full = cm.reconstruct();
+    let (n, d) = (cm.rows, cm.cols);
+    let dh = d / n_heads;
+    let mut out = vec![0.0f32; d];
+    for t in 0..n {
+        for h in 0..n_heads {
+            let p = probs[t * n_heads + h];
+            for c in 0..dh {
+                out[h * dh + c] += p * full.row(t)[h * dh + c];
+            }
+        }
+    }
+    out
+}
+
+/// Sanity guard used by caches: sparse row/col bounds must fit the matrix.
+pub fn validate_sparse_bounds(cm: &CompressedMatrix) -> bool {
+    match &cm.sparse {
+        None => true,
+        Some(sp) => {
+            debug_assert!(matches!(sp.axis, Axis::Row | Axis::Col));
+            sp.idx
+                .iter()
+                .all(|&(i, j)| (i as usize) < cm.rows && (j as usize) < cm.cols)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gear::compose::{compress, Backbone, GearConfig, Method};
+    use crate::gear::KvKind;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn methods() -> Vec<Method> {
+        vec![
+            Method::Fp16,
+            Method::QuantOnly { bits: 4, backbone: Backbone::Kcvt },
+            Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(16) },
+            Method::gear_default(2),
+            Method::gear_l_default(4),
+            Method::OutlierAware { bits: 2, backbone: Backbone::Kivi(16), s: 0.04 },
+            Method::LowRankOnly { r: 3 },
+            Method::SparseOnly { s: 0.06 },
+        ]
+    }
+
+    #[test]
+    fn fused_scores_match_reference() {
+        let mut rng = Rng::new(70);
+        let (n, d, h) = (48, 32, 4);
+        let x = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        for m in methods() {
+            let cm = compress(&x, KvKind::Key, &GearConfig::new(m, h));
+            assert!(validate_sparse_bounds(&cm));
+            let mut fused = vec![0.0f32; n * h];
+            cm.scores_into(&q, h, 0.25, &mut fused);
+            let reference = scores_reference(&cm, &q, h, 0.25);
+            for (a, b) in fused.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-3, "{m:?}: fused {a} vs ref {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_weighted_sum_matches_reference() {
+        let mut rng = Rng::new(71);
+        let (n, d, h) = (40, 32, 4);
+        let x = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let mut probs = vec![0.0f32; n * h];
+        for hh in 0..h {
+            // random softmax-ish distribution per head
+            let mut s = 0.0f32;
+            for t in 0..n {
+                let v = rng.next_f32();
+                probs[t * h + hh] = v;
+                s += v;
+            }
+            for t in 0..n {
+                probs[t * h + hh] /= s;
+            }
+        }
+        for m in methods() {
+            let cm = compress(&x, KvKind::Value, &GearConfig::new(m, h));
+            let mut fused = vec![0.0f32; d];
+            cm.weighted_sum_into(&probs, h, &mut fused);
+            let reference = weighted_sum_reference(&cm, &probs, h);
+            for (a, b) in fused.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-3, "{m:?}: fused {a} vs ref {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn scores_accumulate_not_overwrite() {
+        let mut rng = Rng::new(72);
+        let x = Tensor::randn(&[8, 16], &mut rng, 1.0);
+        let q: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let cm = compress(&x, KvKind::Key, &GearConfig::new(Method::Fp16, 2));
+        let mut out = vec![1.0f32; 8 * 2];
+        cm.scores_into(&q, 2, 1.0, &mut out);
+        let reference = scores_reference(&cm, &q, 2, 1.0);
+        for (o, r) in out.iter().zip(&reference) {
+            assert!((o - (r + 1.0)).abs() < 1e-4);
+        }
+    }
+}

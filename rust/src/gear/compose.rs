@@ -1,0 +1,433 @@
+//! The GEAR composite pipeline (§3 of the paper) and the baselines it is
+//! compared against.
+//!
+//! `compress` produces a [`CompressedMatrix`] holding any subset of the
+//! three components: quantized backbone `D̂`, sparse outliers `S`, head-wise
+//! low-rank residual `L`. Reconstruction is `D̂ + L + S`; storage is the sum
+//! of real component bytes.
+
+use crate::tensor::Tensor;
+use crate::util::f16::to_f16_precision;
+use crate::util::rng::Rng;
+
+use super::lowrank::HeadwiseLowRank;
+use super::outlier::{filter_outliers, SparseCoo};
+use super::quant::{QuantScheme, QuantizedMatrix};
+use super::KvKind;
+
+/// Quantization backbone scheme (the paper's superscripts: `(KCVT)`,
+/// `(KIVI, g=64)`, per-token).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backbone {
+    /// FlexGen-style per-token group-wise quantization.
+    PerTokenGroup(usize),
+    /// Per-channel Key / per-token Value, whole-vector groups (the paper's
+    /// lite backbone).
+    Kcvt,
+    /// Per-channel Key / per-token Value with fine-grained groups of `g`.
+    Kivi(usize),
+}
+
+impl Backbone {
+    pub fn scheme(self, kind: KvKind) -> QuantScheme {
+        match self {
+            Backbone::PerTokenGroup(g) => QuantScheme::per_token_group(g),
+            Backbone::Kcvt => QuantScheme::kcvt(kind),
+            Backbone::Kivi(g) => QuantScheme::kivi(kind, g),
+        }
+    }
+
+    pub fn label(self) -> String {
+        match self {
+            Backbone::PerTokenGroup(g) => format!("per-token g={g}"),
+            Backbone::Kcvt => "KCVT".to_string(),
+            Backbone::Kivi(g) => format!("KIVI g={g}"),
+        }
+    }
+}
+
+/// A compression method from the paper's evaluation matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// Uncompressed FP16 baseline.
+    Fp16,
+    /// Backbone quantization only.
+    QuantOnly { bits: u8, backbone: Backbone },
+    /// Quantization + sparse outliers (Table 8's "Outlier-A.").
+    OutlierAware { bits: u8, backbone: Backbone, s: f64 },
+    /// Quantization + low-rank error reduction (GEAR-L).
+    GearL { bits: u8, backbone: Backbone, r: usize },
+    /// Full GEAR: quantization + sparse + low-rank.
+    Gear { bits: u8, backbone: Backbone, s: f64, r: usize },
+    /// Low-rank approximation alone (Fig 2a single-technique curve).
+    LowRankOnly { r: usize },
+    /// Outlier extraction alone (Fig 2a single-technique curve).
+    SparseOnly { s: f64 },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Fp16 => "FP16".into(),
+            Method::QuantOnly { bits, backbone } => format!("{} {bits}-bit", backbone.label()),
+            Method::OutlierAware { bits, backbone, s } => {
+                format!("Outlier-A.(s={:.0}%) {} {bits}-bit", s * 100.0, backbone.label())
+            }
+            Method::GearL { bits, backbone, r } => {
+                format!("GEAR-L(r={r}) {} {bits}-bit", backbone.label())
+            }
+            Method::Gear { bits, backbone, s, r } => {
+                format!("GEAR(s={:.0}%,r={r}) {} {bits}-bit", s * 100.0, backbone.label())
+            }
+            Method::LowRankOnly { r } => format!("LowRank-only r={r}"),
+            Method::SparseOnly { s } => format!("Sparse-only s={:.0}%", s * 100.0),
+        }
+    }
+
+    pub fn is_fp16(&self) -> bool {
+        matches!(self, Method::Fp16)
+    }
+
+    /// The paper's standard GEAR configuration for a bit width.
+    pub fn gear_default(bits: u8) -> Method {
+        match bits {
+            4 => Method::Gear { bits: 4, backbone: Backbone::Kcvt, s: 0.02, r: 4 },
+            _ => Method::Gear { bits, backbone: Backbone::Kivi(64), s: 0.02, r: 4 },
+        }
+    }
+
+    /// The paper's standard GEAR-L configuration for a bit width.
+    pub fn gear_l_default(bits: u8) -> Method {
+        match bits {
+            4 => Method::GearL { bits: 4, backbone: Backbone::Kcvt, r: 4 },
+            _ => Method::GearL { bits, backbone: Backbone::Kivi(64), r: 4 },
+        }
+    }
+}
+
+/// Parameters shared by compression calls that `Method` does not carry.
+#[derive(Debug, Clone, Copy)]
+pub struct GearConfig {
+    pub method: Method,
+    /// Heads for head-wise low-rank decomposition. Must divide the channel
+    /// count of the matrices being compressed.
+    pub n_heads: usize,
+    /// Power-iteration sweeps (paper Algorithm 2's `L`).
+    pub power_iters: usize,
+    /// RNG seed for power-iteration init (deterministic compression).
+    pub seed: u64,
+}
+
+impl GearConfig {
+    pub fn new(method: Method, n_heads: usize) -> GearConfig {
+        GearConfig { method, n_heads, power_iters: 3, seed: 0xC0FFEE }
+    }
+}
+
+/// A KV matrix compressed under some [`Method`].
+#[derive(Debug, Clone)]
+pub struct CompressedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// FP16 dense storage (Method::Fp16 only).
+    pub dense: Option<Vec<f32>>,
+    pub quant: Option<QuantizedMatrix>,
+    pub sparse: Option<SparseCoo>,
+    pub lowrank: Option<HeadwiseLowRank>,
+}
+
+/// Compress `x` (tokens × channels) of the given KV kind.
+pub fn compress(x: &Tensor, kind: KvKind, cfg: &GearConfig) -> CompressedMatrix {
+    let (rows, cols) = (x.rows(), x.cols());
+    let mut rng = Rng::new(cfg.seed ^ (rows as u64) << 32 ^ cols as u64);
+    let mut out = CompressedMatrix { rows, cols, dense: None, quant: None, sparse: None, lowrank: None };
+
+    match cfg.method {
+        Method::Fp16 => {
+            out.dense = Some(x.data().iter().map(|&v| to_f16_precision(v)).collect());
+        }
+        Method::QuantOnly { bits, backbone } => {
+            out.quant = Some(super::timed_phase("quant", || {
+                QuantizedMatrix::quantize(x, bits, backbone.scheme(kind))
+            }));
+        }
+        Method::OutlierAware { bits, backbone, s } => {
+            let (sp, rem) = super::timed_phase("sparse", || filter_outliers(x, s, kind.axis()));
+            out.quant = Some(super::timed_phase("quant", || {
+                QuantizedMatrix::quantize(&rem, bits, backbone.scheme(kind))
+            }));
+            out.sparse = Some(sp);
+        }
+        Method::GearL { bits, backbone, r } => {
+            let q = super::timed_phase("quant", || {
+                QuantizedMatrix::quantize(x, bits, backbone.scheme(kind))
+            });
+            let resid = residual(x, &q, None);
+            out.lowrank = Some(super::timed_phase("lowrank", || {
+                HeadwiseLowRank::decompose(
+                    &resid, rows, cols, cfg.n_heads, r, cfg.power_iters, &mut rng,
+                )
+            }));
+            out.quant = Some(q);
+        }
+        Method::Gear { bits, backbone, s, r } => {
+            let (sp, rem) = super::timed_phase("sparse", || filter_outliers(x, s, kind.axis()));
+            let q = super::timed_phase("quant", || {
+                QuantizedMatrix::quantize(&rem, bits, backbone.scheme(kind))
+            });
+            // R = X − D̂ − S; `rem` is X − S so R = rem − D̂.
+            let resid = residual(&rem, &q, None);
+            out.lowrank = Some(super::timed_phase("lowrank", || {
+                HeadwiseLowRank::decompose(
+                    &resid, rows, cols, cfg.n_heads, r, cfg.power_iters, &mut rng,
+                )
+            }));
+            out.quant = Some(q);
+            out.sparse = Some(sp);
+        }
+        Method::LowRankOnly { r } => {
+            out.lowrank = Some(HeadwiseLowRank::decompose(
+                x.data(), rows, cols, cfg.n_heads, r, cfg.power_iters, &mut rng,
+            ));
+        }
+        Method::SparseOnly { s } => {
+            let (sp, _) = filter_outliers(x, s, kind.axis());
+            out.sparse = Some(sp);
+        }
+    }
+    out
+}
+
+/// Dense residual `base − dequant(q)` (+ optional extra subtraction).
+fn residual(base: &Tensor, q: &QuantizedMatrix, extra: Option<&[f32]>) -> Vec<f32> {
+    let mut r = vec![0.0f32; base.len()];
+    q.dequantize_into(&mut r);
+    for (ri, &bi) in r.iter_mut().zip(base.data()) {
+        *ri = bi - *ri;
+    }
+    if let Some(e) = extra {
+        for (ri, &ei) in r.iter_mut().zip(e) {
+            *ri -= ei;
+        }
+    }
+    r
+}
+
+impl CompressedMatrix {
+    /// Reconstruct the full matrix `D̂ + L + S`.
+    pub fn reconstruct(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.rows, self.cols]);
+        self.reconstruct_into(t.data_mut());
+        t
+    }
+
+    pub fn reconstruct_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows * self.cols);
+        if let Some(d) = &self.dense {
+            out.copy_from_slice(d);
+            return;
+        }
+        match &self.quant {
+            Some(q) => q.dequantize_into(out),
+            None => out.fill(0.0),
+        }
+        if let Some(lr) = &self.lowrank {
+            lr.add_into(out);
+        }
+        if let Some(sp) = &self.sparse {
+            sp.add_into(out);
+        }
+    }
+
+    /// Reconstruct token row `i` into `out` (cols long) — the decode hot
+    /// path used by attention against the compressed cache.
+    pub fn reconstruct_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        if let Some(d) = &self.dense {
+            out.copy_from_slice(&d[i * self.cols..(i + 1) * self.cols]);
+            return;
+        }
+        match &self.quant {
+            Some(q) => q.dequantize_row_into(i, out),
+            None => out.fill(0.0),
+        }
+        if let Some(lr) = &self.lowrank {
+            lr.add_row_into(i, out);
+        }
+        if let Some(sp) = &self.sparse {
+            sp.add_row_into(i, out);
+        }
+    }
+
+    /// Real storage bytes of all present components.
+    pub fn nbytes(&self) -> usize {
+        let mut b = 0;
+        if let Some(d) = &self.dense {
+            b += d.len() * 2; // FP16 storage
+        }
+        if let Some(q) = &self.quant {
+            b += q.nbytes();
+        }
+        if let Some(sp) = &self.sparse {
+            b += sp.nbytes();
+        }
+        if let Some(lr) = &self.lowrank {
+            b += lr.nbytes();
+        }
+        b
+    }
+
+    /// Size relative to FP16 (the paper's "KV size" column).
+    pub fn kv_size_frac(&self) -> f64 {
+        self.nbytes() as f64 / (self.rows * self.cols * 2) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gear::error::rel_error;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// KV-like matrix: per-channel scales are heavy-tailed (Key cache
+    /// regime the paper analyzes).
+    fn kv_matrix(rng: &mut Rng, n: usize, d: usize) -> Tensor {
+        let mut chan_scale = vec![0.0f32; d];
+        for s in chan_scale.iter_mut() {
+            *s = (rng.normal_f32() * 1.2).exp(); // lognormal
+        }
+        let mut x = Tensor::zeros(&[n, d]);
+        for i in 0..n {
+            for j in 0..d {
+                let mut v = rng.normal_f32() * chan_scale[j];
+                if rng.next_f64() < 0.01 {
+                    v *= 8.0;
+                }
+                x.data_mut()[i * d + j] = v;
+            }
+        }
+        x
+    }
+
+    fn err_of(x: &Tensor, kind: KvKind, m: Method) -> f64 {
+        let c = compress(x, kind, &GearConfig::new(m, 4));
+        rel_error(x.data(), c.reconstruct().data())
+    }
+
+    #[test]
+    fn gear_beats_quant_only_at_2bit() {
+        let mut rng = Rng::new(50);
+        let x = kv_matrix(&mut rng, 128, 64);
+        for kind in [KvKind::Key, KvKind::Value] {
+            let q = err_of(&x, kind, Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(32) });
+            let gl = err_of(&x, kind, Method::GearL { bits: 2, backbone: Backbone::Kivi(32), r: 4 });
+            let g = err_of(
+                &x,
+                kind,
+                Method::Gear { bits: 2, backbone: Backbone::Kivi(32), s: 0.02, r: 4 },
+            );
+            assert!(gl < q, "{kind:?}: GEAR-L {gl} !< quant {q}");
+            assert!(g < q, "{kind:?}: GEAR {g} !< quant {q}");
+        }
+    }
+
+    #[test]
+    fn full_gear_beats_each_single_technique() {
+        // Fig 2a: no single technique matches the composite at its budget.
+        let mut rng = Rng::new(51);
+        let x = kv_matrix(&mut rng, 128, 64);
+        let g = err_of(&x, KvKind::Key, Method::gear_default(2));
+        let lr = err_of(&x, KvKind::Key, Method::LowRankOnly { r: 8 });
+        let sp = err_of(&x, KvKind::Key, Method::SparseOnly { s: 0.1 });
+        assert!(g < lr, "GEAR {g} !< lowrank-only {lr}");
+        assert!(g < sp, "GEAR {g} !< sparse-only {sp}");
+    }
+
+    #[test]
+    fn fp16_roundtrip_tiny_error() {
+        let mut rng = Rng::new(52);
+        let x = kv_matrix(&mut rng, 32, 32);
+        let e = err_of(&x, KvKind::Key, Method::Fp16);
+        assert!(e < 1e-3, "fp16 {e}");
+    }
+
+    #[test]
+    fn row_reconstruction_matches_full() {
+        let mut rng = Rng::new(53);
+        let x = kv_matrix(&mut rng, 40, 32);
+        for m in [
+            Method::Fp16,
+            Method::QuantOnly { bits: 4, backbone: Backbone::Kcvt },
+            Method::gear_default(2),
+            Method::gear_l_default(4),
+            Method::SparseOnly { s: 0.05 },
+            Method::LowRankOnly { r: 2 },
+        ] {
+            let c = compress(&x, KvKind::Key, &GearConfig::new(m, 4));
+            let full = c.reconstruct();
+            let mut row = vec![0.0f32; 32];
+            for i in 0..40 {
+                c.reconstruct_row_into(i, &mut row);
+                for (a, b) in row.iter().zip(full.row(i)) {
+                    assert!((a - b).abs() < 1e-6, "{m:?} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kv_size_ordering_matches_paper() {
+        // KCVT (coarse groups) < KIVI (fine groups) at same bits; GEAR adds
+        // a small overhead on top of its backbone.
+        let mut rng = Rng::new(54);
+        let x = kv_matrix(&mut rng, 256, 128);
+        let sz = |m: Method| {
+            compress(&x, KvKind::Key, &GearConfig::new(m, 4)).kv_size_frac()
+        };
+        let kcvt = sz(Method::QuantOnly { bits: 4, backbone: Backbone::Kcvt });
+        let kivi = sz(Method::QuantOnly { bits: 4, backbone: Backbone::Kivi(64) });
+        let gear = sz(Method::gear_default(4));
+        let gearl = sz(Method::gear_l_default(4));
+        assert!(kcvt < kivi, "KCVT {kcvt} !< KIVI {kivi}");
+        assert!(gearl < gear, "GEAR-L {gearl} !< GEAR {gear}");
+        assert!(gear < 0.5, "GEAR 4-bit size {gear} not < 50%");
+        // All far below FP16.
+        for s in [kcvt, kivi, gear, gearl] {
+            assert!(s < 0.6);
+        }
+    }
+
+    #[test]
+    fn prop_gear_error_bounded_by_quant_error() {
+        // Error reduction must not make things worse than its backbone.
+        prop::check(
+            |r| {
+                let n = 16 + r.next_below(64) as usize;
+                kv_matrix(&mut r.split(), n, 32)
+            },
+            |x| {
+                let bits = 2;
+                let bb = Backbone::Kivi(16);
+                let q = err_of(x, KvKind::Value, Method::QuantOnly { bits, backbone: bb });
+                let g = err_of(x, KvKind::Value, Method::Gear { bits, backbone: bb, s: 0.02, r: 4 });
+                if g <= q * 1.05 {
+                    Ok(())
+                } else {
+                    Err(format!("GEAR {g} worse than quant-only {q}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn nbytes_sums_components() {
+        let mut rng = Rng::new(55);
+        let x = kv_matrix(&mut rng, 64, 32);
+        let c = compress(&x, KvKind::Key, &GearConfig::new(Method::gear_default(2), 4));
+        let total = c.quant.as_ref().unwrap().nbytes()
+            + c.sparse.as_ref().unwrap().nbytes()
+            + c.lowrank.as_ref().unwrap().nbytes();
+        assert_eq!(c.nbytes(), total);
+    }
+}

@@ -1,0 +1,214 @@
+//! Approximation-error metrics and singular-spectrum analysis.
+//!
+//! Backs the paper's Figure 1a (method error comparison), Figure 2a
+//! (single-technique error curves) and Figure 2b (residual spectrum decay).
+//! The exact singular values come from a cyclic Jacobi eigensolver on the
+//! Gram matrix — only used offline for analysis/tests, never on the serving
+//! path.
+
+use crate::tensor::ops::{fro_dist, fro_norm};
+
+/// Relative Frobenius approximation error ‖X − X̂‖_F / ‖X‖_F.
+pub fn rel_error(x: &[f32], xhat: &[f32]) -> f64 {
+    let norm = fro_norm(x);
+    if norm == 0.0 {
+        return if fro_norm(xhat) == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    fro_dist(x, xhat) / norm
+}
+
+/// Exact singular values of a row-major n×d matrix, descending.
+///
+/// Computes the eigenvalues of the smaller Gram matrix (XᵀX or XXᵀ) with
+/// cyclic Jacobi rotations, then takes square roots. O(m³) for m = min(n,d);
+/// fine for head-sized blocks (d_H ≤ 128).
+pub fn singular_values(x: &[f32], n: usize, d: usize) -> Vec<f64> {
+    assert_eq!(x.len(), n * d);
+    let m = n.min(d);
+    // Build the m×m Gram matrix in f64.
+    let mut g = vec![0.0f64; m * m];
+    if d <= n {
+        // G = XᵀX (d×d)
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            for a in 0..d {
+                let ra = row[a] as f64;
+                if ra == 0.0 {
+                    continue;
+                }
+                for b in a..d {
+                    g[a * m + b] += ra * row[b] as f64;
+                }
+            }
+        }
+    } else {
+        // G = XXᵀ (n×n)
+        for a in 0..n {
+            let ra = &x[a * d..(a + 1) * d];
+            for b in a..n {
+                let rb = &x[b * d..(b + 1) * d];
+                let mut s = 0.0f64;
+                for k in 0..d {
+                    s += ra[k] as f64 * rb[k] as f64;
+                }
+                g[a * m + b] = s;
+            }
+        }
+    }
+    // Mirror lower triangle.
+    for a in 0..m {
+        for b in 0..a {
+            g[a * m + b] = g[b * m + a];
+        }
+    }
+
+    let mut evs = jacobi_eigenvalues(&mut g, m);
+    evs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    evs.into_iter().map(|ev| ev.max(0.0).sqrt()).collect()
+}
+
+/// Eigenvalues of a symmetric m×m matrix (row-major, modified in place) via
+/// cyclic Jacobi rotations. Unsorted.
+pub fn jacobi_eigenvalues(a: &mut [f64], m: usize) -> Vec<f64> {
+    assert_eq!(a.len(), m * m);
+    if m == 1 {
+        return vec![a[0]];
+    }
+    const MAX_SWEEPS: usize = 50;
+    for _ in 0..MAX_SWEEPS {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0f64;
+        for p in 0..m {
+            for q in (p + 1)..m {
+                off += a[p * m + q] * a[p * m + q];
+            }
+        }
+        let scale: f64 = (0..m).map(|i| a[i * m + i].abs()).sum::<f64>().max(1e-300);
+        if off.sqrt() <= 1e-14 * scale {
+            break;
+        }
+        for p in 0..m {
+            for q in (p + 1)..m {
+                let apq = a[p * m + q];
+                if apq == 0.0 {
+                    continue;
+                }
+                let app = a[p * m + p];
+                let aqq = a[q * m + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,θ) on both sides.
+                for k in 0..m {
+                    let akp = a[k * m + p];
+                    let akq = a[k * m + q];
+                    a[k * m + p] = c * akp - s * akq;
+                    a[k * m + q] = s * akp + c * akq;
+                }
+                for k in 0..m {
+                    let apk = a[p * m + k];
+                    let aqk = a[q * m + k];
+                    a[p * m + k] = c * apk - s * aqk;
+                    a[q * m + k] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    (0..m).map(|i| a[i * m + i]).collect()
+}
+
+/// Spectrum summary used by the Fig 2b reproduction: fraction of spectral
+/// energy (Σσᵢ²) captured by the top-k singular values.
+pub fn energy_captured(svals: &[f64], k: usize) -> f64 {
+    let total: f64 = svals.iter().map(|s| s * s).sum();
+    if total == 0.0 {
+        return 1.0;
+    }
+    svals.iter().take(k).map(|s| s * s).sum::<f64>() / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul_into;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rel_error_basics() {
+        let x = [1.0f32, 2.0, 3.0];
+        assert_eq!(rel_error(&x, &x), 0.0);
+        let zero = [0.0f32; 3];
+        assert_eq!(rel_error(&zero, &zero), 0.0);
+        assert!(rel_error(&zero, &x).is_infinite());
+    }
+
+    #[test]
+    fn jacobi_diagonal_matrix() {
+        let mut a = vec![0.0f64; 9];
+        a[0] = 3.0;
+        a[4] = 1.0;
+        a[8] = 2.0;
+        let mut evs = jacobi_eigenvalues(&mut a, 3);
+        evs.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        assert!((evs[0] - 3.0).abs() < 1e-12);
+        assert!((evs[1] - 2.0).abs() < 1e-12);
+        assert!((evs[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3 and 1.
+        let mut a = vec![2.0, 1.0, 1.0, 2.0];
+        let mut evs = jacobi_eigenvalues(&mut a, 2);
+        evs.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        assert!((evs[0] - 3.0).abs() < 1e-12);
+        assert!((evs[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_values_of_orthogonal_rows() {
+        // X = [[2,0,0],[0,3,0]] -> σ = {3, 2}.
+        let x = [2.0f32, 0.0, 0.0, 0.0, 3.0, 0.0];
+        let sv = singular_values(&x, 2, 3);
+        assert_eq!(sv.len(), 2);
+        assert!((sv[0] - 3.0).abs() < 1e-6);
+        assert!((sv[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spectrum_matches_frobenius() {
+        // Σσ² must equal ‖X‖²_F.
+        let mut r = Rng::new(40);
+        for (n, d) in [(10, 6), (6, 10), (8, 8)] {
+            let mut x = vec![0.0f32; n * d];
+            r.fill_normal(&mut x, 0.0, 1.0);
+            let sv = singular_values(&x, n, d);
+            let energy: f64 = sv.iter().map(|s| s * s).sum();
+            let fro2 = fro_norm(&x).powi(2);
+            assert!(
+                (energy - fro2).abs() / fro2 < 1e-6,
+                "{n}x{d}: Σσ²={energy} vs ‖X‖²={fro2}"
+            );
+        }
+    }
+
+    #[test]
+    fn rank_deficient_spectrum() {
+        // Rank-2 matrix: singular values beyond 2 are ~0.
+        let mut r = Rng::new(41);
+        let (n, d, k) = (12, 9, 2);
+        let mut u = vec![0.0f32; n * k];
+        let mut v = vec![0.0f32; k * d];
+        r.fill_normal(&mut u, 0.0, 1.0);
+        r.fill_normal(&mut v, 0.0, 1.0);
+        let mut x = vec![0.0f32; n * d];
+        matmul_into(&u, &v, n, k, d, &mut x);
+        let sv = singular_values(&x, n, d);
+        assert!(sv[1] > 1e-3);
+        for s in &sv[2..] {
+            assert!(*s < sv[0] * 1e-4, "trailing σ {s}");
+        }
+        assert!(energy_captured(&sv, 2) > 0.999);
+    }
+}

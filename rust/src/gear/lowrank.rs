@@ -1,0 +1,401 @@
+//! Low-rank residual approximation `L_h = A_h B_hᵀ` (Eq. 6 / Algorithm 2).
+//!
+//! The residual `R = X − D̂ − S` is split head-wise along the channel axis
+//! and each `R_h ∈ ℝ^{n×d_H}` is approximated at rank `r` with the
+//! power-iteration solver of Vogels et al. (PowerSGD), exactly the paper's
+//! Algorithm 2: alternate `A = R B`, `B = Rᵀ A` with a QR orthonormalization
+//! on the final sweep. This captures the top-r singular directions at
+//! O(L · n · d_H · r) cost — no full SVD on the request path.
+//!
+//! Factors are FP16-rounded on store (2 B/entry accounting), matching the
+//! paper's full-precision-FP16 setting.
+
+use crate::tensor::ops::matmul_into;
+use crate::tensor::Tensor;
+use crate::util::f16::to_f16_precision;
+use crate::util::rng::Rng;
+
+/// Rank-r factorization of a single matrix: `L = A Bᵀ`,
+/// `A ∈ ℝ^{n×r}`, `B ∈ ℝ^{d×r}`.
+#[derive(Debug, Clone)]
+pub struct LowRank {
+    pub n: usize,
+    pub d: usize,
+    pub r: usize,
+    /// Row-major n×r.
+    pub a: Vec<f32>,
+    /// Row-major d×r.
+    pub b: Vec<f32>,
+}
+
+impl LowRank {
+    /// Add `A Bᵀ` into a dense n×d buffer.
+    pub fn add_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n * self.d);
+        for i in 0..self.n {
+            let arow = &self.a[i * self.r..(i + 1) * self.r];
+            let orow = &mut out[i * self.d..(i + 1) * self.d];
+            for j in 0..self.d {
+                let brow = &self.b[j * self.r..(j + 1) * self.r];
+                let mut s = 0.0f32;
+                for k in 0..self.r {
+                    s += arow[k] * brow[k];
+                }
+                orow[j] += s;
+            }
+        }
+    }
+
+    /// Add row `i` of `A Bᵀ` into a d-long buffer (decode hot path).
+    #[inline]
+    pub fn add_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d);
+        let arow = &self.a[i * self.r..(i + 1) * self.r];
+        for j in 0..self.d {
+            let brow = &self.b[j * self.r..(j + 1) * self.r];
+            let mut s = 0.0f32;
+            for k in 0..self.r {
+                s += arow[k] * brow[k];
+            }
+            out[j] += s;
+        }
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.n, self.d]);
+        self.add_into(t.data_mut());
+        t
+    }
+
+    /// Real storage bytes at FP16.
+    pub fn nbytes(&self) -> usize {
+        (self.a.len() + self.b.len()) * 2
+    }
+}
+
+/// Modified Gram–Schmidt QR: orthonormalize the `r` columns of the
+/// column-major-interpreted (rows×r, row-major storage) matrix in place.
+/// Returns false for a numerically-degenerate column (left as zeros).
+pub fn orthonormalize_columns(m: &mut [f32], rows: usize, r: usize) -> bool {
+    let mut ok = true;
+    for c in 0..r {
+        // Pre-projection norm, for a relative degeneracy threshold.
+        let mut norm0 = 0.0f64;
+        for i in 0..rows {
+            norm0 += (m[i * r + c] as f64).powi(2);
+        }
+        let norm0 = norm0.sqrt();
+        // Subtract projections on previous columns.
+        for p in 0..c {
+            let mut dot = 0.0f64;
+            for i in 0..rows {
+                dot += m[i * r + c] as f64 * m[i * r + p] as f64;
+            }
+            for i in 0..rows {
+                m[i * r + c] -= dot as f32 * m[i * r + p];
+            }
+        }
+        let mut norm = 0.0f64;
+        for i in 0..rows {
+            norm += (m[i * r + c] as f64).powi(2);
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-6 * norm0.max(1e-30) || norm < 1e-30 {
+            for i in 0..rows {
+                m[i * r + c] = 0.0;
+            }
+            ok = false;
+            continue;
+        }
+        let inv = (1.0 / norm) as f32;
+        for i in 0..rows {
+            m[i * r + c] *= inv;
+        }
+    }
+    ok
+}
+
+/// Power-iteration low-rank solver (paper Algorithm 2).
+///
+/// `x` is row-major n×d. `iters` is the loop count `L` (the paper uses a
+/// small constant; 2–4 suffices given the fast spectrum decay of
+/// quantization residuals — see Fig 2b).
+pub fn power_iter_lowrank(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    r: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> LowRank {
+    assert_eq!(x.len(), n * d);
+    let r = r.min(n).min(d).max(1);
+    let iters = iters.max(1);
+
+    // Random init of B (d×r).
+    let mut b = vec![0.0f32; d * r];
+    rng.fill_normal(&mut b, 0.0, 1.0);
+    let mut a = vec![0.0f32; n * r];
+
+    for l in 0..iters {
+        let last = l == iters - 1;
+        if last {
+            orthonormalize_columns(&mut b, d, r);
+        }
+        // A = X B     (n×d @ d×r)
+        matmul_into(x, &b, n, d, r, &mut a);
+        if last {
+            orthonormalize_columns(&mut a, n, r);
+        }
+        // B = Xᵀ A    (d×n @ n×r) == (Aᵀ X)ᵀ; computed as B[j,k] = Σ_i X[i,j] A[i,k]
+        b.fill(0.0);
+        for i in 0..n {
+            let xrow = &x[i * d..(i + 1) * d];
+            let arow = &a[i * r..(i + 1) * r];
+            for (j, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let brow = &mut b[j * r..(j + 1) * r];
+                for k in 0..r {
+                    brow[k] += xv * arow[k];
+                }
+            }
+        }
+    }
+
+    // FP16-round the stored factors (storage precision of the paper).
+    for v in a.iter_mut() {
+        *v = to_f16_precision(*v);
+    }
+    for v in b.iter_mut() {
+        *v = to_f16_precision(*v);
+    }
+    LowRank { n, d, r, a, b }
+}
+
+/// Head-wise low-rank decomposition: split the channel axis into `n_heads`
+/// contiguous blocks of `d_H = d / n_heads` and factor each independently
+/// (attention heads encode distinct subspaces — §3 of the paper).
+#[derive(Debug, Clone)]
+pub struct HeadwiseLowRank {
+    pub n: usize,
+    pub d: usize,
+    pub n_heads: usize,
+    pub heads: Vec<LowRank>,
+}
+
+impl HeadwiseLowRank {
+    pub fn decompose(
+        x: &[f32],
+        n: usize,
+        d: usize,
+        n_heads: usize,
+        r: usize,
+        iters: usize,
+        rng: &mut Rng,
+    ) -> HeadwiseLowRank {
+        assert_eq!(x.len(), n * d);
+        assert!(n_heads >= 1 && d % n_heads == 0, "d={d} not divisible by heads={n_heads}");
+        let dh = d / n_heads;
+        let mut heads = Vec::with_capacity(n_heads);
+        let mut sub = vec![0.0f32; n * dh];
+        for h in 0..n_heads {
+            for i in 0..n {
+                sub[i * dh..(i + 1) * dh]
+                    .copy_from_slice(&x[i * d + h * dh..i * d + (h + 1) * dh]);
+            }
+            heads.push(power_iter_lowrank(&sub, n, dh, r, iters, rng));
+        }
+        HeadwiseLowRank { n, d, n_heads, heads }
+    }
+
+    /// Add `concat_h(A_h B_hᵀ)` into a dense n×d buffer.
+    pub fn add_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n * self.d);
+        let dh = self.d / self.n_heads;
+        for (h, lr) in self.heads.iter().enumerate() {
+            for i in 0..self.n {
+                let arow = &lr.a[i * lr.r..(i + 1) * lr.r];
+                let orow = &mut out[i * self.d + h * dh..i * self.d + (h + 1) * dh];
+                for j in 0..dh {
+                    let brow = &lr.b[j * lr.r..(j + 1) * lr.r];
+                    let mut s = 0.0f32;
+                    for k in 0..lr.r {
+                        s += arow[k] * brow[k];
+                    }
+                    orow[j] += s;
+                }
+            }
+        }
+    }
+
+    /// Add row `i` into a d-long buffer.
+    pub fn add_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d);
+        let dh = self.d / self.n_heads;
+        for (h, lr) in self.heads.iter().enumerate() {
+            lr.add_row_into(i, &mut out[h * dh..(h + 1) * dh]);
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.heads.iter().map(|h| h.nbytes()).sum()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.heads.first().map(|h| h.r).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{fro_dist, fro_norm};
+    use crate::util::prop;
+
+    /// Build an exactly rank-k matrix.
+    fn rank_k(rng: &mut Rng, n: usize, d: usize, k: usize) -> Vec<f32> {
+        let mut u = vec![0.0f32; n * k];
+        let mut v = vec![0.0f32; k * d];
+        rng.fill_normal(&mut u, 0.0, 1.0);
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        let mut x = vec![0.0f32; n * d];
+        matmul_into(&u, &v, n, k, d, &mut x);
+        x
+    }
+
+    #[test]
+    fn recovers_exact_low_rank() {
+        let mut rng = Rng::new(30);
+        let (n, d, k) = (64, 32, 3);
+        let x = rank_k(&mut rng, n, d, k);
+        let lr = power_iter_lowrank(&x, n, d, k, 4, &mut rng);
+        let recon = lr.to_dense();
+        let rel = fro_dist(&x, recon.data()) / fro_norm(&x);
+        assert!(rel < 5e-3, "rank-{k} recovery rel err {rel}");
+    }
+
+    #[test]
+    fn qr_produces_orthonormal_columns() {
+        let mut rng = Rng::new(31);
+        let (rows, r) = (40, 5);
+        let mut m = vec![0.0f32; rows * r];
+        rng.fill_normal(&mut m, 0.0, 1.0);
+        assert!(orthonormalize_columns(&mut m, rows, r));
+        for c1 in 0..r {
+            for c2 in 0..=c1 {
+                let mut dot = 0.0f64;
+                for i in 0..rows {
+                    dot += m[i * r + c1] as f64 * m[i * r + c2] as f64;
+                }
+                let expect = if c1 == c2 { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-5, "Q^T Q [{c1},{c2}] = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn qr_handles_dependent_columns() {
+        // Two identical columns: second must be zeroed, not NaN.
+        let mut m = vec![1.0f32, 1.0, 2.0, 2.0, 3.0, 3.0]; // 3x2
+        let ok = orthonormalize_columns(&mut m, 3, 2);
+        assert!(!ok);
+        assert!(m.iter().all(|v| v.is_finite()));
+        assert_eq!(m[1], 0.0);
+    }
+
+    #[test]
+    fn higher_rank_reduces_error() {
+        let mut rng = Rng::new(32);
+        let (n, d) = (48, 48);
+        let mut x = vec![0.0f32; n * d];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let mut prev = f64::INFINITY;
+        for r in [1usize, 4, 16] {
+            let lr = power_iter_lowrank(&x, n, d, r, 4, &mut rng);
+            let err = fro_dist(&x, lr.to_dense().data());
+            assert!(err < prev, "r={r}: {err} !< {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn matches_exact_top_r_energy() {
+        // Power iteration must capture nearly all the energy the exact top-r
+        // SVD captures, on a matrix with decaying spectrum.
+        let mut rng = Rng::new(33);
+        let (n, d) = (40, 24);
+        // Sum of rank-1 terms with geometric decay.
+        let mut x = vec![0.0f32; n * d];
+        for k in 0..8 {
+            let term = rank_k(&mut rng, n, d, 1);
+            let w = 0.5f32.powi(k);
+            for (xi, ti) in x.iter_mut().zip(&term) {
+                *xi += w * ti;
+            }
+        }
+        let r = 3;
+        let lr = power_iter_lowrank(&x, n, d, r, 6, &mut rng);
+        let resid = fro_dist(&x, lr.to_dense().data());
+        let exact_sv = crate::gear::error::singular_values(&x, n, d);
+        let exact_resid: f64 = exact_sv[r..].iter().map(|s| s * s).sum::<f64>().sqrt();
+        assert!(
+            resid <= exact_resid * 1.25 + 1e-6,
+            "power-iter residual {resid} vs exact {exact_resid}"
+        );
+    }
+
+    #[test]
+    fn headwise_matches_concat_of_heads() {
+        let mut rng = Rng::new(34);
+        let (n, d, heads) = (20, 16, 4);
+        let mut x = vec![0.0f32; n * d];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let hw = HeadwiseLowRank::decompose(&x, n, d, heads, 2, 4, &mut rng);
+        assert_eq!(hw.heads.len(), heads);
+        let mut full = vec![0.0f32; n * d];
+        hw.add_into(&mut full);
+        let mut by_rows = vec![0.0f32; n * d];
+        for i in 0..n {
+            hw.add_row_into(i, &mut by_rows[i * d..(i + 1) * d]);
+        }
+        for (a, b) in full.iter().zip(&by_rows) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn prop_approximation_never_worse_than_zero() {
+        // ||X - AB^T|| <= ||X|| (the solver must at least not anti-fit) on
+        // matrices with a planted low-rank component.
+        prop::check(
+            |r| {
+                let n = 8 + r.next_below(24) as usize;
+                let d = 8 + r.next_below(24) as usize;
+                let planted = rank_k(&mut r.split(), n, d, 2);
+                let mut noise = vec![0.0f32; n * d];
+                r.fill_normal(&mut noise, 0.0, 0.05);
+                let x: Vec<f32> = planted.iter().zip(&noise).map(|(a, b)| a + b).collect();
+                (x, n, d, r.split())
+            },
+            |(x, n, d, rng)| {
+                let mut rng = rng.clone();
+                let lr = power_iter_lowrank(x, *n, *d, 2, 4, &mut rng);
+                let err = fro_dist(x, lr.to_dense().data());
+                let norm = fro_norm(x);
+                if err <= norm * 0.5 {
+                    Ok(())
+                } else {
+                    Err(format!("err {err} > 0.5 * ||X|| {norm}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn nbytes_is_fp16() {
+        let lr = LowRank { n: 10, d: 6, r: 2, a: vec![0.0; 20], b: vec![0.0; 12] };
+        assert_eq!(lr.nbytes(), (20 + 12) * 2);
+    }
+}

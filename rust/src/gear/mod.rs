@@ -1,0 +1,81 @@
+//! GEAR: the paper's core contribution.
+//!
+//! A KV matrix `X` (tokens × channels) is approximated as
+//!
+//! ```text
+//! X  ≈  D̂  +  L  +  S
+//! ```
+//!
+//! * [`quant`] — `D̂ = Quant_b(X − S)`: uniform asymmetric quantization of the
+//!   outlier-free backbone at 2/4/8 bits, with all the grouping schemes the
+//!   paper evaluates (per-token group-wise / KIVI / KCVT).
+//! * [`outlier`] — `S = Filter_s(X)`: per-vector top/bottom `s/2 %` outliers
+//!   kept in full precision as a sparse COO matrix.
+//! * [`lowrank`] — `L = concat_h(A_h B_hᵀ)`: head-wise rank-`r` approximation
+//!   of the residual `R = X − D̂ − S`, via the power-iteration solver
+//!   (Algorithm 2 of the paper).
+//! * [`compose`] — the full GEAR / GEAR-L / outlier-aware pipelines and the
+//!   compressed-matrix type the KV cache stores.
+//! * [`error`] — approximation-error and singular-spectrum utilities
+//!   (Figures 1a / 2a / 2b).
+//! * [`size`] — exact byte accounting for every component (KV-size % metric).
+
+pub mod adaptive;
+pub mod attend;
+pub mod compose;
+pub mod error;
+pub mod lowrank;
+pub mod outlier;
+pub mod quant;
+pub mod size;
+
+pub use compose::{CompressedMatrix, GearConfig, Method};
+pub use quant::{Axis, GroupSize, QuantScheme, QuantizedMatrix};
+
+use std::cell::RefCell;
+use std::time::Duration;
+
+thread_local! {
+    /// Per-thread accumulator attributing wall time to GEAR components
+    /// (quant / sparse / lowrank). Feeds the Fig 3a time-breakdown
+    /// reproduction without plumbing a timer through every call.
+    static PHASE_TIMER: RefCell<crate::util::timing::PhaseTimer> =
+        RefCell::new(crate::util::timing::PhaseTimer::new());
+}
+
+/// Record `d` against `phase` in the thread-local GEAR timer.
+pub(crate) fn record_phase(phase: &str, d: Duration) {
+    PHASE_TIMER.with(|t| t.borrow_mut().add(phase, d));
+}
+
+/// Time `f`, attributing it to `phase`.
+pub(crate) fn timed_phase<T>(phase: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    record_phase(phase, t0.elapsed());
+    out
+}
+
+/// Take (and reset) the accumulated component timings for this thread.
+pub fn take_phase_timings() -> crate::util::timing::PhaseTimer {
+    PHASE_TIMER.with(|t| std::mem::take(&mut *t.borrow_mut()))
+}
+
+/// Whether a matrix is a Key or Value cache. Keys are quantized / filtered
+/// per-channel (column vectors), Values per-token (row vectors), following
+/// KIVI / KVQuant's observation that Key outliers live in fixed channels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvKind {
+    Key,
+    Value,
+}
+
+impl KvKind {
+    /// The grouping axis this kind quantizes along.
+    pub fn axis(self) -> Axis {
+        match self {
+            KvKind::Key => Axis::Col,
+            KvKind::Value => Axis::Row,
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! Outlier extraction: the sparse component `S = Filter_s(X)` (Eq. 4).
+//!
+//! For each vector along the grouping axis (channel vectors for Keys, token
+//! vectors for Values) the top `s/2 %` and bottom `s/2 %` entries by value
+//! are moved into a sparse COO matrix stored in full precision; the dense
+//! remainder `X − S` is what gets quantized. Selection uses
+//! `select_nth_unstable` (average O(n)) rather than a sort.
+
+use crate::tensor::Tensor;
+use crate::util::f16::to_f16_precision;
+
+use super::quant::Axis;
+
+/// Sparse matrix in coordinate format. Values are FP16-rounded (the paper
+/// stores outliers in full precision = FP16 in its setting).
+///
+/// In-memory we keep (row, col) u32 pairs for fast row scans; the *stored*
+/// layout this accounts for is the paper's compressed-sparse form along the
+/// filter axis: one u32 offset per vector + a u16 within-vector index and an
+/// FP16 value per entry (4 B/entry + 4 B/vector) — the "two index vectors
+/// and one value vector" the paper describes.
+#[derive(Debug, Clone)]
+pub struct SparseCoo {
+    pub rows: usize,
+    pub cols: usize,
+    /// Axis the outliers were filtered along (determines the CSR direction).
+    pub axis: Axis,
+    /// (row, col) coordinates, sorted row-major.
+    pub idx: Vec<(u32, u32)>,
+    /// FP16-rounded values, parallel to `idx`.
+    pub val: Vec<f32>,
+}
+
+impl Default for SparseCoo {
+    fn default() -> Self {
+        SparseCoo { rows: 0, cols: 0, axis: Axis::Row, idx: Vec::new(), val: Vec::new() }
+    }
+}
+
+impl SparseCoo {
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Add `S` into a dense row-major buffer.
+    pub fn add_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.rows * self.cols);
+        for (k, &(i, j)) in self.idx.iter().enumerate() {
+            out[i as usize * self.cols + j as usize] += self.val[k];
+        }
+    }
+
+    /// Add the entries of row `i` into a cols-long buffer. COO is sorted
+    /// row-major, so this is a binary search + linear scan.
+    pub fn add_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        let start = self.idx.partition_point(|&(r, _)| (r as usize) < i);
+        for k in start..self.idx.len() {
+            let (r, c) = self.idx[k];
+            if r as usize != i {
+                break;
+            }
+            out[c as usize] += self.val[k];
+        }
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.rows, self.cols]);
+        self.add_into(t.data_mut());
+        t
+    }
+
+    /// Real storage bytes in the compressed-sparse layout along the filter
+    /// axis: per entry an FP16 value + u16 within-vector index, plus one u32
+    /// offset per vector (and one terminator).
+    pub fn nbytes(&self) -> usize {
+        let n_vecs = match self.axis {
+            Axis::Row => self.rows,
+            Axis::Col => self.cols,
+        };
+        self.val.len() * 2 + self.idx.len() * 2 + (n_vecs + 1) * 4
+    }
+}
+
+/// Number of entries extracted from *each side* (top and bottom) of a
+/// vector of length `len` at sparsity fraction `s` (e.g. 0.02 for the
+/// paper's s = 2 %).
+pub fn k_per_side(len: usize, s: f64) -> usize {
+    ((len as f64 * s) / 2.0).round() as usize
+}
+
+/// Extract outliers from `x` per-vector along `axis`.
+///
+/// Returns `(S, X − S)`: the sparse outlier matrix and the dense remainder
+/// with extracted positions zeroed (so quantization sees small-magnitude
+/// entries only).
+pub fn filter_outliers(x: &Tensor, s: f64, axis: Axis) -> (SparseCoo, Tensor) {
+    let (rows, cols) = (x.rows(), x.cols());
+    let mut remainder = x.clone();
+    let mut entries: Vec<(u32, u32, f32)> = Vec::new();
+
+    let (n_vecs, vec_len) = match axis {
+        Axis::Row => (rows, cols),
+        Axis::Col => (cols, rows),
+    };
+    let k = k_per_side(vec_len, s);
+    if k == 0 || s <= 0.0 {
+        return (SparseCoo { rows, cols, axis, ..Default::default() }, remainder);
+    }
+
+    // Element accessor for vector v, position p.
+    let coord = |v: usize, p: usize| -> (usize, usize) {
+        match axis {
+            Axis::Row => (v, p),
+            Axis::Col => (p, v),
+        }
+    };
+
+    let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(vec_len);
+    for v in 0..n_vecs {
+        scratch.clear();
+        for p in 0..vec_len {
+            let (i, j) = coord(v, p);
+            scratch.push((x.data()[i * cols + j], p as u32));
+        }
+        // Bottom k: k-th smallest partition.
+        scratch.select_nth_unstable_by(k - 1, |a, b| a.0.total_cmp(&b.0));
+        let bottom: Vec<u32> = scratch[..k].iter().map(|&(_, p)| p).collect();
+        // Top k among the rest (indices >= k after the partition).
+        let rest = &mut scratch[k..];
+        let rlen = rest.len();
+        if rlen > k {
+            rest.select_nth_unstable_by(rlen - k, |a, b| a.0.total_cmp(&b.0));
+        }
+        let top: Vec<u32> = rest[rlen.saturating_sub(k)..].iter().map(|&(_, p)| p).collect();
+
+        for p in bottom.into_iter().chain(top) {
+            let (i, j) = coord(v, p as usize);
+            let val = remainder.data()[i * cols + j];
+            entries.push((i as u32, j as u32, to_f16_precision(val)));
+            remainder.data_mut()[i * cols + j] = 0.0;
+        }
+    }
+
+    entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
+    let idx = entries.iter().map(|&(i, j, _)| (i, j)).collect();
+    let val = entries.iter().map(|&(_, _, v)| v).collect();
+    (SparseCoo { rows, cols, axis, idx, val }, remainder)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn extracts_expected_count() {
+        let mut r = Rng::new(20);
+        let x = Tensor::randn(&[100, 64], &mut r, 1.0);
+        let (s, _) = filter_outliers(&x, 0.02, Axis::Row);
+        // per row: k_per_side(64, 0.02) = round(0.64) = 1 per side -> 2 per row
+        assert_eq!(s.nnz(), 100 * 2);
+        let (s2, _) = filter_outliers(&x, 0.02, Axis::Col);
+        // per column: k_per_side(100, 0.02) = 1 -> 2 per column
+        assert_eq!(s2.nnz(), 64 * 2);
+    }
+
+    #[test]
+    fn zero_sparsity_is_noop() {
+        let mut r = Rng::new(21);
+        let x = Tensor::randn(&[10, 10], &mut r, 1.0);
+        let (s, rem) = filter_outliers(&x, 0.0, Axis::Row);
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(rem, x);
+    }
+
+    #[test]
+    fn reconstruction_is_exact_up_to_f16() {
+        let mut r = Rng::new(22);
+        let x = Tensor::randn(&[50, 32], &mut r, 2.0);
+        let (s, rem) = filter_outliers(&x, 0.1, Axis::Row);
+        let mut recon = rem.clone();
+        s.add_into(recon.data_mut());
+        for (a, b) in x.data().iter().zip(recon.data()) {
+            let tol = a.abs() * 5e-4 + 1e-6; // fp16 rounding of outlier values
+            assert!((a - b).abs() <= tol, "|{a}-{b}| > {tol}");
+        }
+    }
+
+    #[test]
+    fn extracts_true_extremes() {
+        // Plant one huge positive and one huge negative entry per row.
+        let mut r = Rng::new(23);
+        let mut x = Tensor::randn(&[8, 64], &mut r, 0.1);
+        for i in 0..8 {
+            x.row_mut(i)[3] = 100.0;
+            x.row_mut(i)[40] = -100.0;
+        }
+        let (s, rem) = filter_outliers(&x, 0.04, Axis::Row); // k=1 per side
+        assert_eq!(s.nnz(), 16);
+        for i in 0..8 {
+            assert_eq!(rem.row(i)[3], 0.0);
+            assert_eq!(rem.row(i)[40], 0.0);
+        }
+        // Remainder has tight range now.
+        for v in rem.data() {
+            assert!(v.abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn row_lookup_matches_dense() {
+        let mut r = Rng::new(24);
+        let x = Tensor::randn(&[30, 16], &mut r, 1.0);
+        let (s, _) = filter_outliers(&x, 0.2, Axis::Col);
+        let dense = s.to_dense();
+        let mut row = vec![0.0f32; 16];
+        for i in 0..30 {
+            row.fill(0.0);
+            s.add_row_into(i, &mut row);
+            assert_eq!(&row[..], dense.row(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn prop_remainder_has_no_entry_beyond_kept_range() {
+        prop::check(
+            |r| {
+                let (rows, cols) = prop::gen_shape(r, 40, 40);
+                Tensor::new(&[rows, cols], prop::gen_kv_like(r, rows * cols))
+            },
+            |x| {
+                let (s, rem) = filter_outliers(x, 0.1, Axis::Row);
+                let k = k_per_side(x.cols(), 0.1);
+                if k == 0 {
+                    return Ok(());
+                }
+                // For every row: every remaining |entry| must lie within the
+                // [min_kept, max_kept] envelope of that row's kept values.
+                for i in 0..x.rows() {
+                    let extracted: Vec<f32> = s
+                        .idx
+                        .iter()
+                        .zip(&s.val)
+                        .filter(|(&(r_, _), _)| r_ as usize == i)
+                        .map(|(_, &v)| v)
+                        .collect();
+                    prop_assert!(extracted.len() == 2 * k, "row {i}: {} != {}", extracted.len(), 2 * k);
+                    let max_pos = extracted.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let min_neg = extracted.iter().cloned().fold(f32::INFINITY, f32::min);
+                    for (j, &v) in rem.row(i).iter().enumerate() {
+                        if s.idx.binary_search(&(i as u32, j as u32)).is_ok() {
+                            continue; // zeroed position
+                        }
+                        prop_assert!(
+                            v <= max_pos + 1e-3 && v >= min_neg - 1e-3,
+                            "row {i} col {j}: {v} outside [{min_neg}, {max_pos}]"
+                        );
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn nbytes_accounting() {
+        let s = SparseCoo {
+            rows: 4,
+            cols: 4,
+            axis: Axis::Row,
+            idx: vec![(0, 0), (1, 1)],
+            val: vec![1.0, 2.0],
+        };
+        // 2 entries * (2B f16 + 2B u16) + (4 rows + 1) * 4B offsets.
+        assert_eq!(s.nbytes(), 2 * 4 + 5 * 4);
+    }
+}

@@ -1,0 +1,514 @@
+//! Uniform asymmetric quantization of KV matrices (the backbone `D̂`).
+//!
+//! Implements Eq. (2) of the paper for every grouping scheme evaluated:
+//!
+//! * **Per-token group-wise** (FlexGen): each row is split into groups of `g`
+//!   contiguous channels; one scale/zero pair per group.
+//! * **KIVI Key**: per-channel quantization with groups of `g` tokens within
+//!   each channel. **KIVI Value**: per-token with groups of `g` channels
+//!   (same layout as per-token group-wise).
+//! * **KCVT**: the paper's lite backbone — per-channel Key / per-token Value
+//!   with a *single* group spanning the whole vector (coarse per-vector
+//!   grouping; minimal scale/zero overhead).
+//!
+//! Codes are bit-packed into `u32` words (16×2-bit, 8×4-bit or 4×8-bit per
+//! word) in row-major element order, so the stored size is the real
+//! compressed size, not an estimate. Scales and zero-points are rounded
+//! through FP16 precision and accounted at 2 bytes each, exactly as the
+//! paper stores them.
+
+use crate::tensor::Tensor;
+use crate::util::f16::to_f16_precision;
+
+/// Axis a group runs along. `Row` = groups live inside a token vector
+/// (per-token schemes); `Col` = groups live inside a channel vector
+/// (per-channel schemes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    Row,
+    Col,
+}
+
+/// Group extent within a vector along the grouping axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupSize {
+    /// One group spans the entire vector (KCVT's per-vector grouping).
+    Full,
+    /// Fine-grained groups of `g` consecutive entries (FlexGen / KIVI).
+    Fixed(usize),
+}
+
+/// A complete quantization scheme: which axis vectors run along and how
+/// finely they are grouped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantScheme {
+    pub axis: Axis,
+    pub group: GroupSize,
+}
+
+impl QuantScheme {
+    /// FlexGen-style per-token group-wise quantization.
+    pub fn per_token_group(g: usize) -> Self {
+        QuantScheme { axis: Axis::Row, group: GroupSize::Fixed(g) }
+    }
+
+    /// KIVI grouping for the given KV kind.
+    pub fn kivi(kind: super::KvKind, g: usize) -> Self {
+        QuantScheme { axis: kind.axis(), group: GroupSize::Fixed(g) }
+    }
+
+    /// KCVT grouping (whole-vector) for the given KV kind.
+    pub fn kcvt(kind: super::KvKind) -> Self {
+        QuantScheme { axis: kind.axis(), group: GroupSize::Full }
+    }
+
+    /// Effective group length for a matrix of shape (rows, cols).
+    pub fn group_len(&self, rows: usize, cols: usize) -> usize {
+        let vec_len = match self.axis {
+            Axis::Row => cols,
+            Axis::Col => rows,
+        };
+        match self.group {
+            GroupSize::Full => vec_len,
+            GroupSize::Fixed(g) => g.min(vec_len),
+        }
+    }
+}
+
+/// Bit-packed quantized matrix plus per-group scale/zero metadata.
+#[derive(Debug, Clone)]
+pub struct QuantizedMatrix {
+    pub bits: u8,
+    pub rows: usize,
+    pub cols: usize,
+    pub scheme: QuantScheme,
+    /// Effective group length along the grouping axis.
+    group_len: usize,
+    /// Number of groups per vector (ceil division).
+    groups_per_vec: usize,
+    /// Bit-packed codes in row-major element order.
+    packed: Vec<u32>,
+    /// Per-group scale Δ (FP16-rounded, accounted 2 B each).
+    scales: Vec<f32>,
+    /// Per-group zero-point (group min; FP16-rounded, 2 B each).
+    zeros: Vec<f32>,
+}
+
+const WORD_BITS: usize = 32;
+
+#[inline]
+fn codes_per_word(bits: u8) -> usize {
+    WORD_BITS / bits as usize
+}
+
+impl QuantizedMatrix {
+    /// Quantize `x` at `bits` precision under `scheme`.
+    ///
+    /// Supported bit widths: 2, 4, 8 (powers of two that tile a u32 word).
+    pub fn quantize(x: &Tensor, bits: u8, scheme: QuantScheme) -> QuantizedMatrix {
+        assert!(
+            matches!(bits, 2 | 4 | 8),
+            "unsupported bit width {bits}; GEAR evaluates 2/4/8-bit"
+        );
+        let (rows, cols) = (x.rows(), x.cols());
+        let glen = scheme.group_len(rows, cols);
+        let vec_len = match scheme.axis {
+            Axis::Row => cols,
+            Axis::Col => rows,
+        };
+        let n_vecs = match scheme.axis {
+            Axis::Row => rows,
+            Axis::Col => cols,
+        };
+        let groups_per_vec = vec_len.div_ceil(glen);
+        let n_groups = n_vecs * groups_per_vec;
+
+        let mut scales = vec![0.0f32; n_groups];
+        let mut zeros = vec![0.0f32; n_groups];
+        let levels = ((1u32 << bits) - 1) as f32;
+
+        // Pass 1: per-group min/max.
+        let mut mins = vec![f32::INFINITY; n_groups];
+        let mut maxs = vec![f32::NEG_INFINITY; n_groups];
+        let data = x.data();
+        for i in 0..rows {
+            for j in 0..cols {
+                let gi = group_index(scheme.axis, groups_per_vec, glen, i, j);
+                let v = data[i * cols + j];
+                if v < mins[gi] {
+                    mins[gi] = v;
+                }
+                if v > maxs[gi] {
+                    maxs[gi] = v;
+                }
+            }
+        }
+        for gi in 0..n_groups {
+            // Degenerate groups (constant values) get scale 0; dequant
+            // reproduces the zero-point exactly.
+            let delta = (maxs[gi] - mins[gi]) / levels;
+            scales[gi] = to_f16_precision(delta);
+            zeros[gi] = to_f16_precision(mins[gi]);
+        }
+
+        // Pass 2: quantize + pack.
+        let cpw = codes_per_word(bits);
+        let n = rows * cols;
+        let mut packed = vec![0u32; n.div_ceil(cpw)];
+        for i in 0..rows {
+            for j in 0..cols {
+                let gi = group_index(scheme.axis, groups_per_vec, glen, i, j);
+                let v = data[i * cols + j];
+                let code = if scales[gi] > 0.0 {
+                    (((v - zeros[gi]) / scales[gi]).round().clamp(0.0, levels)) as u32
+                } else {
+                    0
+                };
+                let e = i * cols + j;
+                packed[e / cpw] |= code << ((e % cpw) * bits as usize);
+            }
+        }
+
+        QuantizedMatrix {
+            bits,
+            rows,
+            cols,
+            scheme,
+            group_len: glen,
+            groups_per_vec,
+            packed,
+            scales,
+            zeros,
+        }
+    }
+
+    /// Raw code of element (i, j).
+    #[inline]
+    pub fn code(&self, i: usize, j: usize) -> u32 {
+        let e = i * self.cols + j;
+        let cpw = codes_per_word(self.bits);
+        let mask = (1u32 << self.bits) - 1;
+        (self.packed[e / cpw] >> ((e % cpw) * self.bits as usize)) & mask
+    }
+
+    /// Dequantized value of element (i, j).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let gi = group_index(self.scheme.axis, self.groups_per_vec, self.group_len, i, j);
+        self.zeros[gi] + self.scales[gi] * self.code(i, j) as f32
+    }
+
+    /// Dequantize the whole matrix.
+    pub fn dequantize(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        self.dequantize_into(out.data_mut());
+        out
+    }
+
+    /// Dequantize into caller scratch (row-major, rows*cols long).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows * self.cols);
+        let mut plan = self.row_plan();
+        for i in 0..self.rows {
+            self.dequantize_row_planned(i, &mut plan, &mut out[i * self.cols..(i + 1) * self.cols]);
+        }
+    }
+
+    /// Dequantize row `i` into `out` (cols long). This is the decode hot
+    /// path: attention reads token rows.
+    ///
+    /// §Perf iteration 1: codes are unpacked word-at-a-time (16×2-bit /
+    /// 8×4-bit / 4×8-bit per u32) instead of per-element shifts, and the
+    /// per-column scale/zero lookups of the Col axis go through a small
+    /// gather loop free of div/mod in the inner body.
+    pub fn dequantize_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        // Row codes are contiguous: unpack them first, then apply affine.
+        self.unpack_row_codes(i, out);
+        match self.scheme.axis {
+            Axis::Row => {
+                let gbase = i * self.groups_per_vec;
+                for g in 0..self.groups_per_vec {
+                    let lo = g * self.group_len;
+                    let hi = ((g + 1) * self.group_len).min(self.cols);
+                    let scale = self.scales[gbase + g];
+                    let zero = self.zeros[gbase + g];
+                    for v in &mut out[lo..hi] {
+                        *v = zero + scale * *v;
+                    }
+                }
+            }
+            Axis::Col => {
+                let sub = i / self.group_len;
+                let gpv = self.groups_per_vec;
+                for (j, v) in out.iter_mut().enumerate() {
+                    let gi = j * gpv + sub;
+                    *v = self.zeros[gi] + self.scales[gi] * *v;
+                }
+            }
+        }
+    }
+
+    /// Create a reusable row-sweep plan (§Perf iteration 2): for Col-axis
+    /// schemes, per-column scale/zero vectors are gathered once per
+    /// sub-block of `group_len` consecutive rows instead of per element.
+    pub fn row_plan(&self) -> RowDequantPlan {
+        RowDequantPlan {
+            cur_sub: usize::MAX,
+            scale_row: vec![0.0; self.cols],
+            zero_row: vec![0.0; self.cols],
+        }
+    }
+
+    /// Dequantize row `i` using (and updating) a sweep plan. Equivalent to
+    /// [`Self::dequantize_row_into`] but amortizes Col-axis gathers across
+    /// consecutive rows — the fused-attention fast path.
+    pub fn dequantize_row_planned(&self, i: usize, plan: &mut RowDequantPlan, out: &mut [f32]) {
+        match self.scheme.axis {
+            Axis::Row => self.dequantize_row_into(i, out),
+            Axis::Col => {
+                let sub = i / self.group_len;
+                if sub != plan.cur_sub {
+                    let gpv = self.groups_per_vec;
+                    for j in 0..self.cols {
+                        let gi = j * gpv + sub;
+                        plan.scale_row[j] = self.scales[gi];
+                        plan.zero_row[j] = self.zeros[gi];
+                    }
+                    plan.cur_sub = sub;
+                }
+                self.unpack_row_codes(i, out);
+                for ((v, &s), &z) in
+                    out.iter_mut().zip(&plan.scale_row).zip(&plan.zero_row)
+                {
+                    *v = z + s * *v;
+                }
+            }
+        }
+    }
+
+    /// Unpack the raw integer codes of row `i` into `out` as f32.
+    #[inline]
+    fn unpack_row_codes(&self, i: usize, out: &mut [f32]) {
+        let bits = self.bits as usize;
+        let cpw = codes_per_word(self.bits);
+        let mask = (1u32 << bits) - 1;
+        let base = i * self.cols;
+        let mut j = 0usize;
+        // Head: align to a word boundary.
+        while j < self.cols && (base + j) % cpw != 0 {
+            let e = base + j;
+            out[j] = ((self.packed[e / cpw] >> ((e % cpw) * bits)) & mask) as f32;
+            j += 1;
+        }
+        // Body: whole words.
+        while j + cpw <= self.cols {
+            let mut w = self.packed[(base + j) / cpw];
+            for k in 0..cpw {
+                out[j + k] = (w & mask) as f32;
+                w >>= bits;
+            }
+            j += cpw;
+        }
+        // Tail.
+        while j < self.cols {
+            let e = base + j;
+            out[j] = ((self.packed[e / cpw] >> ((e % cpw) * bits)) & mask) as f32;
+            j += 1;
+        }
+    }
+
+    /// Worst-case per-entry quantization error: half a quantization step of
+    /// the entry's group (plus FP16 rounding of scale/zero, which is why the
+    /// bound below carries a small epsilon).
+    pub fn max_step(&self) -> f32 {
+        self.scales.iter().cloned().fold(0.0, f32::max)
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Real storage bytes: packed words + FP16 scale/zero pairs.
+    pub fn nbytes(&self) -> usize {
+        self.packed.len() * 4 + self.scales.len() * 2 + self.zeros.len() * 2
+    }
+
+    /// Bytes the same matrix would occupy in FP16.
+    pub fn fp16_bytes(&self) -> usize {
+        self.rows * self.cols * 2
+    }
+}
+
+/// Scratch state for a planned row sweep (see `QuantizedMatrix::row_plan`).
+#[derive(Debug, Clone)]
+pub struct RowDequantPlan {
+    cur_sub: usize,
+    scale_row: Vec<f32>,
+    zero_row: Vec<f32>,
+}
+
+/// Flat group index of element (i, j).
+///
+/// Row-axis: vector = row `i`, groups tile columns. Col-axis: vector =
+/// column `j`, groups tile rows. Group ids are vector-major.
+#[inline]
+fn group_index(axis: Axis, groups_per_vec: usize, glen: usize, i: usize, j: usize) -> usize {
+    match axis {
+        Axis::Row => i * groups_per_vec + j / glen,
+        Axis::Col => j * groups_per_vec + i / glen,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn randmat(r: &mut Rng, rows: usize, cols: usize) -> Tensor {
+        Tensor::new(&[rows, cols], prop::gen_kv_like(r, rows * cols))
+    }
+
+    #[test]
+    fn roundtrip_error_within_half_step() {
+        let mut r = Rng::new(10);
+        let x = randmat(&mut r, 32, 64);
+        for bits in [2u8, 4, 8] {
+            for scheme in [
+                QuantScheme::per_token_group(16),
+                QuantScheme::kcvt(crate::gear::KvKind::Key),
+                QuantScheme::kcvt(crate::gear::KvKind::Value),
+                QuantScheme::kivi(crate::gear::KvKind::Key, 8),
+            ] {
+                let q = QuantizedMatrix::quantize(&x, bits, scheme);
+                let y = q.dequantize();
+                let bound = q.max_step() * 0.5 + 1e-2; // + fp16 rounding slack
+                for (a, b) in x.data().iter().zip(y.data()) {
+                    assert!(
+                        (a - b).abs() <= bound,
+                        "bits={bits} scheme={scheme:?}: |{a}-{b}| > {bound}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eight_bit_nearly_exact() {
+        let mut r = Rng::new(11);
+        let x = Tensor::randn(&[16, 16], &mut r, 1.0);
+        let q = QuantizedMatrix::quantize(&x, 8, QuantScheme::per_token_group(16));
+        let y = q.dequantize();
+        let err = crate::tensor::ops::fro_dist(x.data(), y.data())
+            / crate::tensor::ops::fro_norm(x.data());
+        assert!(err < 0.01, "8-bit relative error {err}");
+    }
+
+    #[test]
+    fn finer_groups_do_not_hurt() {
+        // Smaller group size => error must not increase (paper's motivation
+        // for fine-grained grouping).
+        let mut r = Rng::new(12);
+        let x = randmat(&mut r, 64, 64);
+        let mut prev = f64::INFINITY;
+        for g in [64usize, 16, 4] {
+            let q = QuantizedMatrix::quantize(&x, 2, QuantScheme::per_token_group(g));
+            let err = crate::tensor::ops::fro_dist(x.data(), q.dequantize().data());
+            assert!(err <= prev * 1.02, "g={g}: err {err} > prev {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn constant_matrix_exact() {
+        let x = Tensor::filled(&[8, 8], 3.25);
+        let q = QuantizedMatrix::quantize(&x, 2, QuantScheme::per_token_group(4));
+        for v in q.dequantize().data() {
+            assert_eq!(*v, 3.25);
+        }
+    }
+
+    #[test]
+    fn packing_is_dense() {
+        let mut r = Rng::new(13);
+        let x = randmat(&mut r, 100, 64); // 6400 entries
+        let q2 = QuantizedMatrix::quantize(&x, 2, QuantScheme::per_token_group(64));
+        // 6400 * 2 bits = 1600 bytes of codes.
+        assert_eq!(q2.packed.len() * 4, 1600);
+        let q4 = QuantizedMatrix::quantize(&x, 4, QuantScheme::per_token_group(64));
+        assert_eq!(q4.packed.len() * 4, 3200);
+    }
+
+    #[test]
+    fn kcvt_overhead_smaller_than_kivi() {
+        let mut r = Rng::new(14);
+        let x = randmat(&mut r, 256, 128);
+        let kcvt = QuantizedMatrix::quantize(&x, 2, QuantScheme::kcvt(crate::gear::KvKind::Key));
+        let kivi =
+            QuantizedMatrix::quantize(&x, 2, QuantScheme::kivi(crate::gear::KvKind::Key, 32));
+        assert!(kcvt.n_groups() < kivi.n_groups());
+        assert!(kcvt.nbytes() < kivi.nbytes());
+    }
+
+    #[test]
+    fn row_dequant_matches_full() {
+        let mut r = Rng::new(15);
+        let x = randmat(&mut r, 33, 48);
+        for scheme in [
+            QuantScheme::per_token_group(16),
+            QuantScheme::kivi(crate::gear::KvKind::Key, 8),
+            QuantScheme::kcvt(crate::gear::KvKind::Key),
+        ] {
+            let q = QuantizedMatrix::quantize(&x, 4, scheme);
+            let full = q.dequantize();
+            let mut row = vec![0.0f32; 48];
+            for i in 0..33 {
+                q.dequantize_row_into(i, &mut row);
+                assert_eq!(&row[..], full.row(i), "scheme {scheme:?} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_bounded() {
+        prop::check(
+            |r| {
+                let (rows, cols) = prop::gen_shape(r, 48, 48);
+                let bits = *r.choose(&[2u8, 4, 8]);
+                let g = 1 + r.next_below(16) as usize;
+                (randmat(r, rows, cols), bits, g)
+            },
+            |(x, bits, g)| {
+                let q = QuantizedMatrix::quantize(x, *bits, QuantScheme::per_token_group(*g));
+                let y = q.dequantize();
+                let bound = q.max_step() * 0.5 + 1e-2;
+                for (a, b) in x.data().iter().zip(y.data()) {
+                    prop_assert!((a - b).abs() <= bound, "|{a}-{b}| > {bound}");
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_codes_within_levels() {
+        prop::check(
+            |r| {
+                let (rows, cols) = prop::gen_shape(r, 20, 20);
+                (randmat(r, rows, cols), *r.choose(&[2u8, 4]))
+            },
+            |(x, bits)| {
+                let q = QuantizedMatrix::quantize(x, *bits, QuantScheme::kcvt(crate::gear::KvKind::Value));
+                let max = (1u32 << bits) - 1;
+                for i in 0..x.rows() {
+                    for j in 0..x.cols() {
+                        prop_assert!(q.code(i, j) <= max, "code oob");
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

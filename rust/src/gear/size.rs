@@ -1,0 +1,218 @@
+//! Analytic KV-size model (the paper's "KV size %" columns and Fig 6's
+//! component breakdown).
+//!
+//! [`CompressedMatrix::nbytes`] measures what we actually stored; this module
+//! *predicts* sizes from configuration alone, so benches can sweep
+//! sequence-length/bit/rank grids (Table 9) without materializing tensors,
+//! and so the cache manager can plan admission against a byte budget before
+//! compressing anything.
+
+use super::compose::{Backbone, Method};
+
+/// Size breakdown of one compressed n×d KV matrix, in bytes.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SizeBreakdown {
+    /// Packed quantized codes.
+    pub quant_bytes: usize,
+    /// FP16 scales + zero-points.
+    pub meta_bytes: usize,
+    /// Sparse outliers: FP16 values + u32 index pairs.
+    pub sparse_bytes: usize,
+    /// FP16 low-rank factors.
+    pub lowrank_bytes: usize,
+    /// FP16 dense storage (FP16 method / streaming buffer tokens).
+    pub dense_bytes: usize,
+}
+
+impl SizeBreakdown {
+    pub fn total(&self) -> usize {
+        self.quant_bytes + self.meta_bytes + self.sparse_bytes + self.lowrank_bytes + self.dense_bytes
+    }
+
+    /// Fraction of the FP16 size of an n×d matrix.
+    pub fn frac_of_fp16(&self, n: usize, d: usize) -> f64 {
+        self.total() as f64 / (n * d * 2) as f64
+    }
+
+    pub fn add(&self, other: &SizeBreakdown) -> SizeBreakdown {
+        SizeBreakdown {
+            quant_bytes: self.quant_bytes + other.quant_bytes,
+            meta_bytes: self.meta_bytes + other.meta_bytes,
+            sparse_bytes: self.sparse_bytes + other.sparse_bytes,
+            lowrank_bytes: self.lowrank_bytes + other.lowrank_bytes,
+            dense_bytes: self.dense_bytes + other.dense_bytes,
+        }
+    }
+}
+
+/// Number of scale/zero groups for a backbone over an n-tokens × d-channels
+/// matrix. `is_key`: per-channel grouping (axis = tokens) vs per-token.
+pub fn n_groups(backbone: Backbone, is_key: bool, n: usize, d: usize) -> usize {
+    match backbone {
+        Backbone::PerTokenGroup(g) => n * d.div_ceil(g.min(d).max(1)),
+        Backbone::Kcvt => {
+            if is_key {
+                d // one group per channel
+            } else {
+                n // one group per token
+            }
+        }
+        Backbone::Kivi(g) => {
+            if is_key {
+                d * n.div_ceil(g.min(n).max(1))
+            } else {
+                n * d.div_ceil(g.min(d).max(1))
+            }
+        }
+    }
+}
+
+/// Predicted size of one n×d KV matrix compressed under `method`.
+///
+/// `is_key` selects the grouping axis; `n_heads` shapes the low-rank factors
+/// (`Σ_h (n + d_H) · r` FP16 entries).
+pub fn predict(method: Method, is_key: bool, n: usize, d: usize, n_heads: usize) -> SizeBreakdown {
+    let mut b = SizeBreakdown::default();
+    if n == 0 || d == 0 {
+        return b;
+    }
+    let quant = |bits: u8| (n * d * bits as usize).div_ceil(8);
+    let meta = |backbone: Backbone| n_groups(backbone, is_key, n, d) * 4; // scale+zero, 2 B each
+    let sparse = |s: f64| {
+        let vec_len = if is_key { n } else { d };
+        let n_vecs = if is_key { d } else { n };
+        let k = super::outlier::k_per_side(vec_len, s);
+        // FP16 value + u16 within-vector index per entry, u32 offsets per vector.
+        n_vecs * 2 * k * (2 + 2) + (n_vecs + 1) * 4
+    };
+    let lowrank = |r: usize| {
+        let dh = d / n_heads.max(1);
+        n_heads * (n * r.min(n).min(dh).max(1) + dh * r.min(n).min(dh).max(1)) * 2
+    };
+
+    match method {
+        Method::Fp16 => b.dense_bytes = n * d * 2,
+        Method::QuantOnly { bits, backbone } => {
+            b.quant_bytes = quant(bits);
+            b.meta_bytes = meta(backbone);
+        }
+        Method::OutlierAware { bits, backbone, s } => {
+            b.quant_bytes = quant(bits);
+            b.meta_bytes = meta(backbone);
+            b.sparse_bytes = sparse(s);
+        }
+        Method::GearL { bits, backbone, r } => {
+            b.quant_bytes = quant(bits);
+            b.meta_bytes = meta(backbone);
+            b.lowrank_bytes = lowrank(r);
+        }
+        Method::Gear { bits, backbone, s, r } => {
+            b.quant_bytes = quant(bits);
+            b.meta_bytes = meta(backbone);
+            b.sparse_bytes = sparse(s);
+            b.lowrank_bytes = lowrank(r);
+        }
+        Method::LowRankOnly { r } => b.lowrank_bytes = lowrank(r),
+        Method::SparseOnly { s } => b.sparse_bytes = sparse(s),
+    }
+    b
+}
+
+/// Predicted KV-size fraction for a full cache: K and V matrices of
+/// `n_layers` layers, each n×d, plus `buffer_tokens` FP16 tokens in the
+/// streaming buffer (counted for both K and V).
+pub fn predict_cache_frac(
+    method: Method,
+    n: usize,
+    d: usize,
+    n_layers: usize,
+    n_heads: usize,
+    buffer_tokens: usize,
+) -> f64 {
+    if n == 0 {
+        return 1.0;
+    }
+    let per_layer = predict(method, true, n, d, n_heads)
+        .add(&predict(method, false, n, d, n_heads));
+    let buffer = 2 * buffer_tokens.min(n) * d * 2; // K + V rows at FP16
+    let total = n_layers * (per_layer.total() + buffer);
+    let fp16 = n_layers * 2 * n * d * 2;
+    total as f64 / fp16 as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gear::compose::{compress, GearConfig};
+    use crate::gear::KvKind;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn predict_matches_measured() {
+        // The analytic model must agree with actually-stored bytes.
+        let mut rng = Rng::new(60);
+        let x = Tensor::randn(&[128, 64], &mut rng, 1.0);
+        for (m, kind, is_key) in [
+            (Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(32) }, KvKind::Key, true),
+            (Method::QuantOnly { bits: 4, backbone: Backbone::Kcvt }, KvKind::Value, false),
+            (Method::gear_default(2), KvKind::Key, true),
+            (Method::gear_l_default(4), KvKind::Value, false),
+            (Method::Fp16, KvKind::Key, true),
+            (Method::SparseOnly { s: 0.04 }, KvKind::Value, false),
+        ] {
+            let c = compress(&x, kind, &GearConfig::new(m, 4));
+            let p = predict(m, is_key, 128, 64, 4);
+            assert_eq!(c.nbytes(), p.total(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn fp16_fraction_is_one() {
+        let p = predict(Method::Fp16, true, 100, 64, 4);
+        assert!((p.frac_of_fp16(100, 64) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_bit_quant_fraction_near_eighth() {
+        // 2 bit / 16 bit = 12.5% + metadata.
+        let p = predict(
+            Method::QuantOnly { bits: 2, backbone: Backbone::Kcvt },
+            true,
+            1024,
+            128,
+            4,
+        );
+        let f = p.frac_of_fp16(1024, 128);
+        assert!(f > 0.125 && f < 0.14, "{f}");
+    }
+
+    #[test]
+    fn paper_ordering_of_method_sizes() {
+        // Table 1's Ave. KV size ordering at 2-bit:
+        // per-token/KIVI (21.7%) < GEAR-L (23.6%) < GEAR (27.6%).
+        let (n, d) = (1024, 128);
+        let kivi = predict(Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) }, true, n, d, 4)
+            .frac_of_fp16(n, d);
+        let gearl = predict(Method::gear_l_default(2), true, n, d, 4).frac_of_fp16(n, d);
+        let gear = predict(Method::gear_default(2), true, n, d, 4).frac_of_fp16(n, d);
+        assert!(kivi < gearl && gearl < gear, "{kivi} {gearl} {gear}");
+        // And magnitudes are in the paper's ballpark (< 35%).
+        assert!(gear < 0.35, "{gear}");
+    }
+
+    #[test]
+    fn cache_frac_includes_buffer() {
+        let m = Method::gear_default(2);
+        let without = predict_cache_frac(m, 1024, 128, 4, 4, 0);
+        let with = predict_cache_frac(m, 1024, 128, 4, 4, 64);
+        assert!(with > without);
+        assert!(with - without < 0.15);
+    }
+
+    #[test]
+    fn zero_tokens_degenerate() {
+        assert_eq!(predict(Method::gear_default(2), true, 0, 64, 4).total(), 0);
+        assert_eq!(predict_cache_frac(Method::Fp16, 0, 64, 4, 4, 0), 1.0);
+    }
+}

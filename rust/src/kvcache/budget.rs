@@ -1,0 +1,141 @@
+//! Device-memory budget manager.
+//!
+//! Models the GPU memory constraint of the paper's efficiency study
+//! (Figures 3b/3c, Tables 6/7): a fixed byte budget shared by model weights
+//! and all live KV caches. The batcher consults [`MemoryBudget`] before
+//! admitting requests; `reserve`/`release` track real cache bytes as they
+//! grow and shrink.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Thread-safe byte budget with peak tracking.
+#[derive(Debug)]
+pub struct MemoryBudget {
+    capacity: usize,
+    used: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl MemoryBudget {
+    pub fn new(capacity: usize) -> Self {
+        MemoryBudget { capacity, used: AtomicUsize::new(0), peak: AtomicUsize::new(0) }
+    }
+
+    /// Unlimited budget (accuracy experiments).
+    pub fn unlimited() -> Self {
+        Self::new(usize::MAX)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn available(&self) -> usize {
+        self.capacity.saturating_sub(self.used())
+    }
+
+    /// Try to reserve `bytes`; returns false if it would exceed capacity.
+    pub fn try_reserve(&self, bytes: usize) -> bool {
+        let mut cur = self.used.load(Ordering::Relaxed);
+        loop {
+            let Some(next) = cur.checked_add(bytes) else { return false };
+            if next > self.capacity {
+                return false;
+            }
+            match self.used.compare_exchange_weak(cur, next, Ordering::SeqCst, Ordering::Relaxed) {
+                Ok(_) => {
+                    self.peak.fetch_max(next, Ordering::SeqCst);
+                    return true;
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Release previously-reserved bytes.
+    pub fn release(&self, bytes: usize) {
+        let prev = self.used.fetch_sub(bytes, Ordering::SeqCst);
+        debug_assert!(prev >= bytes, "releasing {bytes} > used {prev}");
+    }
+
+    /// Adjust a reservation from `old` to `new` bytes (cache growth).
+    /// Returns false (and leaves the reservation at `old`) on overflow.
+    pub fn adjust(&self, old: usize, new: usize) -> bool {
+        if new >= old {
+            self.try_reserve(new - old)
+        } else {
+            self.release(old - new);
+            true
+        }
+    }
+
+    pub fn reset_peak(&self) {
+        self.peak.store(self.used(), Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_and_release() {
+        let b = MemoryBudget::new(100);
+        assert!(b.try_reserve(60));
+        assert!(!b.try_reserve(50));
+        assert!(b.try_reserve(40));
+        assert_eq!(b.used(), 100);
+        b.release(100);
+        assert_eq!(b.used(), 0);
+        assert_eq!(b.peak(), 100);
+    }
+
+    #[test]
+    fn adjust_grows_and_shrinks() {
+        let b = MemoryBudget::new(100);
+        assert!(b.try_reserve(10));
+        assert!(b.adjust(10, 50));
+        assert_eq!(b.used(), 50);
+        assert!(b.adjust(50, 20));
+        assert_eq!(b.used(), 20);
+        assert!(!b.adjust(20, 200));
+        assert_eq!(b.used(), 20);
+    }
+
+    #[test]
+    fn concurrent_reservations_never_exceed_capacity() {
+        use std::sync::Arc;
+        let b = Arc::new(MemoryBudget::new(1000));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0usize;
+                for _ in 0..1000 {
+                    if b.try_reserve(7) {
+                        got += 7;
+                    }
+                }
+                got
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total <= 1000);
+        assert_eq!(b.used(), total);
+        assert!(b.peak() <= 1000);
+    }
+
+    #[test]
+    fn unlimited_never_rejects() {
+        let b = MemoryBudget::unlimited();
+        assert!(b.try_reserve(usize::MAX / 2));
+    }
+}

@@ -1,0 +1,177 @@
+//! FP16 dense per-layer KV cache — the paper's uncompressed baseline.
+//!
+//! Values are rounded through FP16 precision on store and accounted at
+//! 2 bytes per entry, matching the FP16-cache baseline of the paper.
+
+use crate::gear::size::SizeBreakdown;
+use crate::tensor::ops::dot;
+use crate::tensor::Tensor;
+use crate::util::f16::to_f16_precision;
+
+use super::LayerKv;
+
+pub struct DenseLayerKv {
+    d: usize,
+    /// Row-major n×d, FP16-rounded.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    n: usize,
+    /// Scratch reused across attend calls (no allocation in the hot loop).
+    scores: Vec<f32>,
+}
+
+impl DenseLayerKv {
+    pub fn new(d: usize) -> Self {
+        DenseLayerKv { d, k: Vec::new(), v: Vec::new(), n: 0, scores: Vec::new() }
+    }
+
+    fn push_rows(&mut self, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len() % self.d, 0);
+        self.k.extend(k.iter().map(|&x| to_f16_precision(x)));
+        self.v.extend(v.iter().map(|&x| to_f16_precision(x)));
+        self.n += k.len() / self.d;
+    }
+
+    /// Direct row access for analysis tools.
+    pub fn k_row(&self, t: usize) -> &[f32] {
+        &self.k[t * self.d..(t + 1) * self.d]
+    }
+}
+
+impl LayerKv for DenseLayerKv {
+    fn ingest_prefill(&mut self, k: Tensor, v: Tensor, _attn_mass: Option<&[f32]>) {
+        assert_eq!(k.cols(), self.d);
+        assert_eq!(k.shape(), v.shape());
+        self.push_rows(k.data(), v.data());
+    }
+
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.d);
+        assert_eq!(v.len(), self.d);
+        self.push_rows(k, v);
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn attend(&mut self, q: &[f32], n_heads: usize, out: &mut [f32]) {
+        let (n, d) = (self.n, self.d);
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(out.len(), d);
+        let dh = d / n_heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        self.scores.clear();
+        self.scores.resize(n * n_heads, 0.0);
+        for t in 0..n {
+            let krow = &self.k[t * d..(t + 1) * d];
+            for h in 0..n_heads {
+                self.scores[t * n_heads + h] =
+                    scale * dot(&q[h * dh..(h + 1) * dh], &krow[h * dh..(h + 1) * dh]);
+            }
+        }
+        // Per-head softmax over the token axis (stride n_heads).
+        softmax_heads(&mut self.scores, n, n_heads);
+
+        out.fill(0.0);
+        for t in 0..n {
+            let vrow = &self.v[t * d..(t + 1) * d];
+            for h in 0..n_heads {
+                let p = self.scores[t * n_heads + h];
+                crate::tensor::ops::axpy(p, &vrow[h * dh..(h + 1) * dh], &mut out[h * dh..(h + 1) * dh]);
+            }
+        }
+    }
+
+    fn nbytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 2
+    }
+
+    fn breakdown(&self) -> SizeBreakdown {
+        SizeBreakdown { dense_bytes: self.nbytes(), ..Default::default() }
+    }
+}
+
+/// Softmax over the token axis for interleaved multi-head scores
+/// (`s[t*H + h]`), numerically stable per head.
+pub fn softmax_heads(scores: &mut [f32], n: usize, n_heads: usize) {
+    debug_assert_eq!(scores.len(), n * n_heads);
+    if n == 0 {
+        return;
+    }
+    // Gather per-head columns into a scratch-free two-pass computation.
+    for h in 0..n_heads {
+        let mut max = f32::NEG_INFINITY;
+        for t in 0..n {
+            max = max.max(scores[t * n_heads + h]);
+        }
+        let mut sum = 0.0f32;
+        for t in 0..n {
+            let e = (scores[t * n_heads + h] - max).exp();
+            scores[t * n_heads + h] = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for t in 0..n {
+            scores[t * n_heads + h] *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn attend_single_token_returns_its_value() {
+        let mut c = DenseLayerKv::new(8);
+        let k = vec![1.0f32; 8];
+        let v: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        c.append(&k, &v);
+        let mut out = vec![0.0f32; 8];
+        c.attend(&[0.5; 8], 2, &mut out);
+        // Softmax over one token = 1 -> out == v (up to fp16 rounding).
+        for (o, vv) in out.iter().zip(&v) {
+            assert!((o - vv).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn attention_weights_favor_aligned_key() {
+        let mut c = DenseLayerKv::new(4);
+        // token 0 key aligned with query, token 1 anti-aligned.
+        c.append(&[10.0, 0.0, 10.0, 0.0], &[1.0, 1.0, 1.0, 1.0]);
+        c.append(&[-10.0, 0.0, -10.0, 0.0], &[-1.0, -1.0, -1.0, -1.0]);
+        let mut out = vec![0.0f32; 4];
+        c.attend(&[10.0, 0.0, 10.0, 0.0], 1, &mut out);
+        for o in &out {
+            assert!(*o > 0.99, "{out:?}");
+        }
+    }
+
+    #[test]
+    fn prefill_then_append_consistent() {
+        let mut rng = Rng::new(80);
+        let d = 16;
+        let k = Tensor::randn(&[5, d], &mut rng, 1.0);
+        let v = Tensor::randn(&[5, d], &mut rng, 1.0);
+        let mut c = DenseLayerKv::new(d);
+        c.ingest_prefill(k.clone(), v.clone(), None);
+        assert_eq!(c.len(), 5);
+        c.append(k.row(0), v.row(0));
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.nbytes(), 2 * 6 * d * 2);
+    }
+
+    #[test]
+    fn softmax_heads_normalizes_each_head() {
+        let mut s = vec![0.1f32, 5.0, 0.2, -3.0, 0.3, 0.0]; // n=3, H=2
+        softmax_heads(&mut s, 3, 2);
+        let h0: f32 = (0..3).map(|t| s[t * 2]).sum();
+        let h1: f32 = (0..3).map(|t| s[t * 2 + 1]).sum();
+        assert!((h0 - 1.0).abs() < 1e-5);
+        assert!((h1 - 1.0).abs() < 1e-5);
+    }
+}

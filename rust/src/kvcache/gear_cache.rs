@@ -1,0 +1,329 @@
+//! Compressed per-layer KV cache with the paper's streaming-buffer strategy
+//! (§3 "Streaming Buffer", Algorithm 1).
+//!
+//! Layout per layer: a list of immutable compressed *segments* plus a small
+//! FP16 ring of recent tokens (the buffer `B`, capacity `n_b`). Prefill
+//! compresses the whole prompt at rank `r_p`; during decoding, every `n_b`
+//! appended tokens are compressed as one chunk at rank `r_g` (the paper uses
+//! r_p = 4, r_g = 2). Attention runs fused against every segment (see
+//! `gear::attend`) and dense against the buffer.
+
+use crate::gear::compose::{compress, CompressedMatrix, GearConfig, Method};
+use crate::gear::size::SizeBreakdown;
+use crate::gear::KvKind;
+use crate::tensor::ops::dot;
+use crate::tensor::Tensor;
+use crate::util::f16::to_f16_precision;
+
+use super::dense::softmax_heads;
+use super::LayerKv;
+
+pub struct GearLayerKv {
+    d: usize,
+    n_heads: usize,
+    method: Method,
+    buffer_cap: usize,
+    prefill_rank: usize,
+    decode_rank: usize,
+    /// Compressed segments, oldest first. K and V stay index-aligned.
+    seg_k: Vec<CompressedMatrix>,
+    seg_v: Vec<CompressedMatrix>,
+    /// FP16-rounded buffer rows (row-major, up to buffer_cap × d).
+    buf_k: Vec<f32>,
+    buf_v: Vec<f32>,
+    buf_n: usize,
+    /// Total tokens across segments (excluding buffer).
+    seg_tokens: usize,
+    /// Scratch for attend (scores across all tokens), reused.
+    scores: Vec<f32>,
+}
+
+impl GearLayerKv {
+    pub fn new(
+        d: usize,
+        n_heads: usize,
+        method: Method,
+        buffer: usize,
+        prefill_rank: usize,
+        decode_rank: usize,
+    ) -> Self {
+        assert!(!method.is_fp16(), "use DenseLayerKv for FP16");
+        GearLayerKv {
+            d,
+            n_heads,
+            method,
+            buffer_cap: buffer.max(1),
+            prefill_rank,
+            decode_rank,
+            seg_k: Vec::new(),
+            seg_v: Vec::new(),
+            buf_k: Vec::new(),
+            buf_v: Vec::new(),
+            buf_n: 0,
+            seg_tokens: 0,
+            scores: Vec::new(),
+        }
+    }
+
+    /// Method with rank overridden for the given phase (prefill vs decode).
+    fn method_with_rank(&self, rank: usize) -> Method {
+        match self.method {
+            Method::GearL { bits, backbone, .. } if rank > 0 => {
+                Method::GearL { bits, backbone, r: rank }
+            }
+            Method::Gear { bits, backbone, s, .. } if rank > 0 => {
+                Method::Gear { bits, backbone, s, r: rank }
+            }
+            m => m,
+        }
+    }
+
+    fn compress_chunk(&mut self, k: Tensor, v: Tensor, rank: usize) {
+        let m = self.method_with_rank(rank);
+        let cfg = GearConfig::new(m, self.n_heads);
+        let ck = compress(&k, KvKind::Key, &cfg);
+        let cv = compress(&v, KvKind::Value, &cfg);
+        self.seg_tokens += k.rows();
+        self.seg_k.push(ck);
+        self.seg_v.push(cv);
+    }
+
+    /// Force-compress whatever is in the buffer (used by tests/analysis;
+    /// the engine lets the cadence do it).
+    pub fn flush_buffer(&mut self) {
+        if self.buf_n == 0 {
+            return;
+        }
+        let k = Tensor::new(&[self.buf_n, self.d], std::mem::take(&mut self.buf_k));
+        let v = Tensor::new(&[self.buf_n, self.d], std::mem::take(&mut self.buf_v));
+        self.buf_n = 0;
+        self.compress_chunk(k, v, self.decode_rank);
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.seg_k.len()
+    }
+
+    pub fn buffered_tokens(&self) -> usize {
+        self.buf_n
+    }
+}
+
+impl LayerKv for GearLayerKv {
+    fn ingest_prefill(&mut self, k: Tensor, v: Tensor, _attn_mass: Option<&[f32]>) {
+        assert_eq!(k.cols(), self.d);
+        assert_eq!(k.shape(), v.shape());
+        self.compress_chunk(k, v, self.prefill_rank);
+    }
+
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.d);
+        assert_eq!(v.len(), self.d);
+        self.buf_k.extend(k.iter().map(|&x| to_f16_precision(x)));
+        self.buf_v.extend(v.iter().map(|&x| to_f16_precision(x)));
+        self.buf_n += 1;
+        if self.buf_n >= self.buffer_cap {
+            self.flush_buffer();
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.seg_tokens + self.buf_n
+    }
+
+    fn attend(&mut self, q: &[f32], n_heads: usize, out: &mut [f32]) {
+        let d = self.d;
+        debug_assert_eq!(n_heads, self.n_heads);
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(out.len(), d);
+        let dh = d / n_heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let total = self.len();
+
+        self.scores.clear();
+        self.scores.resize(total * n_heads, 0.0);
+
+        // Scores: fused against each compressed K segment, dense against buffer.
+        let mut off = 0usize;
+        for seg in &self.seg_k {
+            seg.scores_into(q, n_heads, scale, &mut self.scores[off * n_heads..(off + seg.rows) * n_heads]);
+            off += seg.rows;
+        }
+        for t in 0..self.buf_n {
+            let krow = &self.buf_k[t * d..(t + 1) * d];
+            for h in 0..n_heads {
+                self.scores[(off + t) * n_heads + h] =
+                    scale * dot(&q[h * dh..(h + 1) * dh], &krow[h * dh..(h + 1) * dh]);
+            }
+        }
+
+        softmax_heads(&mut self.scores, total, n_heads);
+
+        // Weighted value sum, fused per segment.
+        out.fill(0.0);
+        let mut off = 0usize;
+        for seg in &self.seg_v {
+            seg.weighted_sum_into(
+                &self.scores[off * n_heads..(off + seg.rows) * n_heads],
+                n_heads,
+                out,
+            );
+            off += seg.rows;
+        }
+        for t in 0..self.buf_n {
+            let vrow = &self.buf_v[t * d..(t + 1) * d];
+            for h in 0..n_heads {
+                let p = self.scores[(off + t) * n_heads + h];
+                crate::tensor::ops::axpy(p, &vrow[h * dh..(h + 1) * dh], &mut out[h * dh..(h + 1) * dh]);
+            }
+        }
+    }
+
+    fn nbytes(&self) -> usize {
+        let segs: usize = self.seg_k.iter().chain(&self.seg_v).map(|s| s.nbytes()).sum();
+        segs + (self.buf_k.len() + self.buf_v.len()) * 2
+    }
+
+    fn breakdown(&self) -> SizeBreakdown {
+        let mut b = SizeBreakdown::default();
+        for seg in self.seg_k.iter().chain(&self.seg_v) {
+            if let Some(q) = &seg.quant {
+                b.quant_bytes += q.nbytes() - q.n_groups() * 4;
+                b.meta_bytes += q.n_groups() * 4;
+            }
+            if let Some(sp) = &seg.sparse {
+                b.sparse_bytes += sp.nbytes();
+            }
+            if let Some(lr) = &seg.lowrank {
+                b.lowrank_bytes += lr.nbytes();
+            }
+            if let Some(dn) = &seg.dense {
+                b.dense_bytes += dn.len() * 2;
+            }
+        }
+        b.dense_bytes += (self.buf_k.len() + self.buf_v.len()) * 2;
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::dense::DenseLayerKv;
+    use crate::util::rng::Rng;
+
+    fn fill(rng: &mut Rng, n: usize, d: usize) -> (Tensor, Tensor) {
+        (Tensor::randn(&[n, d], rng, 1.0), Tensor::randn(&[n, d], rng, 1.0))
+    }
+
+    #[test]
+    fn buffer_flush_cadence() {
+        let mut c = GearLayerKv::new(16, 2, Method::gear_default(4), 4, 4, 2);
+        let mut rng = Rng::new(90);
+        let (k, v) = fill(&mut rng, 1, 16);
+        for i in 1..=9 {
+            c.append(k.row(0), v.row(0));
+            assert_eq!(c.len(), i);
+        }
+        // 9 appends with n_b=4: two flushes (at 4 and 8), 1 buffered.
+        assert_eq!(c.n_segments(), 2);
+        assert_eq!(c.buffered_tokens(), 1);
+    }
+
+    #[test]
+    fn prefill_compresses_immediately() {
+        let mut c = GearLayerKv::new(32, 4, Method::gear_default(2), 20, 4, 2);
+        let mut rng = Rng::new(91);
+        let (k, v) = fill(&mut rng, 64, 32);
+        c.ingest_prefill(k, v, None);
+        assert_eq!(c.n_segments(), 1);
+        assert_eq!(c.buffered_tokens(), 0);
+        assert_eq!(c.len(), 64);
+        // Compressed well below FP16.
+        assert!(c.nbytes() < 2 * 64 * 32 * 2);
+    }
+
+    #[test]
+    fn attend_matches_dense_cache_closely_at_8bit() {
+        // 8-bit GEAR attention ≈ FP16 attention on the same tokens.
+        let mut rng = Rng::new(92);
+        let (d, h, n) = (32, 4, 48);
+        let (k, v) = fill(&mut rng, n, d);
+        let mut dense = DenseLayerKv::new(d);
+        dense.ingest_prefill(k.clone(), v.clone(), None);
+        let mut gear = GearLayerKv::new(
+            d,
+            h,
+            Method::Gear { bits: 8, backbone: crate::gear::compose::Backbone::Kivi(16), s: 0.02, r: 4 },
+            20,
+            4,
+            2,
+        );
+        gear.ingest_prefill(k, v, None);
+
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut o1 = vec![0.0f32; d];
+        let mut o2 = vec![0.0f32; d];
+        dense.attend(&q, h, &mut o1);
+        gear.attend(&q, h, &mut o2);
+        for (a, b) in o1.iter().zip(&o2) {
+            assert!((a - b).abs() < 0.05, "dense {a} vs gear {b}");
+        }
+    }
+
+    #[test]
+    fn gear_attend_beats_quant_only_at_2bit() {
+        // The error-reduction components must show up in attention outputs,
+        // not just matrix reconstruction.
+        let mut rng = Rng::new(93);
+        let (d, h, n) = (32, 4, 64);
+        // Heavy-tailed channel scales (Key regime).
+        let mut k = Tensor::zeros(&[n, d]);
+        for j in 0..d {
+            let s = (rng.normal_f32() * 1.2).exp();
+            for i in 0..n {
+                k.data_mut()[i * d + j] = rng.normal_f32() * s;
+            }
+        }
+        let v = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+
+        let mut exact = DenseLayerKv::new(d);
+        exact.ingest_prefill(k.clone(), v.clone(), None);
+        let mut o_exact = vec![0.0f32; d];
+        exact.attend(&q, h, &mut o_exact);
+
+        let bb = crate::gear::compose::Backbone::Kivi(16);
+        let mut run = |m: Method| {
+            let mut c = GearLayerKv::new(d, h, m, 20, 4, 2);
+            c.ingest_prefill(k.clone(), v.clone(), None);
+            let mut o = vec![0.0f32; d];
+            c.attend(&q, h, &mut o);
+            crate::tensor::ops::fro_dist(&o_exact, &o)
+        };
+        let e_quant = run(Method::QuantOnly { bits: 2, backbone: bb });
+        let e_gear = run(Method::Gear { bits: 2, backbone: bb, s: 0.02, r: 4 });
+        assert!(e_gear < e_quant, "gear {e_gear} !< quant {e_quant}");
+    }
+
+    #[test]
+    fn nbytes_tracks_buffer_and_segments() {
+        let mut c = GearLayerKv::new(16, 2, Method::gear_l_default(2), 4, 4, 2);
+        assert_eq!(c.nbytes(), 0);
+        let mut rng = Rng::new(94);
+        let (k, v) = fill(&mut rng, 1, 16);
+        c.append(k.row(0), v.row(0));
+        // One buffered token: 2 rows (K+V) × 16 × 2 bytes.
+        assert_eq!(c.nbytes(), 2 * 16 * 2);
+        for _ in 0..3 {
+            c.append(k.row(0), v.row(0));
+        }
+        assert_eq!(c.buffered_tokens(), 0);
+        assert!(c.nbytes() > 0);
+        let bd = c.breakdown();
+        assert_eq!(bd.total(), c.nbytes());
+        assert!(bd.quant_bytes > 0);
+        assert!(bd.lowrank_bytes > 0);
+        assert_eq!(bd.sparse_bytes, 0); // GEAR-L has no sparse component
+    }
+}

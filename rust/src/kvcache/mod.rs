@@ -1,0 +1,212 @@
+//! KV-cache management for the serving engine.
+//!
+//! Each request owns one [`RequestCache`] (a stack of per-layer caches); the
+//! engine's memory manager sums `nbytes()` across live requests against a
+//! device byte budget (the V100-16GB analogue — see DESIGN.md §3).
+//!
+//! Cache implementations:
+//! * [`dense::DenseLayerKv`] — FP16 baseline.
+//! * [`gear_cache::GearLayerKv`] — compressed segments + streaming buffer
+//!   (the paper's system).
+//! * [`crate::baselines::h2o::H2oLayerKv`] — token-dropping baseline.
+
+pub mod budget;
+pub mod dense;
+pub mod gear_cache;
+
+use crate::gear::size::SizeBreakdown;
+use crate::gear::Method;
+use crate::tensor::Tensor;
+
+/// Per-layer KV cache: stores K/V rows and answers fused attention queries.
+pub trait LayerKv: Send {
+    /// Ingest the prefill-phase K and V matrices (n × d each) in one shot.
+    /// `attn_mass`, when provided, is the accumulated attention mass each
+    /// prompt token received during prefill (length n) — score-tracking
+    /// caches (H₂O) use it to seed their heavy-hitter statistics.
+    fn ingest_prefill(&mut self, k: Tensor, v: Tensor, attn_mass: Option<&[f32]>);
+
+    /// Append one decoded token's k and v vectors (d each).
+    fn append(&mut self, k: &[f32], v: &[f32]);
+
+    /// Number of tokens currently represented (dropped tokens excluded).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Multi-head causal attention of query `q` (d, heads concatenated)
+    /// against all stored tokens; writes the context vector into `out` (d).
+    /// `&mut self` because score-tracking caches (H₂O) update statistics.
+    fn attend(&mut self, q: &[f32], n_heads: usize, out: &mut [f32]);
+
+    /// Current real storage bytes.
+    fn nbytes(&self) -> usize;
+
+    /// Component breakdown (Fig 6).
+    fn breakdown(&self) -> SizeBreakdown;
+}
+
+/// How to build caches for a request — the serving-level compression policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CacheSpec {
+    /// Uncompressed FP16 cache.
+    Fp16,
+    /// Compressed cache with the paper's streaming-buffer strategy.
+    Compressed {
+        method: Method,
+        /// Streaming buffer capacity n_b (compression cadence).
+        buffer: usize,
+        /// Rank for the prefill-phase compression (paper r_p = 4).
+        prefill_rank: usize,
+        /// Rank for each decoded buffer chunk (paper r_g = 2).
+        decode_rank: usize,
+    },
+    /// H₂O heavy-hitter token dropping at FP16.
+    H2o {
+        /// Fraction of tokens kept (paper evaluates 50%).
+        keep: f64,
+        /// Recent tokens always kept.
+        recent: usize,
+    },
+}
+
+impl CacheSpec {
+    /// The paper's standard GEAR serving configuration at `bits`.
+    pub fn gear(bits: u8) -> CacheSpec {
+        CacheSpec::Compressed {
+            method: Method::gear_default(bits),
+            buffer: 20,
+            prefill_rank: 4,
+            decode_rank: 2,
+        }
+    }
+
+    /// The paper's GEAR-L serving configuration at `bits`.
+    pub fn gear_l(bits: u8) -> CacheSpec {
+        CacheSpec::Compressed {
+            method: Method::gear_l_default(bits),
+            buffer: 20,
+            prefill_rank: 4,
+            decode_rank: 2,
+        }
+    }
+
+    /// A plain quantization serving configuration (KIVI-style buffering).
+    pub fn quant(method: Method, buffer: usize) -> CacheSpec {
+        CacheSpec::Compressed { method, buffer, prefill_rank: 0, decode_rank: 0 }
+    }
+
+    /// Parse a CLI spec string. Accepted forms: `fp16`, `gear-2`, `gear-4`,
+    /// `gear-l-2`, `gear-l-4`, `kivi-2`, `kivi-4`, `kcvt-4`, `kcvt-2`,
+    /// `per-token-2`, `per-token-4`, `h2o-50` (keep percentage).
+    pub fn parse(s: &str) -> Option<CacheSpec> {
+        use crate::gear::compose::Backbone;
+        let s = s.to_ascii_lowercase();
+        let bits = |suffix: &str| suffix.parse::<u8>().ok().filter(|b| matches!(b, 2 | 4 | 8));
+        Some(match s.as_str() {
+            "fp16" => CacheSpec::Fp16,
+            _ if s.starts_with("gear-l-") => CacheSpec::gear_l(bits(&s[7..])?),
+            _ if s.starts_with("gear-") => CacheSpec::gear(bits(&s[5..])?),
+            _ if s.starts_with("kivi-") => CacheSpec::quant(
+                Method::QuantOnly { bits: bits(&s[5..])?, backbone: Backbone::Kivi(64) },
+                64,
+            ),
+            _ if s.starts_with("kcvt-") => CacheSpec::quant(
+                Method::QuantOnly { bits: bits(&s[5..])?, backbone: Backbone::Kcvt },
+                20,
+            ),
+            _ if s.starts_with("per-token-") => CacheSpec::quant(
+                Method::QuantOnly { bits: bits(&s[10..])?, backbone: Backbone::PerTokenGroup(64) },
+                64,
+            ),
+            _ if s.starts_with("h2o-") => {
+                let pct: f64 = s[4..].parse().ok()?;
+                CacheSpec::H2o { keep: (pct / 100.0).clamp(0.01, 1.0), recent: 16 }
+            }
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            CacheSpec::Fp16 => "FP16".into(),
+            CacheSpec::Compressed { method, .. } => method.label(),
+            CacheSpec::H2o { keep, .. } => format!("H2O keep={:.0}%", keep * 100.0),
+        }
+    }
+
+    /// Build one layer's cache.
+    pub fn new_layer(&self, d_model: usize, n_heads: usize) -> Box<dyn LayerKv> {
+        match *self {
+            CacheSpec::Fp16 => Box::new(dense::DenseLayerKv::new(d_model)),
+            CacheSpec::Compressed { method, buffer, prefill_rank, decode_rank } => {
+                Box::new(gear_cache::GearLayerKv::new(
+                    d_model,
+                    n_heads,
+                    method,
+                    buffer,
+                    prefill_rank,
+                    decode_rank,
+                ))
+            }
+            CacheSpec::H2o { keep, recent } => {
+                Box::new(crate::baselines::h2o::H2oLayerKv::new(d_model, keep, recent))
+            }
+        }
+    }
+}
+
+/// All layers of one request's cache.
+pub struct RequestCache {
+    pub layers: Vec<Box<dyn LayerKv>>,
+}
+
+impl RequestCache {
+    pub fn new(spec: &CacheSpec, n_layers: usize, d_model: usize, n_heads: usize) -> Self {
+        RequestCache {
+            layers: (0..n_layers).map(|_| spec.new_layer(d_model, n_heads)).collect(),
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.layers.iter().map(|l| l.nbytes()).sum()
+    }
+
+    pub fn breakdown(&self) -> SizeBreakdown {
+        self.layers
+            .iter()
+            .map(|l| l.breakdown())
+            .fold(SizeBreakdown::default(), |acc, b| acc.add(&b))
+    }
+
+    /// Token count tracked by layer 0 (all layers stay in lockstep).
+    pub fn len(&self) -> usize {
+        self.layers.first().map(|l| l.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_labels() {
+        assert_eq!(CacheSpec::Fp16.label(), "FP16");
+        assert!(CacheSpec::gear(2).label().contains("GEAR"));
+        assert!(CacheSpec::H2o { keep: 0.5, recent: 8 }.label().contains("50%"));
+    }
+
+    #[test]
+    fn request_cache_builds_all_layers() {
+        let rc = RequestCache::new(&CacheSpec::Fp16, 4, 32, 4);
+        assert_eq!(rc.layers.len(), 4);
+        assert_eq!(rc.len(), 0);
+        assert!(rc.is_empty());
+    }
+}

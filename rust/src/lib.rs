@@ -1,0 +1,52 @@
+//! # gear-serve
+//!
+//! A serving framework with **GEAR KV-cache compression** as a first-class
+//! feature — a Rust + JAX + Pallas reproduction of
+//! *GEAR: An Efficient KV Cache Compression Recipe for Near-Lossless
+//! Generative Inference of LLM* (Kang et al., 2024).
+//!
+//! ## Layers
+//!
+//! * [`gear`] — the paper's contribution: composite KV compression
+//!   (`X ≈ D̂ + L + S`): ultra-low-bit quantized backbone, head-wise
+//!   low-rank residual via power iteration, sparse outliers.
+//! * [`kvcache`] — paged, byte-budgeted KV-cache manager with streaming
+//!   buffers; stores [`gear::CompressedMatrix`] segments.
+//! * [`model`] — tiny-GPT inference (weights trained at build time by the
+//!   Python layer) with pluggable KV caches.
+//! * [`coordinator`] — the serving engine: request queue, continuous
+//!   batcher, prefill/decode scheduler, metrics, TCP server.
+//! * [`runtime`] — PJRT (XLA) executable loading for the AOT-compiled JAX
+//!   graphs in `artifacts/` (Python never runs at serve time).
+//! * [`baselines`] — H₂O token dropping, for the paper's comparisons.
+//! * [`workload`] — synthetic task generators and scorers standing in for
+//!   GSM8k-CoT / LongBench (see DESIGN.md §3 for the substitution argument).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gear_serve::gear::compose::compress;
+//! use gear_serve::gear::{GearConfig, KvKind, Method};
+//! use gear_serve::tensor::Tensor;
+//! use gear_serve::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(0);
+//! let kv = Tensor::randn(&[256, 64], &mut rng, 1.0);
+//! let cfg = GearConfig::new(Method::gear_default(2), 4);
+//! let c = compress(&kv, KvKind::Key, &cfg);
+//! assert!(c.kv_size_frac() < 0.35);              // ~4x smaller than FP16
+//! let approx = c.reconstruct();                  // near-lossless
+//! assert_eq!(approx.shape(), kv.shape());
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod gear;
+pub mod kvcache;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+pub use gear::{CompressedMatrix, GearConfig, KvKind, Method};

@@ -1,0 +1,204 @@
+//! gear-serve CLI: the layer-3 leader entrypoint.
+//!
+//! ```text
+//! gear-serve info                                   artifact + model summary
+//! gear-serve serve  [--addr A] [--spec S] [--budget-mb N] [--max-new N]
+//! gear-serve eval   [--task hard|easy] [--spec S] [--n N] [--backend rust|xla]
+//! gear-serve demo   [--spec S]                      one-shot generation demo
+//! ```
+//!
+//! Spec strings: fp16, gear-2, gear-4, gear-l-2, gear-l-4, kivi-2, kivi-4,
+//! kcvt-4, per-token-4, h2o-50.
+
+use anyhow::{bail, Context, Result};
+
+use gear_serve::coordinator::engine::{Engine, EngineConfig};
+use gear_serve::coordinator::request::GenRequest;
+use gear_serve::coordinator::server;
+use gear_serve::kvcache::CacheSpec;
+use gear_serve::model::config::Tokenizer;
+use gear_serve::model::{Model, ModelWeights};
+use gear_serve::runtime::artifacts::Artifacts;
+use gear_serve::workload::tasks::{self, Task};
+
+/// Tiny flag parser: --key value pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {}", argv[i]))?;
+            let v = argv.get(i + 1).with_context(|| format!("--{k} needs a value"))?;
+            flags.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+}
+
+fn load_model() -> Result<Model> {
+    let path = Artifacts::default_dir().join("weights.bin");
+    let weights = ModelWeights::load(&path)
+        .with_context(|| format!("loading {} (run `make artifacts`)", path.display()))?;
+    Ok(Model::new(weights))
+}
+
+fn parse_spec(s: &str) -> Result<CacheSpec> {
+    CacheSpec::parse(s).with_context(|| format!("unknown cache spec {s:?}"))
+}
+
+fn cmd_info() -> Result<()> {
+    if !Artifacts::available() {
+        bail!("artifacts not built — run `make artifacts`");
+    }
+    let art = Artifacts::load_default()?;
+    println!("artifacts dir : {}", art.dir.display());
+    for key in ["vocab", "d_model", "n_layers", "n_heads", "max_seq"] {
+        println!("{key:<14}: {}", art.get(key).unwrap_or("?"));
+    }
+    println!("prefill buckets: {:?}", art.buckets("prefill_"));
+    println!("decode buckets : {:?}", art.buckets("decode_"));
+    let model = load_model()?;
+    let n_params: usize = {
+        let w = &model.weights;
+        let mut n = w.emb.len() + w.pos.len() + w.head.len() + w.lnf_g.len() + w.lnf_b.len();
+        for b in &w.blocks {
+            n += b.wq.len() + b.wk.len() + b.wv.len() + b.wo.len();
+            n += b.w1.len() + b.w2.len() + b.b1.len() + b.b2.len();
+            n += b.ln1_g.len() + b.ln1_b.len() + b.ln2_g.len() + b.ln2_b.len();
+        }
+        n
+    };
+    println!("parameters    : {n_params}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let spec = parse_spec(&args.get("spec", "gear-2"))?;
+    let addr = args.get("addr", "127.0.0.1:7777");
+    let budget_mb = args.get_usize("budget-mb", 0)?;
+    let max_new = args.get_usize("max-new", 64)?;
+    let model = load_model()?;
+    let mut cfg = EngineConfig::new(spec);
+    if budget_mb > 0 {
+        cfg = cfg.with_budget(budget_mb << 20);
+    }
+    println!("spec: {} | budget: {} | addr: {addr}", spec.label(),
+             if budget_mb > 0 { format!("{budget_mb} MiB") } else { "unlimited".into() });
+    let client = server::spawn_engine(model, cfg);
+    server::serve(&addr, client, max_new)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let spec = parse_spec(&args.get("spec", "gear-2"))?;
+    let n = args.get_usize("n", 50)?;
+    let task = match args.get("task", "hard").as_str() {
+        "hard" => Task::hard(),
+        "easy" => Task::easy(),
+        other => bail!("unknown task {other} (hard|easy)"),
+    };
+    let backend = args.get("backend", "rust");
+    let tok = Tokenizer::new();
+    let set = tasks::generate_set(task, n, 42);
+
+    let (mut correct, mut total_gen) = (0usize, 0usize);
+    match backend.as_str() {
+        "rust" => {
+            let model = load_model()?;
+            let mut engine = Engine::new(model, EngineConfig::new(spec));
+            for (i, inst) in set.iter().enumerate() {
+                engine.submit(
+                    GenRequest::greedy(i as u64, tok.encode_with_bos(&inst.prompt), 64)
+                        .with_newline_stop(),
+                );
+            }
+            let mut results = engine.run_to_completion();
+            results.sort_by_key(|r| r.id);
+            for (r, inst) in results.iter().zip(&set) {
+                total_gen += r.output.len();
+                correct += tasks::score(&r.text(), inst) as usize;
+            }
+            println!(
+                "throughput: {:.1} tok/s | peak cache: {:.2} MiB",
+                engine.metrics.throughput(),
+                engine.metrics.peak_cache_bytes as f64 / (1 << 20) as f64
+            );
+        }
+        "xla" => {
+            let xm = gear_serve::runtime::xla_model::XlaModel::load_default()?;
+            let nl = tok.encode("\n")[0];
+            for inst in &set {
+                let out = xm.generate_greedy(
+                    &tok.encode_with_bos(&inst.prompt),
+                    64,
+                    &[gear_serve::model::config::EOS, nl],
+                )?;
+                total_gen += out.len();
+                correct += tasks::score(&tok.decode(&out), inst) as usize;
+            }
+            println!("(xla backend serves FP16 dense cache; compression evals use --backend rust)");
+        }
+        other => bail!("unknown backend {other} (rust|xla)"),
+    }
+    println!(
+        "task {} | spec {} | accuracy {}/{} = {:.1}% | avg gen len {:.1}",
+        task.label(),
+        spec.label(),
+        correct,
+        n,
+        100.0 * correct as f64 / n as f64,
+        total_gen as f64 / n as f64,
+    );
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
+    let spec = parse_spec(&args.get("spec", "gear-2"))?;
+    let model = load_model()?;
+    let tok = Tokenizer::new();
+    let inst = tasks::generate_set(Task::hard(), 1, 7).remove(0);
+    println!("prompt:\n{}", inst.prompt);
+    let mut engine = Engine::new(model, EngineConfig::new(spec));
+    engine.submit(GenRequest::greedy(0, tok.encode_with_bos(&inst.prompt), 64).with_newline_stop());
+    let r = engine.run_to_completion().remove(0);
+    println!("generated: {}", r.text());
+    println!("expected : {}", inst.completion.trim_end());
+    println!("correct  : {}", tasks::score(&r.text(), &inst));
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            eprintln!("usage: gear-serve <info|serve|eval|demo> [--flags]");
+            std::process::exit(2);
+        }
+    };
+    let args = Args::parse(rest)?;
+    match cmd {
+        "info" => cmd_info(),
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "demo" => cmd_demo(&args),
+        other => bail!("unknown command {other}"),
+    }
+}

@@ -1,0 +1,158 @@
+//! Model hyperparameters and the character-level tokenizer.
+//!
+//! The vocabulary is shared verbatim with `python/compile/model.py`; both
+//! sides derive token ids from [`VOCAB_CHARS`] by position, so changing the
+//! string is a breaking format change for trained weights.
+
+/// Characters the tokenizer knows, in id order after the specials.
+pub const VOCAB_CHARS: &str = "0123456789abcdefghijklmnopqrstuvwxyz=+-*%;?> \n";
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const N_SPECIAL: u32 = 3;
+
+/// Total vocabulary size (specials + characters).
+pub const VOCAB_SIZE: usize = N_SPECIAL as usize + 46;
+
+/// Model shape hyperparameters. `default()` matches the build-time trained
+/// checkpoint in `artifacts/weights.bin`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig { vocab: VOCAB_SIZE, d_model: 128, n_layers: 4, n_heads: 4, max_seq: 640 }
+    }
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    pub fn mlp_dim(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// FP16 bytes of an uncompressed KV cache holding `n` tokens (K + V
+    /// across all layers) — the denominator of the paper's KV-size metric.
+    pub fn fp16_kv_bytes(&self, n: usize) -> usize {
+        self.n_layers * 2 * n * self.d_model * 2
+    }
+}
+
+/// Character-level tokenizer over [`VOCAB_CHARS`].
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    char_to_id: [u32; 128],
+    id_to_char: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut char_to_id = [u32::MAX; 128];
+        let mut id_to_char = vec!['\0'; VOCAB_SIZE];
+        for (i, c) in VOCAB_CHARS.chars().enumerate() {
+            let id = N_SPECIAL + i as u32;
+            char_to_id[c as usize] = id;
+            id_to_char[id as usize] = c;
+        }
+        Tokenizer { char_to_id, id_to_char }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+
+    /// Encode text; unknown characters panic (workload generators only emit
+    /// vocabulary characters).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.chars()
+            .map(|c| {
+                let id = self.char_to_id.get(c as usize).copied().unwrap_or(u32::MAX);
+                assert!(id != u32::MAX, "character {c:?} not in vocabulary");
+                id
+            })
+            .collect()
+    }
+
+    /// Encode with a leading BOS.
+    pub fn encode_with_bos(&self, text: &str) -> Vec<u32> {
+        let mut ids = Vec::with_capacity(text.len() + 1);
+        ids.push(BOS);
+        ids.extend(self.encode(text));
+        ids
+    }
+
+    /// Decode ids, skipping specials.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .filter(|&&id| id >= N_SPECIAL && (id as usize) < VOCAB_SIZE)
+            .map(|&id| self.id_to_char[id as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_size_consistent() {
+        assert_eq!(VOCAB_CHARS.chars().count(), VOCAB_SIZE - N_SPECIAL as usize);
+        assert_eq!(VOCAB_SIZE, 49);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let s = "a=3;b=7;c=a+b;c?\n>0";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn bos_prefix() {
+        let t = Tokenizer::new();
+        let ids = t.encode_with_bos("ab");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    #[should_panic(expected = "not in vocabulary")]
+    fn unknown_char_panics() {
+        Tokenizer::new().encode("A"); // uppercase not in vocab
+    }
+
+    #[test]
+    fn ids_are_stable() {
+        // Format compatibility with the Python side: '0' must be id 3.
+        let t = Tokenizer::new();
+        assert_eq!(t.encode("0"), vec![3]);
+        assert_eq!(t.encode("9"), vec![12]);
+        assert_eq!(t.encode("a"), vec![13]);
+        assert_eq!(t.encode("\n"), vec![48]);
+    }
+
+    #[test]
+    fn config_helpers() {
+        let c = ModelConfig::default();
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.mlp_dim(), 512);
+        assert_eq!(c.fp16_kv_bytes(100), 4 * 2 * 100 * 128 * 2);
+    }
+}

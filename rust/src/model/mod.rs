@@ -1,0 +1,15 @@
+//! Tiny-GPT inference.
+//!
+//! The model architecture is defined twice — here (Rust, the request path)
+//! and in `python/compile/model.py` (JAX, the build path that trains the
+//! weights and lowers the AOT graphs). The two must stay in lockstep; the
+//! golden-vector tests in `tests/` enforce logit parity.
+
+pub mod config;
+pub mod sampler;
+pub mod transformer;
+pub mod weights;
+
+pub use config::{ModelConfig, Tokenizer};
+pub use transformer::Model;
+pub use weights::ModelWeights;

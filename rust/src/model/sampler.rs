@@ -1,0 +1,103 @@
+//! Token sampling from logits.
+
+use crate::util::rng::Rng;
+
+/// Sampling configuration for a generation request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampler {
+    /// Argmax decoding (the paper's evaluation setting).
+    Greedy,
+    /// Softmax sampling at the given temperature (> 0).
+    Temperature(f32),
+    /// Top-k truncation then temperature sampling.
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        match *self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::Temperature(t) => {
+                assert!(t > 0.0);
+                sample_softmax(logits, t, None, rng)
+            }
+            Sampler::TopK { k, temperature } => {
+                assert!(temperature > 0.0 && k > 0);
+                sample_softmax(logits, temperature, Some(k), rng)
+            }
+        }
+    }
+}
+
+/// Index of the maximum logit (ties broken toward the lower id, so greedy
+/// decoding is fully deterministic).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+fn sample_softmax(logits: &[f32], temperature: f32, top_k: Option<usize>, rng: &mut Rng) -> u32 {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if let Some(k) = top_k {
+        idx.sort_unstable_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+        idx.truncate(k.min(logits.len()));
+    }
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> =
+        idx.iter().map(|&i| (((logits[i] - max) / temperature) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.next_f64() * total;
+    for (w, &i) in weights.iter().zip(&idx) {
+        u -= w;
+        if u <= 0.0 {
+            return i as u32;
+        }
+    }
+    *idx.last().unwrap() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0, 1.0]), 0); // tie -> lower id
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut rng = Rng::new(1);
+        let logits = [1.0f32, 1.0, 1.0];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[Sampler::Temperature(1.0).sample(&logits, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0f32, 4.0, 0.0];
+        for _ in 0..100 {
+            assert_eq!(Sampler::Temperature(0.05).sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::new(3);
+        let logits = [5.0f32, 4.9, -10.0, -10.0];
+        for _ in 0..100 {
+            let s = Sampler::TopK { k: 2, temperature: 1.0 }.sample(&logits, &mut rng);
+            assert!(s <= 1, "sampled {s} outside top-2");
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! Tiny-GPT forward passes over pluggable KV caches.
+//!
+//! Pre-LN decoder-only transformer:
+//! `x += Attn(LN1(x))`, `x += MLP(LN2(x))`, GELU MLP, learned positional
+//! embeddings, untied LM head. Must match `python/compile/model.py` exactly
+//! (golden parity tests in `tests/parity.rs`).
+//!
+//! Prefill runs dense causal attention with *exact* K/V (as a FlashAttention
+//! prefill would) and then hands the K/V matrices to the cache, which may
+//! compress them (GEAR) or prune them (H₂O). Decode steps attend through
+//! the cache only — compression error therefore affects decoding exactly as
+//! in the paper's system.
+
+use crate::kvcache::RequestCache;
+use crate::tensor::ops::{self, dot, gelu, layernorm, matmul, softmax_inplace};
+use crate::tensor::Tensor;
+
+use super::config::ModelConfig;
+use super::weights::ModelWeights;
+
+/// Weight matrices pre-transposed for GEMV dot-product form (decode path).
+struct BlockT {
+    wq_t: Tensor, // d × d, row j = column j of wq
+    wk_t: Tensor,
+    wv_t: Tensor,
+    wo_t: Tensor,
+    w1_t: Tensor, // 4d × d
+    w2_t: Tensor, // d × 4d
+}
+
+/// Inference model: weights + derived transposed copies.
+pub struct Model {
+    pub weights: ModelWeights,
+    blocks_t: Vec<BlockT>,
+    head_t: Tensor, // vocab × d
+}
+
+/// Output of a prefill pass.
+pub struct PrefillOutput {
+    /// Logits at the last prompt position (vocab).
+    pub last_logits: Vec<f32>,
+}
+
+impl Model {
+    pub fn new(weights: ModelWeights) -> Model {
+        let blocks_t = weights
+            .blocks
+            .iter()
+            .map(|b| BlockT {
+                wq_t: b.wq.t(),
+                wk_t: b.wk.t(),
+                wv_t: b.wv.t(),
+                wo_t: b.wo.t(),
+                w1_t: b.w1.t(),
+                w2_t: b.w2.t(),
+            })
+            .collect();
+        let head_t = weights.head.t();
+        Model { weights, blocks_t, head_t }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.weights.config
+    }
+
+    /// Embed `tokens` starting at position `pos0`.
+    fn embed(&self, tokens: &[u32], pos0: usize) -> Tensor {
+        let c = self.config();
+        let d = c.d_model;
+        let mut x = Tensor::zeros(&[tokens.len(), d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            assert!(t < c.vocab, "token id {t} out of vocab");
+            let p = pos0 + i;
+            assert!(p < c.max_seq, "position {p} exceeds max_seq {}", c.max_seq);
+            let row = x.row_mut(i);
+            for j in 0..d {
+                row[j] = self.weights.emb.row(t)[j] + self.weights.pos.row(p)[j];
+            }
+        }
+        x
+    }
+
+    /// Prefill the prompt, populating `cache`, and return last-position
+    /// logits. `cache` must be empty.
+    pub fn prefill(&self, tokens: &[u32], cache: &mut RequestCache) -> PrefillOutput {
+        assert!(!tokens.is_empty(), "empty prompt");
+        assert!(cache.is_empty(), "prefill into non-empty cache");
+        let c = self.config();
+        let (n, d, nh) = (tokens.len(), c.d_model, c.n_heads);
+        let dh = c.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let mut x = self.embed(tokens, 0);
+        let mut norm = Tensor::zeros(&[n, d]);
+
+        for (l, blk) in self.weights.blocks.iter().enumerate() {
+            // LN1
+            for i in 0..n {
+                layernorm(x.row(i), &blk.ln1_g, &blk.ln1_b, 1e-5, norm.row_mut(i));
+            }
+            let q = matmul(&norm, &blk.wq);
+            let k = matmul(&norm, &blk.wk);
+            let v = matmul(&norm, &blk.wv);
+
+            // Dense causal attention per head; also accumulate per-token
+            // attention mass for H₂O's prefill oracle.
+            let mut ctx = Tensor::zeros(&[n, d]);
+            let mut mass = vec![0.0f32; n];
+            let mut row_scores = vec![0.0f32; n];
+            for h in 0..nh {
+                let hs = h * dh;
+                for i in 0..n {
+                    let qrow = &q.row(i)[hs..hs + dh];
+                    for t in 0..=i {
+                        row_scores[t] = scale * dot(qrow, &k.row(t)[hs..hs + dh]);
+                    }
+                    softmax_inplace(&mut row_scores[..=i]);
+                    let crow = &mut ctx.row_mut(i)[hs..hs + dh];
+                    for t in 0..=i {
+                        let p = row_scores[t];
+                        mass[t] += p;
+                        ops::axpy(p, &v.row(t)[hs..hs + dh], crow);
+                    }
+                }
+            }
+            let proj = matmul(&ctx, &blk.wo);
+            for (xi, pi) in x.data_mut().iter_mut().zip(proj.data()) {
+                *xi += pi;
+            }
+
+            // Hand exact K/V to the cache (it compresses/prunes as configured).
+            cache.layers[l].ingest_prefill(k, v, Some(&mass));
+
+            // MLP
+            for i in 0..n {
+                layernorm(x.row(i), &blk.ln2_g, &blk.ln2_b, 1e-5, norm.row_mut(i));
+            }
+            let mut h1 = matmul(&norm, &blk.w1);
+            for i in 0..n {
+                for (j, hv) in h1.row_mut(i).iter_mut().enumerate() {
+                    *hv = gelu(*hv + blk.b1[j]);
+                }
+            }
+            let h2 = matmul(&h1, &blk.w2);
+            for i in 0..n {
+                for j in 0..d {
+                    x.row_mut(i)[j] += h2.row(i)[j] + blk.b2[j];
+                }
+            }
+        }
+
+        // Final LN + head for the last position only.
+        let mut last = vec![0.0f32; d];
+        layernorm(x.row(n - 1), &self.weights.lnf_g, &self.weights.lnf_b, 1e-5, &mut last);
+        PrefillOutput { last_logits: self.lm_head(&last) }
+    }
+
+    /// One decode step: embed `token` at `pos`, attend through the cache,
+    /// return logits.
+    pub fn decode_step(&self, token: u32, pos: usize, cache: &mut RequestCache) -> Vec<f32> {
+        let c = self.config();
+        let (d, nh) = (c.d_model, c.n_heads);
+        let x0 = self.embed(&[token], pos);
+        let mut x = x0.into_data();
+        let mut norm = vec![0.0f32; d];
+        let mut qkv = vec![0.0f32; 3 * d];
+        let mut ctx = vec![0.0f32; d];
+        let mut h1 = vec![0.0f32; c.mlp_dim()];
+
+        for (l, blk) in self.weights.blocks.iter().enumerate() {
+            let bt = &self.blocks_t[l];
+            layernorm(&x, &blk.ln1_g, &blk.ln1_b, 1e-5, &mut norm);
+            // GEMV via transposed weights (unit-stride dot products).
+            let (qs, rest) = qkv.split_at_mut(d);
+            let (ks, vs) = rest.split_at_mut(d);
+            gemv_t(&bt.wq_t, &norm, qs);
+            gemv_t(&bt.wk_t, &norm, ks);
+            gemv_t(&bt.wv_t, &norm, vs);
+
+            let layer = &mut cache.layers[l];
+            layer.append(ks, vs);
+            layer.attend(qs, nh, &mut ctx);
+
+            // x += ctx @ Wo
+            let mut proj = vec![0.0f32; d];
+            gemv_t(&bt.wo_t, &ctx, &mut proj);
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+
+            layernorm(&x, &blk.ln2_g, &blk.ln2_b, 1e-5, &mut norm);
+            gemv_t(&bt.w1_t, &norm, &mut h1);
+            for (j, hv) in h1.iter_mut().enumerate() {
+                *hv = gelu(*hv + blk.b1[j]);
+            }
+            let mut h2 = vec![0.0f32; d];
+            gemv_t(&bt.w2_t, &h1, &mut h2);
+            for j in 0..d {
+                x[j] += h2[j] + blk.b2[j];
+            }
+        }
+
+        layernorm(&x.clone(), &self.weights.lnf_g, &self.weights.lnf_b, 1e-5, &mut x);
+        self.lm_head(&x)
+    }
+
+    fn lm_head(&self, x: &[f32]) -> Vec<f32> {
+        let c = self.config();
+        let mut logits = vec![0.0f32; c.vocab];
+        gemv_t(&self.head_t, x, &mut logits);
+        logits
+    }
+}
+
+/// out[i] = dot(wt.row(i), x) — GEMV with a pre-transposed weight matrix.
+#[inline]
+fn gemv_t(wt: &Tensor, x: &[f32], out: &mut [f32]) {
+    let (rows, cols) = (wt.rows(), wt.cols());
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    let data = wt.data();
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot(&data[i * cols..(i + 1) * cols], x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::CacheSpec;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::ModelWeights;
+
+    fn tiny_model() -> Model {
+        let cfg = ModelConfig { vocab: 13, d_model: 32, n_layers: 2, n_heads: 4, max_seq: 64 };
+        Model::new(ModelWeights::random(cfg, 42))
+    }
+
+    fn new_cache(model: &Model, spec: &CacheSpec) -> RequestCache {
+        let c = model.config();
+        RequestCache::new(spec, c.n_layers, c.d_model, c.n_heads)
+    }
+
+    #[test]
+    fn prefill_then_decode_runs() {
+        let m = tiny_model();
+        let mut cache = new_cache(&m, &CacheSpec::Fp16);
+        let out = m.prefill(&[1, 3, 5, 7], &mut cache);
+        assert_eq!(out.last_logits.len(), 13);
+        assert!(out.last_logits.iter().all(|x| x.is_finite()));
+        assert_eq!(cache.len(), 4);
+        let logits = m.decode_step(2, 4, &mut cache);
+        assert_eq!(cache.len(), 5);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    /// Decoding token t+1 with an FP16 cache must match what a fresh prefill
+    /// of the extended prompt computes — the incremental path is consistent
+    /// with the batch path (up to fp16 cache rounding).
+    #[test]
+    fn incremental_matches_prefill() {
+        let m = tiny_model();
+        let prompt = [1u32, 3, 5, 7, 9, 2];
+
+        let mut c1 = new_cache(&m, &CacheSpec::Fp16);
+        let full = m.prefill(&prompt, &mut c1);
+
+        let mut c2 = new_cache(&m, &CacheSpec::Fp16);
+        let _ = m.prefill(&prompt[..5], &mut c2);
+        let step = m.decode_step(prompt[5], 5, &mut c2);
+
+        for (a, b) in full.last_logits.iter().zip(&step) {
+            assert!((a - b).abs() < 0.02, "prefill {a} vs incremental {b}");
+        }
+    }
+
+    #[test]
+    fn gear_cache_decoding_close_to_fp16_at_8bit() {
+        let m = tiny_model();
+        let prompt = [1u32, 3, 5, 7, 9, 2, 4, 6];
+        let spec8 = CacheSpec::Compressed {
+            method: crate::gear::Method::Gear {
+                bits: 8,
+                backbone: crate::gear::compose::Backbone::Kivi(8),
+                s: 0.02,
+                r: 4,
+            },
+            buffer: 4,
+            prefill_rank: 4,
+            decode_rank: 2,
+        };
+        let mut cf = new_cache(&m, &CacheSpec::Fp16);
+        let mut cg = new_cache(&m, &spec8);
+        m.prefill(&prompt, &mut cf);
+        m.prefill(&prompt, &mut cg);
+        let lf = m.decode_step(3, 8, &mut cf);
+        let lg = m.decode_step(3, 8, &mut cg);
+        let dist = crate::tensor::ops::fro_dist(&lf, &lg);
+        let norm = crate::tensor::ops::fro_norm(&lf);
+        assert!(dist / norm < 0.05, "8-bit logit deviation {}", dist / norm);
+    }
+
+    #[test]
+    fn h2o_cache_end_to_end() {
+        let m = tiny_model();
+        let mut c = new_cache(&m, &CacheSpec::H2o { keep: 0.5, recent: 2 });
+        m.prefill(&[1, 3, 5, 7, 9, 2, 4, 6], &mut c);
+        assert!(c.len() <= 4); // pruned to 50%
+        let logits = m.decode_step(3, 8, &mut c);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty cache")]
+    fn prefill_twice_panics() {
+        let m = tiny_model();
+        let mut c = new_cache(&m, &CacheSpec::Fp16);
+        m.prefill(&[1, 2], &mut c);
+        m.prefill(&[1, 2], &mut c);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of vocab")]
+    fn bad_token_panics() {
+        let m = tiny_model();
+        let mut c = new_cache(&m, &CacheSpec::Fp16);
+        m.prefill(&[99], &mut c);
+    }
+}

@@ -1,0 +1,337 @@
+//! Model checkpoint loading.
+//!
+//! Format (written by `python/compile/train.py`), little-endian:
+//!
+//! ```text
+//! magic   b"GSRV"
+//! version u32 (= 1)
+//! count   u32
+//! repeat count times:
+//!   name_len u32, name bytes (utf-8)
+//!   ndim     u32, dims u32 × ndim
+//!   data     f32 × prod(dims)
+//! ```
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::config::ModelConfig;
+
+pub const MAGIC: &[u8; 4] = b"GSRV";
+pub const VERSION: u32 = 1;
+
+/// One transformer block's parameters.
+#[derive(Debug, Clone)]
+pub struct BlockWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Tensor, // d × d
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Tensor, // d × 4d
+    pub b1: Vec<f32>,
+    pub w2: Tensor, // 4d × d
+    pub b2: Vec<f32>,
+}
+
+/// Full model parameters.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    pub emb: Tensor, // vocab × d
+    pub pos: Tensor, // max_seq × d
+    pub blocks: Vec<BlockWeights>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub head: Tensor, // d × vocab
+}
+
+/// Parse the raw tensor map from checkpoint bytes.
+pub fn read_tensor_map(bytes: &[u8]) -> Result<HashMap<String, Tensor>> {
+    let mut cur = std::io::Cursor::new(bytes);
+    let mut magic = [0u8; 4];
+    cur.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("bad magic {magic:?}, expected GSRV");
+    }
+    let version = read_u32(&mut cur)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let count = read_u32(&mut cur)? as usize;
+    let mut map = HashMap::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut cur)? as usize;
+        let mut name = vec![0u8; name_len];
+        cur.read_exact(&mut name).context("reading tensor name")?;
+        let name = String::from_utf8(name).context("tensor name utf-8")?;
+        let ndim = read_u32(&mut cur)? as usize;
+        if ndim > 4 {
+            bail!("tensor {name}: ndim {ndim} > 4");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut cur)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut data = vec![0.0f32; n];
+        let mut buf = vec![0u8; n * 4];
+        cur.read_exact(&mut buf).with_context(|| format!("reading {name} data"))?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        map.insert(name, Tensor::new(&dims, data));
+    }
+    Ok(map)
+}
+
+fn read_u32(cur: &mut std::io::Cursor<&[u8]>) -> Result<u32> {
+    let mut b = [0u8; 4];
+    cur.read_exact(&mut b).context("reading u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Serialize a tensor map in checkpoint format (used by tests and tools;
+/// the canonical writer is the Python trainer).
+pub fn write_tensor_map(tensors: &[(String, Tensor)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(t.ndim() as u32).to_le_bytes());
+        for &d in t.shape() {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in t.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+impl ModelWeights {
+    /// Load a checkpoint, inferring the configuration from tensor shapes.
+    pub fn load(path: &Path) -> Result<ModelWeights> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelWeights> {
+        let mut map = read_tensor_map(bytes)?;
+        fn take(map: &mut HashMap<String, Tensor>, name: &str) -> Result<Tensor> {
+            map.remove(name).with_context(|| format!("checkpoint missing tensor {name}"))
+        }
+        let take_vec = |t: Tensor| -> Vec<f32> { t.into_data() };
+
+        let emb = take(&mut map, "emb")?;
+        let pos = take(&mut map, "pos")?;
+        let head = take(&mut map, "head")?;
+        let (vocab, d_model) = (emb.rows(), emb.cols());
+        let max_seq = pos.rows();
+
+        let n_layers = (0..)
+            .take_while(|i| map.contains_key(&format!("blocks.{i}.attn.wq")))
+            .count();
+        if n_layers == 0 {
+            bail!("checkpoint has no transformer blocks");
+        }
+        // Head count is recorded as a 1-element tensor.
+        let n_heads = take(&mut map, "n_heads")?.data()[0] as usize;
+
+        let mut blocks = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let mut t = |suffix: &str| -> Result<Tensor> {
+                map.remove(&format!("blocks.{i}.{suffix}"))
+                    .with_context(|| format!("checkpoint missing blocks.{i}.{suffix}"))
+            };
+            blocks.push(BlockWeights {
+                ln1_g: take_vec(t("ln1.g")?),
+                ln1_b: take_vec(t("ln1.b")?),
+                wq: t("attn.wq")?,
+                wk: t("attn.wk")?,
+                wv: t("attn.wv")?,
+                wo: t("attn.wo")?,
+                ln2_g: take_vec(t("ln2.g")?),
+                ln2_b: take_vec(t("ln2.b")?),
+                w1: t("mlp.w1")?,
+                b1: take_vec(t("mlp.b1")?),
+                w2: t("mlp.w2")?,
+                b2: take_vec(t("mlp.b2")?),
+            });
+        }
+
+        let config = ModelConfig { vocab, d_model, n_layers, n_heads, max_seq };
+        let w = ModelWeights {
+            config,
+            emb,
+            pos,
+            blocks,
+            lnf_g: take_vec(take(&mut map, "ln_f.g")?),
+            lnf_b: take_vec(take(&mut map, "ln_f.b")?),
+            head,
+        };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Shape-check every tensor against the config.
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.config;
+        let d = c.d_model;
+        if d % c.n_heads != 0 {
+            bail!("d_model {d} not divisible by n_heads {}", c.n_heads);
+        }
+        let check = |name: &str, t: &Tensor, shape: &[usize]| -> Result<()> {
+            if t.shape() != shape {
+                bail!("{name}: shape {:?} != expected {shape:?}", t.shape());
+            }
+            Ok(())
+        };
+        check("emb", &self.emb, &[c.vocab, d])?;
+        check("pos", &self.pos, &[c.max_seq, d])?;
+        check("head", &self.head, &[d, c.vocab])?;
+        for (i, b) in self.blocks.iter().enumerate() {
+            check(&format!("blocks.{i}.wq"), &b.wq, &[d, d])?;
+            check(&format!("blocks.{i}.wk"), &b.wk, &[d, d])?;
+            check(&format!("blocks.{i}.wv"), &b.wv, &[d, d])?;
+            check(&format!("blocks.{i}.wo"), &b.wo, &[d, d])?;
+            check(&format!("blocks.{i}.w1"), &b.w1, &[d, c.mlp_dim()])?;
+            check(&format!("blocks.{i}.w2"), &b.w2, &[c.mlp_dim(), d])?;
+            for (n, v, want) in [
+                ("ln1.g", &b.ln1_g, d),
+                ("ln1.b", &b.ln1_b, d),
+                ("ln2.g", &b.ln2_g, d),
+                ("ln2.b", &b.ln2_b, d),
+                ("mlp.b1", &b.b1, c.mlp_dim()),
+                ("mlp.b2", &b.b2, d),
+            ] {
+                if v.len() != want {
+                    bail!("blocks.{i}.{n}: len {} != {want}", v.len());
+                }
+            }
+        }
+        if self.lnf_g.len() != d || self.lnf_b.len() != d {
+            bail!("ln_f size mismatch");
+        }
+        Ok(())
+    }
+
+    /// Random weights for tests / benches that don't need a trained model.
+    pub fn random(config: ModelConfig, seed: u64) -> ModelWeights {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let d = config.d_model;
+        let s = 0.08f32;
+        let block = |rng: &mut crate::util::rng::Rng| BlockWeights {
+            ln1_g: vec![1.0; d],
+            ln1_b: vec![0.0; d],
+            wq: Tensor::randn(&[d, d], rng, s),
+            wk: Tensor::randn(&[d, d], rng, s),
+            wv: Tensor::randn(&[d, d], rng, s),
+            wo: Tensor::randn(&[d, d], rng, s),
+            ln2_g: vec![1.0; d],
+            ln2_b: vec![0.0; d],
+            w1: Tensor::randn(&[d, config.mlp_dim()], rng, s),
+            b1: vec![0.0; config.mlp_dim()],
+            w2: Tensor::randn(&[config.mlp_dim(), d], rng, s),
+            b2: vec![0.0; d],
+        };
+        ModelWeights {
+            config,
+            emb: Tensor::randn(&[config.vocab, d], &mut rng, s),
+            pos: Tensor::randn(&[config.max_seq, d], &mut rng, s),
+            blocks: (0..config.n_layers).map(|_| block(&mut rng)).collect(),
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+            head: Tensor::randn(&[d, config.vocab], &mut rng, s),
+        }
+    }
+
+    /// Serialize to checkpoint bytes (for round-trip tests).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut tensors: Vec<(String, Tensor)> = vec![
+            ("emb".into(), self.emb.clone()),
+            ("pos".into(), self.pos.clone()),
+            ("head".into(), self.head.clone()),
+            ("n_heads".into(), Tensor::new(&[1], vec![self.config.n_heads as f32])),
+            ("ln_f.g".into(), Tensor::new(&[self.lnf_g.len()], self.lnf_g.clone())),
+            ("ln_f.b".into(), Tensor::new(&[self.lnf_b.len()], self.lnf_b.clone())),
+        ];
+        for (i, b) in self.blocks.iter().enumerate() {
+            let p = |s: &str| format!("blocks.{i}.{s}");
+            tensors.push((p("ln1.g"), Tensor::new(&[b.ln1_g.len()], b.ln1_g.clone())));
+            tensors.push((p("ln1.b"), Tensor::new(&[b.ln1_b.len()], b.ln1_b.clone())));
+            tensors.push((p("attn.wq"), b.wq.clone()));
+            tensors.push((p("attn.wk"), b.wk.clone()));
+            tensors.push((p("attn.wv"), b.wv.clone()));
+            tensors.push((p("attn.wo"), b.wo.clone()));
+            tensors.push((p("ln2.g"), Tensor::new(&[b.ln2_g.len()], b.ln2_g.clone())));
+            tensors.push((p("ln2.b"), Tensor::new(&[b.ln2_b.len()], b.ln2_b.clone())));
+            tensors.push((p("mlp.w1"), b.w1.clone()));
+            tensors.push((p("mlp.b1"), Tensor::new(&[b.b1.len()], b.b1.clone())));
+            tensors.push((p("mlp.w2"), b.w2.clone()));
+            tensors.push((p("mlp.b2"), Tensor::new(&[b.b2.len()], b.b2.clone())));
+        }
+        write_tensor_map(&tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_random_weights() {
+        let cfg = ModelConfig { vocab: 11, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 8 };
+        let w = ModelWeights::random(cfg, 7);
+        let bytes = w.to_bytes();
+        let w2 = ModelWeights::from_bytes(&bytes).unwrap();
+        assert_eq!(w2.config, cfg);
+        assert_eq!(w2.emb, w.emb);
+        assert_eq!(w2.blocks[1].w2, w.blocks[1].w2);
+        assert_eq!(w2.lnf_g, w.lnf_g);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let err = ModelWeights::from_bytes(b"XXXX\x01\x00\x00\x00\x00\x00\x00\x00").unwrap_err();
+        assert!(err.to_string().contains("magic"));
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let cfg = ModelConfig { vocab: 5, d_model: 8, n_layers: 1, n_heads: 2, max_seq: 4 };
+        let bytes = ModelWeights::random(cfg, 1).to_bytes();
+        assert!(ModelWeights::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_tensor() {
+        let cfg = ModelConfig { vocab: 5, d_model: 8, n_layers: 1, n_heads: 2, max_seq: 4 };
+        let w = ModelWeights::random(cfg, 1);
+        let mut map = read_tensor_map(&w.to_bytes()).unwrap();
+        map.remove("ln_f.g");
+        let tensors: Vec<(String, Tensor)> = map.into_iter().collect();
+        let bytes = write_tensor_map(&tensors);
+        let err = ModelWeights::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("ln_f.g"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_shape_mismatch() {
+        let cfg = ModelConfig { vocab: 5, d_model: 8, n_layers: 1, n_heads: 2, max_seq: 4 };
+        let mut w = ModelWeights::random(cfg, 1);
+        w.head = Tensor::zeros(&[8, 6]); // wrong vocab dim
+        assert!(w.validate().is_err());
+    }
+}

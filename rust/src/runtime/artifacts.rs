@@ -1,0 +1,128 @@
+//! Artifact discovery and manifest parsing.
+//!
+//! `make artifacts` produces `artifacts/manifest.txt` as newline-delimited
+//! `key=value` pairs (see `python/compile/aot.py`). This module locates the
+//! directory (`GEAR_ARTIFACTS` env var, else `./artifacts`) and indexes it.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    entries: HashMap<String, String>,
+}
+
+impl Artifacts {
+    /// Default location: `$GEAR_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GEAR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// True if a built artifacts directory is present (used by tests to
+    /// skip gracefully when `make artifacts` hasn't run).
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.txt").exists()
+    }
+
+    pub fn load_default() -> Result<Artifacts> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("malformed manifest line: {line}");
+            };
+            entries.insert(k.to_string(), v.to_string());
+        }
+        Ok(Artifacts { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)
+            .with_context(|| format!("manifest missing {key}"))?
+            .parse()
+            .with_context(|| format!("manifest {key} not an integer"))
+    }
+
+    /// Absolute path of a manifest-referenced file.
+    pub fn path(&self, key: &str) -> Result<PathBuf> {
+        let rel = self.get(key).with_context(|| format!("manifest missing {key}"))?;
+        let p = self.dir.join(rel);
+        if !p.exists() {
+            bail!("artifact {key} -> {} does not exist", p.display());
+        }
+        Ok(p)
+    }
+
+    /// All bucket sizes present for a prefix like `prefill_` / `decode_`.
+    pub fn buckets(&self, prefix: &str) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix(prefix).and_then(|s| s.parse().ok()))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Smallest bucket >= n.
+    pub fn pick_bucket(&self, prefix: &str, n: usize) -> Option<usize> {
+        self.buckets(prefix).into_iter().find(|&b| b >= n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, text: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let td = std::env::temp_dir().join(format!("gear_art_{}", std::process::id()));
+        std::fs::create_dir_all(&td).unwrap();
+        write_manifest(
+            &td,
+            "d_model=128\nprefill_64=prefill_64.hlo.txt\nprefill_128=prefill_128.hlo.txt\n",
+        );
+        let a = Artifacts::load(&td).unwrap();
+        assert_eq!(a.get_usize("d_model").unwrap(), 128);
+        assert_eq!(a.buckets("prefill_"), vec![64, 128]);
+        assert_eq!(a.pick_bucket("prefill_", 65), Some(128));
+        assert_eq!(a.pick_bucket("prefill_", 300), None);
+        assert!(a.path("prefill_64").is_err()); // file absent
+        std::fs::remove_dir_all(&td).ok();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let td = std::env::temp_dir().join(format!("gear_art_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&td).unwrap();
+        write_manifest(&td, "no-equals-sign\n");
+        assert!(Artifacts::load(&td).is_err());
+        std::fs::remove_dir_all(&td).ok();
+    }
+}

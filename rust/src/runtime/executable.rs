@@ -1,0 +1,127 @@
+//! HLO executable loading + execution on the PJRT CPU client.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — see
+//! /opt/xla-example/README.md for why serialized protos from jax ≥ 0.5 are
+//! rejected by xla_extension 0.5.1. All graphs were lowered with
+//! `return_tuple=True`, so outputs decompose into tuples.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+
+/// PJRT client + a cache of compiled executables keyed by artifact name.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text file under `name` (idempotent).
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute `name` with the given argument literals; returns the
+    /// flattened output tuple.
+    pub fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("executable {name} not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+// --- literal <-> tensor bridge ------------------------------------------------
+
+/// f32 tensor -> literal with the tensor's shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// Raw f32 slice + shape -> literal.
+pub fn slice_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 data + shape -> literal.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// literal -> f32 vec (flattened).
+pub fn literal_to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    //! Requires a built artifacts directory; each test skips (with a note)
+    //! when `make artifacts` hasn't run. Full validation lives in
+    //! `tests/xla_integration.rs`.
+    use super::*;
+    use crate::runtime::artifacts::Artifacts;
+
+    #[test]
+    fn literal_round_trip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_to_vec(&l).unwrap(), t.data());
+    }
+
+    #[test]
+    fn load_and_run_prefill_if_available() {
+        if !Artifacts::available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // Weights travel as runtime arguments; XlaModel assembles them from
+        // the manifest's param_order.
+        let xm = crate::runtime::xla_model::XlaModel::load_default().unwrap();
+        let prompt = vec![1u32; 16];
+        let (logits, st) = xm.prefill(&prompt, 128).unwrap();
+        assert_eq!(logits.len(), xm.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert_eq!(st.len, 16);
+    }
+}

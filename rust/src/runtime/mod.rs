@@ -1,0 +1,16 @@
+//! PJRT (XLA) runtime: loads the AOT-compiled JAX graphs from `artifacts/`
+//! and executes them on the request path — Python is never invoked at serve
+//! time.
+//!
+//! * [`artifacts`] — manifest parsing + artifact discovery.
+//! * [`executable`] — HLO-text loading, compilation, literal⇄tensor bridge.
+//! * [`xla_model`] — generation loop over the bucketed prefill/decode
+//!   executables with a dense KV cache (the `--backend xla` path), plus the
+//!   fused GEAR-attention executable (the Pallas L1 kernel, AOT-lowered).
+
+pub mod artifacts;
+pub mod executable;
+pub mod xla_model;
+
+pub use artifacts::Artifacts;
+pub use executable::XlaRuntime;

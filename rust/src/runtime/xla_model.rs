@@ -1,0 +1,189 @@
+//! Generation through the AOT-compiled XLA graphs (`--backend xla`).
+//!
+//! Holds a dense FP16-accounted KV cache in Rust and drives the bucketed
+//! `prefill_{n}` / `decode_{n}` executables. Used to (a) prove the
+//! three-layer architecture end-to-end (JAX-authored, AOT-lowered,
+//! Rust-executed, no Python at serve time) and (b) cross-validate the pure
+//! Rust forward (`tests/xla_integration.rs` compares logits).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifacts::Artifacts;
+use crate::runtime::executable::{i32_literal, i32_scalar, literal_to_vec, slice_to_literal, XlaRuntime};
+
+/// Model served via XLA executables.
+pub struct XlaModel {
+    rt: XlaRuntime,
+    art: Artifacts,
+    /// Weight literals in the manifest's `param_order` (weights travel as
+    /// runtime arguments — the HLO text printer elides large constants, so
+    /// baking them would corrupt the graph).
+    params: Vec<xla::Literal>,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+}
+
+/// Per-request dense KV state for the XLA path, padded to a decode bucket.
+pub struct XlaKvState {
+    bucket: usize,
+    /// [L, bucket, d] row-major.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    pub len: usize,
+}
+
+impl XlaModel {
+    /// Load all bucketed executables from the default artifacts dir.
+    pub fn load_default() -> Result<XlaModel> {
+        Self::load(&Artifacts::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<XlaModel> {
+        let art = Artifacts::load(dir)?;
+        let mut rt = XlaRuntime::cpu()?;
+        for n in art.buckets("prefill_") {
+            rt.load(&format!("prefill_{n}"), &art.path(&format!("prefill_{n}"))?)?;
+        }
+        for n in art.buckets("decode_") {
+            rt.load(&format!("decode_{n}"), &art.path(&format!("decode_{n}"))?)?;
+        }
+        // Weight literals, ordered per the manifest.
+        let bytes = std::fs::read(art.path("weights")?).context("reading weights.bin")?;
+        let tensors = crate::model::weights::read_tensor_map(&bytes)?;
+        let order = art
+            .get("param_order")
+            .context("manifest missing param_order (re-run `make artifacts`)")?;
+        let mut params = Vec::new();
+        for name in order.split(',') {
+            let t = tensors
+                .get(name)
+                .with_context(|| format!("weights.bin missing tensor {name}"))?;
+            params.push(crate::runtime::executable::tensor_to_literal(t)?);
+        }
+        Ok(XlaModel {
+            vocab: art.get_usize("vocab")?,
+            d_model: art.get_usize("d_model")?,
+            n_layers: art.get_usize("n_layers")?,
+            params,
+            rt,
+            art,
+        })
+    }
+
+    /// Prefill: pads the prompt into the smallest prefill bucket.
+    ///
+    /// The prefill graphs run full (unmasked-length) attention over the
+    /// bucket, so padding would perturb logits; instead we require an exact
+    /// bucket match or pad with PAD tokens *after* the prompt and read K/V
+    /// rows only up to the true length — the returned last-position logits
+    /// come from re-running decode on the final token when padding was
+    /// needed. For simplicity and exactness, prompts are right-padded to
+    /// the bucket and the *cache* keeps only true rows; last logits are
+    /// recomputed via one decode step when `prompt.len() != bucket`.
+    pub fn prefill(&self, prompt: &[u32], decode_bucket: usize) -> Result<(Vec<f32>, XlaKvState)> {
+        let Some(pb) = self.art.pick_bucket("prefill_", prompt.len()) else {
+            bail!("prompt length {} exceeds all prefill buckets", prompt.len());
+        };
+        if !self.art.buckets("decode_").contains(&decode_bucket) {
+            bail!("no decode bucket {decode_bucket}");
+        }
+        // Causal attention: padding AFTER the prompt cannot influence
+        // positions <= prompt end, so K/V rows [0, len) are exact.
+        let mut ids: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        let true_len = ids.len();
+        ids.resize(pb, 0); // PAD id 0
+        let mut args: Vec<xla::Literal> = self.clone_params();
+        args.push(i32_literal(&ids, &[1, pb])?);
+        let out = self
+            .rt
+            .run(&format!("prefill_{pb}"), &args)
+            .context("prefill execution")?;
+        let k_full = literal_to_vec(&out[1])?;
+        let v_full = literal_to_vec(&out[2])?;
+
+        let (l, d) = (self.n_layers, self.d_model);
+        let mut st = XlaKvState {
+            bucket: decode_bucket,
+            k: vec![0.0; l * decode_bucket * d],
+            v: vec![0.0; l * decode_bucket * d],
+            len: true_len,
+        };
+        for li in 0..l {
+            let src = li * pb * d;
+            let dst = li * decode_bucket * d;
+            st.k[dst..dst + true_len * d]
+                .copy_from_slice(&k_full[src..src + true_len * d]);
+            st.v[dst..dst + true_len * d]
+                .copy_from_slice(&v_full[src..src + true_len * d]);
+        }
+
+        let logits = if true_len == pb {
+            literal_to_vec(&out[0])?
+        } else {
+            // Recompute exact last-position logits: pop the final token and
+            // run it as a decode step against the first true_len-1 rows.
+            st.len = true_len - 1;
+            let logits = self.decode(*prompt.last().unwrap(), true_len - 1, &mut st)?;
+            debug_assert_eq!(st.len, true_len);
+            logits
+        };
+        Ok((logits, st))
+    }
+
+    fn clone_params(&self) -> Vec<xla::Literal> {
+        self.params.clone()
+    }
+
+    /// One decode step: appends the token's K/V into the state and returns
+    /// logits.
+    pub fn decode(&self, token: u32, pos: usize, st: &mut XlaKvState) -> Result<Vec<f32>> {
+        let (l, d, n) = (self.n_layers, self.d_model, st.bucket);
+        if st.len >= n {
+            bail!("decode bucket {n} exhausted");
+        }
+        let mut args: Vec<xla::Literal> = self.clone_params();
+        args.push(i32_scalar(token as i32));
+        args.push(i32_scalar(pos as i32));
+        args.push(slice_to_literal(&st.k, &[l, n, d])?);
+        args.push(slice_to_literal(&st.v, &[l, n, d])?);
+        args.push(i32_scalar(st.len as i32));
+        let out = self.rt.run(&format!("decode_{n}"), &args)?;
+        let logits = literal_to_vec(&out[0])?;
+        let k_new = literal_to_vec(&out[1])?;
+        let v_new = literal_to_vec(&out[2])?;
+        for li in 0..l {
+            let dst = li * n * d + st.len * d;
+            st.k[dst..dst + d].copy_from_slice(&k_new[li * d..(li + 1) * d]);
+            st.v[dst..dst + d].copy_from_slice(&v_new[li * d..(li + 1) * d]);
+        }
+        st.len += 1;
+        Ok(logits)
+    }
+
+    /// Greedy generation; stops on any stop token or `max_new` tokens.
+    pub fn generate_greedy(
+        &self,
+        prompt: &[u32],
+        max_new: usize,
+        stop: &[u32],
+    ) -> Result<Vec<u32>> {
+        let bucket = self
+            .art
+            .pick_bucket("decode_", prompt.len() + max_new + 1)
+            .context("no decode bucket large enough")?;
+        let (mut logits, mut st) = self.prefill(prompt, bucket)?;
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            let next = crate::model::sampler::argmax(&logits);
+            if stop.contains(&next) {
+                break;
+            }
+            out.push(next);
+            logits = self.decode(next, st.len, &mut st)?;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,183 @@
+//! Minimal dense f32 tensor used throughout the coordinator.
+//!
+//! This is deliberately small: contiguous row-major storage, explicit shapes,
+//! and exactly the operations the serving path needs (GEMM/GEMV, softmax,
+//! layernorm, transpose, row slicing). It is *not* a general autodiff array —
+//! training happens in JAX at build time; this crate only does inference and
+//! compression math.
+
+pub mod ops;
+
+/// Contiguous row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} product {n} != data len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn randn(shape: &[usize], rng: &mut crate::util::rng::Rng, sigma: f32) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 0.0, sigma);
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "rows() needs 2-D, got {:?}", self.shape);
+        self.shape[0]
+    }
+
+    /// Number of cols for a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "cols() needs 2-D, got {:?}", self.shape);
+        self.shape[1]
+    }
+
+    /// Borrow row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Reshape in place (must preserve element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {shape:?}", self.shape);
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Copy rows [lo, hi) of a 2-D tensor into a new tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        let c = self.cols();
+        assert!(lo <= hi && hi <= self.rows(), "slice {lo}..{hi} of {} rows", self.rows());
+        Tensor::new(&[hi - lo, c], self.data[lo * c..hi * c].to_vec())
+    }
+
+    /// Copy a column range [lo, hi) of a 2-D tensor.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        assert!(lo <= hi && hi <= c);
+        let w = hi - lo;
+        let mut out = Tensor::zeros(&[r, w]);
+        for i in 0..r {
+            out.data[i * w..(i + 1) * w].copy_from_slice(&self.data[i * c + lo..i * c + hi]);
+        }
+        out
+    }
+
+    /// Vertically stack 2-D tensors with equal column counts.
+    pub fn vstack(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let c = parts[0].cols();
+        let total: usize = parts.iter().map(|p| p.rows()).sum();
+        let mut data = Vec::with_capacity(total * c);
+        for p in parts {
+            assert_eq!(p.cols(), c);
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(&[total, c], data)
+    }
+
+    pub fn t(&self) -> Tensor {
+        ops::transpose(self)
+    }
+}
+
+impl std::fmt::Display for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn slicing() {
+        let t = Tensor::new(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.slice_rows(1, 3).data(), &[3., 4., 5., 6.]);
+        let c = t.slice_cols(1, 2);
+        assert_eq!(c.shape(), &[3, 1]);
+        assert_eq!(c.data(), &[2., 4., 6.]);
+    }
+
+    #[test]
+    fn vstack_works() {
+        let a = Tensor::new(&[1, 2], vec![1., 2.]);
+        let b = Tensor::new(&[2, 2], vec![3., 4., 5., 6.]);
+        let s = Tensor::vstack(&[&a, &b]);
+        assert_eq!(s.shape(), &[3, 2]);
+        assert_eq!(s.data(), &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).reshape(&[3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.row(2), &[5., 6.]);
+    }
+}

@@ -1,0 +1,251 @@
+//! Dense linear-algebra kernels for the serving path.
+//!
+//! `matmul` is written as a blocked i-k-j loop so LLVM autovectorizes the
+//! inner j loop; this is the baseline the §Perf pass iterates on. All
+//! routines are allocation-explicit: `_into` variants write into caller
+//! scratch so the decode hot loop can run allocation-free.
+
+use super::Tensor;
+
+/// C = A @ B for 2-D tensors.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(a.data(), b.data(), m, k, n, out.data_mut());
+    out
+}
+
+/// Raw GEMM into caller storage: c[m,n] = a[m,k] @ b[k,n].
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    // i-k-j ordering: unit-stride access on both b and c rows.
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C = A @ B^T: c[m,n] = a[m,k] @ b[n,k]^T. Dot-product form, unit stride on
+/// both operands — preferred when B is naturally row-major in (n, k).
+pub fn matmul_bt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            c[i * n + j] = dot(arow, brow);
+        }
+    }
+}
+
+/// Dot product, 4-way unrolled for autovectorization.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.rows(), a.cols());
+    let mut out = Tensor::zeros(&[n, m]);
+    let src = a.data();
+    let dst = out.data_mut();
+    for i in 0..m {
+        for j in 0..n {
+            dst[j * m + i] = src[i * n + j];
+        }
+    }
+    out
+}
+
+/// Numerically-stable softmax over the last axis of a 2-D tensor, in place.
+pub fn softmax_rows(x: &mut Tensor) {
+    let c = x.cols();
+    for i in 0..x.rows() {
+        softmax_inplace(&mut x.data_mut()[i * c..(i + 1) * c]);
+    }
+}
+
+/// Stable softmax of a single vector in place.
+pub fn softmax_inplace(v: &mut [f32]) {
+    let max = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in v.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in v.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// LayerNorm over the last axis: (x - mean) / sqrt(var + eps) * gamma + beta.
+pub fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], eps: f32, out: &mut [f32]) {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = (x[i] - mean) * inv * gamma[i] + beta[i];
+    }
+}
+
+/// GELU activation (tanh approximation, matching jax.nn.gelu default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Frobenius norm of a slice.
+pub fn fro_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// || a - b ||_F
+pub fn fro_dist(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]);
+        assert_eq!(matmul(&a, &b).data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = Rng::new(2);
+        let a = Tensor::randn(&[5, 7], &mut r, 1.0);
+        let mut eye = Tensor::zeros(&[7, 7]);
+        for i in 0..7 {
+            eye.data_mut()[i * 7 + i] = 1.0;
+        }
+        let c = matmul(&a, &eye);
+        assert_eq!(c.data(), a.data());
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        let mut r = Rng::new(3);
+        let a = Tensor::randn(&[4, 6], &mut r, 1.0);
+        let b = Tensor::randn(&[5, 6], &mut r, 1.0);
+        let mut c1 = vec![0.0; 4 * 5];
+        matmul_bt_into(a.data(), b.data(), 4, 6, 5, &mut c1);
+        let c2 = matmul(&a, &b.t());
+        for (x, y) in c1.iter().zip(c2.data()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::new(4);
+        let a = Tensor::randn(&[3, 8], &mut r, 1.0);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut t = Tensor::new(&[2, 3], vec![1., 2., 3., 1000., 1000., 1000.]);
+        softmax_rows(&mut t);
+        for i in 0..2 {
+            let s: f32 = t.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // large-input row must not produce NaN
+        assert!(t.row(1).iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let gamma = vec![1.0f32; 4];
+        let beta = vec![0.0f32; 4];
+        let mut out = vec![0.0f32; 4];
+        layernorm(&x, &gamma, &beta, 1e-5, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(100.0) - 100.0).abs() < 1e-3);
+        assert!(gelu(-100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fro_dist_triangle() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!((fro_dist(&a, &b) - (2.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let mut r = Rng::new(9);
+        for n in [1usize, 3, 4, 7, 16, 33] {
+            let a: Vec<f32> = (0..n).map(|_| r.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| r.normal_f32()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! IEEE 754 binary16 conversion.
+//!
+//! The compute path in this crate is f32 (the PJRT CPU client and the tiny
+//! model both run f32), but the paper's memory accounting is in FP16. Cache
+//! components that the paper stores in FP16 (scales, zero-points, outlier
+//! values, low-rank factors, streaming buffer) are *stored* here as packed
+//! `u16` half floats so the byte accounting is real, not simulated.
+
+/// Convert f32 -> f16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN.
+        let m = if mant != 0 { 0x200 } else { 0 };
+        return sign | 0x7c00 | m;
+    }
+    // Re-bias exponent: f32 bias 127 -> f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal range. Round mantissa from 23 to 10 bits.
+        let mant16 = mant >> 13;
+        let rest = mant & 0x1fff;
+        let half = 0x1000;
+        let mut out = sign | (((unbiased + 15) as u16) << 10) | mant16 as u16;
+        if rest > half || (rest == half && (mant16 & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent: still correct
+        }
+        return out;
+    }
+    if unbiased >= -24 {
+        // Subnormal f16: value = mant16 * 2^-24 with mant16 = full * 2^(unbiased+1)
+        // for the 24-bit significand `full`.
+        let shift = (-unbiased - 1) as u32; // in 14..=23
+        let full = mant | 0x80_0000;
+        let mant16 = full >> shift;
+        let rest = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut out = sign | mant16 as u16;
+        if rest > half || (rest == half && (mant16 & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    sign // underflow -> signed zero
+}
+
+/// Convert f16 bits -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: value = mant * 2^-24. Normalize: with the top set
+            // bit of mant at position p, exponent = p - 24 + 127 = 103 + p.
+            let shift = mant.leading_zeros() - 21; // = 10 - p
+            let e = 113 - shift;
+            let m = (mant << (13 + shift)) & 0x7f_ffff;
+            sign | (e << 23) | m
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip an f32 through f16 precision (what storing in FP16 costs).
+pub fn to_f16_precision(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// A compact FP16 buffer: stores values as packed u16, two bytes each.
+#[derive(Debug, Clone, Default)]
+pub struct F16Buf {
+    bits: Vec<u16>,
+}
+
+impl F16Buf {
+    pub fn from_f32(xs: &[f32]) -> Self {
+        F16Buf { bits: xs.iter().map(|&x| f32_to_f16_bits(x)).collect() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        F16Buf { bits: Vec::with_capacity(n) }
+    }
+
+    pub fn push(&mut self, x: f32) {
+        self.bits.push(f32_to_f16_bits(x));
+    }
+
+    pub fn get(&self, i: usize) -> f32 {
+        f16_bits_to_f32(self.bits[i])
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.bits.iter().map(|&b| f16_bits_to_f32(b)).collect()
+    }
+
+    /// Actual storage bytes.
+    pub fn nbytes(&self) -> usize {
+        self.bits.len() * 2
+    }
+
+    pub fn clear(&mut self) {
+        self.bits.clear();
+    }
+
+    pub fn extend_from_f32(&mut self, xs: &[f32]) {
+        self.bits.extend(xs.iter().map(|&x| f32_to_f16_bits(x)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 2.0, 0.5, 65504.0, -65504.0] {
+            assert_eq!(to_f16_precision(x), x, "{x} should be exactly representable");
+        }
+    }
+
+    #[test]
+    fn special_values() {
+        assert!(to_f16_precision(f32::INFINITY).is_infinite());
+        assert!(to_f16_precision(f32::NEG_INFINITY).is_infinite());
+        assert!(to_f16_precision(f32::NAN).is_nan());
+        assert_eq!(to_f16_precision(1e9), f32::INFINITY); // overflow
+        assert_eq!(to_f16_precision(1e-30), 0.0); // underflow
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        let mut r = crate::util::rng::Rng::new(5);
+        for _ in 0..10_000 {
+            let x = (r.normal_f32()) * 100.0;
+            let y = to_f16_precision(x);
+            let rel = ((y - x) / x.abs().max(1e-6)).abs();
+            // f16 has 10 mantissa bits -> rel err <= 2^-11 for normals.
+            assert!(rel <= 4.9e-4, "x={x} y={y} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        // Smallest positive subnormal f16 = 2^-24.
+        let tiny = 2.0_f32.powi(-24);
+        assert_eq!(to_f16_precision(tiny), tiny);
+        let sub = 2.0_f32.powi(-20);
+        assert_eq!(to_f16_precision(sub), sub);
+    }
+
+    #[test]
+    fn buf_roundtrip() {
+        let xs = vec![1.5f32, -2.25, 0.0, 100.0];
+        let b = F16Buf::from_f32(&xs);
+        assert_eq!(b.nbytes(), 8);
+        assert_eq!(b.to_f32_vec(), xs);
+    }
+}

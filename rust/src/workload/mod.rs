@@ -1,0 +1,12 @@
+//! Synthetic workloads standing in for the paper's evaluation suites
+//! (DESIGN.md §3 documents the substitution argument).
+//!
+//! * [`tasks`] — **chain-arith** (hard, CoT-style multi-step reasoning ≈
+//!   GSM8k/AQuA/BBH with CoT) and **kv-recall** (easy retrieval ≈
+//!   LongBench / GSM8k 5-shot).
+//! * [`synth_kv`] — synthetic KV matrices with the entry distribution the
+//!   paper analyzes (heavy-tailed fixed channels in Keys, outliers), for
+//!   the error experiments that don't need a model.
+
+pub mod synth_kv;
+pub mod tasks;

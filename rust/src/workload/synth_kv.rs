@@ -1,0 +1,161 @@
+//! Synthetic KV-cache matrices with realistic entry statistics.
+//!
+//! KIVI/KVQuant (and §2 of the GEAR paper) observe that Key caches have a
+//! few *fixed channels* with very large magnitudes, while Value caches are
+//! closer to i.i.d. with scattered outliers. The generator reproduces both
+//! regimes so the error experiments (Fig 1a / 2a / 2b) exercise the same
+//! structure the paper measured on LLaMA KV tensors, plus a coherent
+//! low-rank component (token vectors share context) that gives residuals
+//! their fast-decaying spectrum.
+
+use crate::tensor::ops::matmul_into;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Parameters of the synthetic KV distribution.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthKvParams {
+    /// Log-normal sigma of per-channel scales (Key regime; 0 disables).
+    pub channel_tail: f32,
+    /// Probability an entry is an outlier.
+    pub outlier_prob: f64,
+    /// Outlier magnitude multiplier.
+    pub outlier_mult: f32,
+    /// Rank of the shared coherent component (0 disables).
+    pub coherent_rank: usize,
+    /// Relative weight of the coherent component.
+    pub coherent_weight: f32,
+}
+
+impl SynthKvParams {
+    /// Key-cache regime: strong fixed-channel structure.
+    pub fn key() -> Self {
+        SynthKvParams {
+            channel_tail: 1.0,
+            outlier_prob: 0.01,
+            outlier_mult: 8.0,
+            coherent_rank: 4,
+            coherent_weight: 1.5,
+        }
+    }
+
+    /// Value-cache regime: flatter channels, scattered outliers.
+    pub fn value() -> Self {
+        SynthKvParams {
+            channel_tail: 0.3,
+            outlier_prob: 0.02,
+            outlier_mult: 6.0,
+            coherent_rank: 2,
+            coherent_weight: 0.8,
+        }
+    }
+}
+
+/// Generate an n×d KV-like matrix.
+pub fn generate(rng: &mut Rng, n: usize, d: usize, p: &SynthKvParams) -> Tensor {
+    let mut x = Tensor::zeros(&[n, d]);
+
+    // Per-channel log-normal scales (fixed across tokens — the Key pattern).
+    let mut chan_scale = vec![1.0f32; d];
+    if p.channel_tail > 0.0 {
+        for s in chan_scale.iter_mut() {
+            *s = (rng.normal_f32() * p.channel_tail).exp();
+        }
+    }
+
+    for i in 0..n {
+        for j in 0..d {
+            let mut v = rng.normal_f32() * chan_scale[j];
+            if rng.next_f64() < p.outlier_prob {
+                v *= p.outlier_mult;
+            }
+            x.data_mut()[i * d + j] = v;
+        }
+    }
+
+    // Shared coherent (low-rank) component.
+    if p.coherent_rank > 0 && p.coherent_weight > 0.0 {
+        let r = p.coherent_rank.min(n).min(d);
+        let mut u = vec![0.0f32; n * r];
+        let mut vt = vec![0.0f32; r * d];
+        rng.fill_normal(&mut u, 0.0, 1.0);
+        rng.fill_normal(&mut vt, 0.0, 1.0);
+        let mut low = vec![0.0f32; n * d];
+        matmul_into(&u, &vt, n, r, d, &mut low);
+        let w = p.coherent_weight / (r as f32).sqrt();
+        for (xi, li) in x.data_mut().iter_mut().zip(&low) {
+            *xi += w * li;
+        }
+    }
+    x
+}
+
+/// Generate a (K, V) pair with their respective regimes.
+pub fn generate_kv(rng: &mut Rng, n: usize, d: usize) -> (Tensor, Tensor) {
+    (generate(rng, n, d, &SynthKvParams::key()), generate(rng, n, d, &SynthKvParams::value()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gear::error::singular_values;
+
+    #[test]
+    fn key_channels_are_heavy_tailed() {
+        let mut rng = Rng::new(110);
+        let x = generate(&mut rng, 256, 64, &SynthKvParams::key());
+        // Per-channel std devs should span a wide range.
+        let mut stds: Vec<f32> = (0..64)
+            .map(|j| {
+                let mut s = 0.0f32;
+                for i in 0..256 {
+                    s += x.data()[i * 64 + j].powi(2);
+                }
+                (s / 256.0).sqrt()
+            })
+            .collect();
+        stds.sort_by(f32::total_cmp);
+        let ratio = stds[63] / stds[0].max(1e-6);
+        assert!(ratio > 5.0, "channel scale spread {ratio} too flat for Key regime");
+    }
+
+    #[test]
+    fn value_regime_flatter_than_key() {
+        let mut rng = Rng::new(111);
+        let spread = |p: &SynthKvParams, rng: &mut Rng| {
+            let x = generate(rng, 256, 64, p);
+            let mut stds: Vec<f32> = (0..64)
+                .map(|j| {
+                    let mut s = 0.0f32;
+                    for i in 0..256 {
+                        s += x.data()[i * 64 + j].powi(2);
+                    }
+                    (s / 256.0).sqrt()
+                })
+                .collect();
+            stds.sort_by(f32::total_cmp);
+            stds[63] / stds[0].max(1e-6)
+        };
+        let key = spread(&SynthKvParams::key(), &mut rng);
+        let value = spread(&SynthKvParams::value(), &mut rng);
+        assert!(key > value, "key spread {key} !> value spread {value}");
+    }
+
+    #[test]
+    fn coherent_component_gives_decaying_spectrum() {
+        // Fig 2b precondition: top singular values dominate.
+        let mut rng = Rng::new(112);
+        let x = generate(&mut rng, 128, 32, &SynthKvParams::key());
+        let sv = singular_values(x.data(), 128, 32);
+        let top4: f64 = sv[..4].iter().map(|s| s * s).sum();
+        let total: f64 = sv.iter().map(|s| s * s).sum();
+        assert!(top4 / total > 0.3, "top-4 energy {} too flat", top4 / total);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(&mut Rng::new(7), 16, 8, &SynthKvParams::key());
+        let b = generate(&mut Rng::new(7), 16, 8, &SynthKvParams::key());
+        assert_eq!(a, b);
+    }
+}

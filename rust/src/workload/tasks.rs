@@ -1,0 +1,315 @@
+//! Synthetic evaluation tasks (the GSM8k-CoT / LongBench substitutes).
+//!
+//! **chain-arith** — multi-step modular arithmetic with chain-of-thought:
+//!
+//! ```text
+//! prompt:      a=3;b=7;c=a+b;d=c*b;d?\n            (plus few-shot examples)
+//! completion:  a=3;b=7;c=0;d=0;>0\n
+//! ```
+//!
+//! The completion restates every variable's resolved value (mod 10) before
+//! the final `>answer`. Each step conditions on previously *generated*
+//! values, so KV-cache approximation error compounds across the generation
+//! exactly as in the paper's CoT analysis (§1, Fig 1b).
+//!
+//! **kv-recall** — a key–value store lookup with a short answer:
+//!
+//! ```text
+//! prompt:      f4=2;k1=9;...;k1?\n
+//! completion:  >9\n
+//! ```
+//!
+//! The answer depends on one prompt location — the easy-task regime
+//! (Table 2) where even aggressive compression is near-lossless.
+//!
+//! The Python trainer (`python/compile/train.py`) generates the same
+//! formats; keep them in lockstep.
+
+use crate::util::rng::Rng;
+
+/// Task family and difficulty knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Multi-step CoT arithmetic: `steps` assignments (≥ 2), `shots`
+    /// solved examples prepended to the prompt.
+    ChainArith { steps: usize, shots: usize },
+    /// Key–value recall over `pairs` bindings.
+    KvRecall { pairs: usize },
+}
+
+impl Task {
+    /// The paper-analogous default hard task (GSM8k-CoT stand-in).
+    pub fn hard() -> Task {
+        Task::ChainArith { steps: 6, shots: 3 }
+    }
+
+    /// The paper-analogous default easy task (LongBench stand-in).
+    pub fn easy() -> Task {
+        Task::KvRecall { pairs: 24 }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Task::ChainArith { steps, shots } => format!("chain-arith(s={steps},k={shots})"),
+            Task::KvRecall { pairs } => format!("kv-recall(p={pairs})"),
+        }
+    }
+}
+
+/// One evaluation instance.
+#[derive(Debug, Clone)]
+pub struct TaskInstance {
+    /// Full prompt text (few-shot examples + test query), ends with '\n'.
+    pub prompt: String,
+    /// Gold completion (CoT line or answer line), ends with '\n'.
+    pub completion: String,
+    /// Ground-truth final answer digit.
+    pub answer: char,
+}
+
+/// A generated program: variable names and their resolved values.
+struct Program {
+    text: String,
+    cot: String,
+    answer: char,
+}
+
+const VARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz";
+
+fn gen_program(rng: &mut Rng, steps: usize) -> Program {
+    let steps = steps.clamp(2, 24);
+    let mut names: Vec<u8> = VARS.to_vec();
+    rng.shuffle(&mut names);
+    let names = &names[..steps];
+    let mut values: Vec<u32> = Vec::with_capacity(steps);
+    let mut text = String::new();
+    let mut cot = String::new();
+
+    for (i, &name) in names.iter().enumerate() {
+        let name = name as char;
+        if i < 2 {
+            // Seed assignments with literals.
+            let v = rng.next_below(10) as u32;
+            values.push(v);
+            text.push_str(&format!("{name}={v};"));
+        } else {
+            // Combine two earlier variables.
+            let a = rng.next_below(i as u64) as usize;
+            let mut b = rng.next_below(i as u64) as usize;
+            if b == a {
+                b = (b + 1) % i;
+            }
+            let op = *rng.choose(&[b'+', b'-', b'*']) as char;
+            let v = match op {
+                '+' => (values[a] + values[b]) % 10,
+                '-' => (10 + values[a] - values[b]) % 10,
+                _ => (values[a] * values[b]) % 10,
+            };
+            values.push(v);
+            text.push_str(&format!(
+                "{name}={}{op}{};",
+                names[a] as char, names[b] as char
+            ));
+        }
+        cot.push_str(&format!("{name}={};", values[i]));
+    }
+    let answer = char::from_digit(values[steps - 1], 10).unwrap();
+    // Query the final variable.
+    text.push_str(&format!("{}?", names[steps - 1] as char));
+    cot.push_str(&format!(">{answer}"));
+    Program { text, cot, answer }
+}
+
+/// Generate one instance of `task`.
+pub fn generate_instance(task: Task, rng: &mut Rng) -> TaskInstance {
+    match task {
+        Task::ChainArith { steps, shots } => {
+            let mut prompt = String::new();
+            for _ in 0..shots {
+                let ex = gen_program(rng, steps);
+                prompt.push_str(&ex.text);
+                prompt.push('\n');
+                prompt.push_str(&ex.cot);
+                prompt.push('\n');
+            }
+            let test = gen_program(rng, steps);
+            prompt.push_str(&test.text);
+            prompt.push('\n');
+            TaskInstance {
+                prompt,
+                completion: format!("{}\n", test.cot),
+                answer: test.answer,
+            }
+        }
+        Task::KvRecall { pairs } => {
+            let pairs = pairs.clamp(2, 200);
+            // Distinct two-char keys: letter + digit.
+            let mut keys: Vec<String> = Vec::with_capacity(pairs);
+            let mut vals: Vec<u32> = Vec::with_capacity(pairs);
+            let mut used = std::collections::HashSet::new();
+            while keys.len() < pairs {
+                let k = format!(
+                    "{}{}",
+                    VARS[rng.next_below(26) as usize] as char,
+                    rng.next_below(10)
+                );
+                if used.insert(k.clone()) {
+                    keys.push(k);
+                    vals.push(rng.next_below(10) as u32);
+                }
+            }
+            let mut prompt = String::new();
+            for (k, v) in keys.iter().zip(&vals) {
+                prompt.push_str(&format!("{k}={v};"));
+            }
+            let qi = rng.next_below(pairs as u64) as usize;
+            prompt.push_str(&format!("{}?\n", keys[qi]));
+            let answer = char::from_digit(vals[qi], 10).unwrap();
+            TaskInstance { prompt, completion: format!(">{answer}\n"), answer }
+        }
+    }
+}
+
+/// Generate a deterministic evaluation set.
+pub fn generate_set(task: Task, n: usize, seed: u64) -> Vec<TaskInstance> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| generate_instance(task, &mut rng)).collect()
+}
+
+/// Score a model generation against an instance: the answer is the first
+/// character after the last `>` in the output.
+pub fn score(output: &str, inst: &TaskInstance) -> bool {
+    extract_answer(output).map(|a| a == inst.answer).unwrap_or(false)
+}
+
+/// Extract the final `>digit` answer from a generation.
+pub fn extract_answer(output: &str) -> Option<char> {
+    let pos = output.rfind('>')?;
+    output[pos + 1..].chars().next().filter(|c| c.is_ascii_digit())
+}
+
+/// Exact-match score on the full CoT line (strict metric, used by
+/// ablations to show *where* generations diverge).
+pub fn score_cot(output: &str, inst: &TaskInstance) -> bool {
+    output.trim_end_matches('\n') == inst.completion.trim_end_matches('\n')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Tokenizer;
+
+    /// Evaluate a chain-arith program text independently (test oracle).
+    fn eval_program(text: &str) -> Option<u32> {
+        let mut env = std::collections::HashMap::new();
+        let text = text.strip_suffix('?')?;
+        let mut query = ' ';
+        for stmt in text.split(';') {
+            if stmt.len() == 1 {
+                query = stmt.chars().next()?;
+                continue;
+            }
+            let (lhs, rhs) = stmt.split_once('=')?;
+            let lhs = lhs.chars().next()?;
+            let v = if rhs.len() == 1 {
+                rhs.parse::<u32>().ok().or_else(|| env.get(&rhs.chars().next()?).copied())?
+            } else {
+                let mut cs = rhs.chars();
+                let a = *env.get(&cs.next()?)?;
+                let op = cs.next()?;
+                let b = *env.get(&cs.next()?)?;
+                match op {
+                    '+' => (a + b) % 10,
+                    '-' => (10 + a - b) % 10,
+                    '*' => (a * b) % 10,
+                    _ => return None,
+                }
+            };
+            env.insert(lhs, v);
+        }
+        env.get(&query).copied()
+    }
+
+    #[test]
+    fn chain_arith_answer_is_correct() {
+        let mut rng = Rng::new(120);
+        for _ in 0..50 {
+            let inst = generate_instance(Task::ChainArith { steps: 5, shots: 0 }, &mut rng);
+            let program = inst.prompt.trim_end_matches('\n').split('\n').last().unwrap();
+            // Strip trailing "x?" into evaluable form.
+            let truth = eval_program(program.trim_end_matches('\n')).expect("evaluable");
+            assert_eq!(inst.answer, char::from_digit(truth, 10).unwrap(), "{program}");
+        }
+    }
+
+    #[test]
+    fn cot_ends_with_answer() {
+        let mut rng = Rng::new(121);
+        for _ in 0..20 {
+            let inst = generate_instance(Task::hard(), &mut rng);
+            assert!(inst.completion.contains('>'));
+            assert_eq!(extract_answer(&inst.completion), Some(inst.answer));
+        }
+    }
+
+    #[test]
+    fn kv_recall_answer_matches_binding() {
+        let mut rng = Rng::new(122);
+        for _ in 0..50 {
+            let inst = generate_instance(Task::KvRecall { pairs: 10 }, &mut rng);
+            // Parse prompt: find the queried key and its binding.
+            let prompt = inst.prompt.trim_end_matches('\n');
+            let q = prompt.rsplit(';').next().unwrap().trim_end_matches('?');
+            let binding = prompt
+                .split(';')
+                .find(|s| s.starts_with(&format!("{q}=")))
+                .unwrap_or_else(|| panic!("binding for {q} in {prompt}"));
+            assert_eq!(binding.chars().last().unwrap(), inst.answer);
+        }
+    }
+
+    #[test]
+    fn prompts_tokenize() {
+        // Everything generated must be encodable by the model tokenizer.
+        let t = Tokenizer::new();
+        let mut rng = Rng::new(123);
+        for task in [Task::hard(), Task::easy(), Task::ChainArith { steps: 10, shots: 5 }] {
+            let inst = generate_instance(task, &mut rng);
+            let ids = t.encode(&inst.prompt);
+            assert!(!ids.is_empty());
+            t.encode(&inst.completion);
+        }
+    }
+
+    #[test]
+    fn scoring() {
+        let inst = TaskInstance {
+            prompt: "x?".into(),
+            completion: "a=1;>7\n".into(),
+            answer: '7',
+        };
+        assert!(score("a=1;>7\n", &inst));
+        assert!(score("garbage >7", &inst));
+        assert!(!score(">3", &inst));
+        assert!(!score("no answer", &inst));
+        assert!(score_cot("a=1;>7", &inst));
+        assert!(!score_cot("a=2;>7", &inst));
+    }
+
+    #[test]
+    fn shots_lengthen_prompt() {
+        let mut rng = Rng::new(124);
+        let short = generate_instance(Task::ChainArith { steps: 5, shots: 0 }, &mut rng);
+        let long = generate_instance(Task::ChainArith { steps: 5, shots: 4 }, &mut rng);
+        assert!(long.prompt.len() > 3 * short.prompt.len());
+    }
+
+    #[test]
+    fn set_is_deterministic() {
+        let a = generate_set(Task::hard(), 5, 99);
+        let b = generate_set(Task::hard(), 5, 99);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Cross-language golden tests: the JAX build path (python/compile) writes
+//! vectors into artifacts/golden/, the Rust request path must reproduce
+//! them. Skips (with a note) when `make artifacts` hasn't run.
+
+use std::path::PathBuf;
+
+use gear_serve::gear::quant::{QuantScheme, QuantizedMatrix};
+use gear_serve::gear::outlier::filter_outliers;
+use gear_serve::gear::Axis;
+use gear_serve::model::weights::read_tensor_map;
+use gear_serve::model::{Model, ModelWeights};
+use gear_serve::runtime::artifacts::Artifacts;
+use gear_serve::tensor::Tensor;
+
+fn golden(name: &str) -> Option<std::collections::HashMap<String, Tensor>> {
+    if !Artifacts::available() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let path: PathBuf = Artifacts::default_dir().join("golden").join(name);
+    let bytes = std::fs::read(&path).expect("golden file");
+    Some(read_tensor_map(&bytes).expect("golden parse"))
+}
+
+fn assert_close(a: &[f32], b: &[f32], atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst <= atol, "{what}: max abs diff {worst} > {atol}");
+}
+
+#[test]
+fn quantization_matches_jax() {
+    let Some(g) = golden("quant.bin") else { return };
+    let x = g["x"].clone();
+    for (name, bits, scheme) in [
+        ("deq_b4_row_g16", 4u8, QuantScheme::per_token_group(16)),
+        ("deq_b2_row_g32", 2, QuantScheme::per_token_group(32)),
+        (
+            "deq_b2_col_full",
+            2,
+            QuantScheme { axis: Axis::Col, group: gear_serve::gear::GroupSize::Full },
+        ),
+        ("deq_b8_row_g32", 8, QuantScheme::per_token_group(32)),
+    ] {
+        let q = QuantizedMatrix::quantize(&x, bits, scheme);
+        let deq = q.dequantize();
+        // FP16 rounding of scales/zeros on the Rust side vs f32 in the jnp
+        // oracle: half a step, plus the scale's FP16 relative error
+        // amplified by up to `levels` codes, plus zero-point rounding.
+        let levels = ((1u32 << bits) - 1) as f32;
+        let tol = q.max_step() * (0.51 + levels * 6e-4) + 5e-2;
+        assert_close(deq.data(), g[name].data(), tol, name);
+    }
+}
+
+#[test]
+fn outlier_filter_matches_jax() {
+    let Some(g) = golden("outlier.bin") else { return };
+    let x = g["x"].clone();
+    let (sp, rem) = filter_outliers(&x, 0.125, Axis::Row);
+    assert_close(rem.data(), g["remainder"].data(), 2e-2, "remainder");
+    assert_close(sp.to_dense().data(), g["sparse"].data(), 2e-2, "sparse");
+}
+
+#[test]
+fn fused_attention_matches_jax_oracle() {
+    let Some(g) = golden("gear_attn.bin") else { return };
+    let codes = &g["codes"];
+    let (n, d) = (codes.rows(), codes.cols());
+    let scales = g["scales"].data();
+    let zeros = g["zeros"].data();
+    // Rebuild dense K = zeros + codes * scales + concat_h(A_h B_h^T).
+    let a = &g["a"]; // [H, n, r]
+    let b = &g["b"]; // [H, dh, r]
+    let h = a.shape()[0];
+    let r = a.shape()[2];
+    let dh = d / h;
+    let mut k = vec![0.0f32; n * d];
+    for t in 0..n {
+        for c in 0..d {
+            k[t * d + c] = zeros[c] + codes.data()[t * d + c] * scales[c];
+            let hh = c / dh;
+            let cc = c % dh;
+            for ri in 0..r {
+                k[t * d + c] +=
+                    a.data()[hh * n * r + t * r + ri] * b.data()[hh * dh * r + cc * r + ri];
+            }
+        }
+    }
+    // Rust attention over dense K/V must equal the JAX oracle ctx.
+    use gear_serve::kvcache::{dense::DenseLayerKv, LayerKv};
+    let mut cache = DenseLayerKv::new(d);
+    cache.ingest_prefill(
+        Tensor::new(&[n, d], k),
+        g["v"].clone(),
+        None,
+    );
+    let mut out = vec![0.0f32; d];
+    cache.attend(g["q"].data(), h, &mut out);
+    // fp16 rounding inside DenseLayerKv + f32 assoc. differences.
+    assert_close(&out, g["ctx"].data(), 5e-2, "ctx");
+}
+
+#[test]
+fn model_logits_match_jax_forward() {
+    let Some(g) = golden("parity.bin") else { return };
+    let weights = ModelWeights::load(&Artifacts::default_dir().join("weights.bin")).unwrap();
+    let model = Model::new(weights);
+    let tokens: Vec<u32> = g["tokens"].data().iter().map(|&t| t as u32).collect();
+    let c = model.config();
+    let mut cache = gear_serve::kvcache::RequestCache::new(
+        &gear_serve::kvcache::CacheSpec::Fp16,
+        c.n_layers,
+        c.d_model,
+        c.n_heads,
+    );
+    let out = model.prefill(&tokens, &mut cache);
+    let want = g["last_logits"].data();
+    // Different accumulation orders across languages: compare both absolute
+    // and argmax (the serving-relevant signal).
+    assert_close(&out.last_logits, want, 0.05, "last_logits");
+    let am_rust = gear_serve::model::sampler::argmax(&out.last_logits);
+    let am_jax = gear_serve::model::sampler::argmax(want);
+    assert_eq!(am_rust, am_jax, "argmax mismatch");
+}

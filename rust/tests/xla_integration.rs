@@ -1,0 +1,154 @@
+//! XLA-backend integration: load the AOT artifacts on the PJRT CPU client,
+//! run generation, and cross-validate against the pure-Rust forward.
+//! All tests skip when artifacts are absent.
+
+use gear_serve::kvcache::{CacheSpec, RequestCache};
+use gear_serve::model::config::Tokenizer;
+use gear_serve::model::{Model, ModelWeights};
+use gear_serve::runtime::artifacts::Artifacts;
+use gear_serve::runtime::xla_model::XlaModel;
+
+fn ready() -> bool {
+    if !Artifacts::available() {
+        eprintln!("skipping: artifacts not built");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn xla_prefill_matches_rust_forward() {
+    if !ready() {
+        return;
+    }
+    let xm = XlaModel::load_default().unwrap();
+    let w = ModelWeights::load(&Artifacts::default_dir().join("weights.bin")).unwrap();
+    let model = Model::new(w);
+    let tok = Tokenizer::new();
+    let prompt = tok.encode_with_bos("a=3;b=7;c=a+b;c?\n");
+
+    let (xla_logits, _st) = xm.prefill(&prompt, 128).unwrap();
+
+    let c = model.config();
+    let mut cache = RequestCache::new(&CacheSpec::Fp16, c.n_layers, c.d_model, c.n_heads);
+    let rust = model.prefill(&prompt, &mut cache);
+
+    let mut worst = 0f32;
+    for (a, b) in xla_logits.iter().zip(&rust.last_logits) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst < 0.08, "xla vs rust logits: max diff {worst}");
+    assert_eq!(
+        gear_serve::model::sampler::argmax(&xla_logits),
+        gear_serve::model::sampler::argmax(&rust.last_logits)
+    );
+}
+
+#[test]
+fn xla_decode_steps_match_rust() {
+    if !ready() {
+        return;
+    }
+    let xm = XlaModel::load_default().unwrap();
+    let w = ModelWeights::load(&Artifacts::default_dir().join("weights.bin")).unwrap();
+    let model = Model::new(w);
+    let tok = Tokenizer::new();
+    let prompt = tok.encode_with_bos("k1=5;k2=9;k1?\n");
+
+    let (mut xla_logits, mut st) = xm.prefill(&prompt, 128).unwrap();
+    let c = model.config();
+    let mut cache = RequestCache::new(&CacheSpec::Fp16, c.n_layers, c.d_model, c.n_heads);
+    let mut rust_logits = model.prefill(&prompt, &mut cache).last_logits;
+
+    for step in 0..6 {
+        let nxt_x = gear_serve::model::sampler::argmax(&xla_logits);
+        let nxt_r = gear_serve::model::sampler::argmax(&rust_logits);
+        assert_eq!(nxt_x, nxt_r, "divergence at step {step}");
+        let pos = prompt.len() + step;
+        xla_logits = xm.decode(nxt_x, pos, &mut st).unwrap();
+        rust_logits = model.decode_step(nxt_r, pos, &mut cache);
+    }
+}
+
+#[test]
+fn xla_generation_end_to_end() {
+    if !ready() {
+        return;
+    }
+    let xm = XlaModel::load_default().unwrap();
+    let tok = Tokenizer::new();
+    let nl = tok.encode("\n")[0];
+    let prompt = tok.encode_with_bos("f3=8;g1=2;f3?\n");
+    let out = xm
+        .generate_greedy(&prompt, 24, &[gear_serve::model::config::EOS, nl])
+        .unwrap();
+    let text = tok.decode(&out);
+    eprintln!("xla generated: {text:?}");
+    assert!(out.len() <= 24);
+}
+
+#[test]
+fn gear_attn_kernel_artifact_runs() {
+    if !ready() {
+        return;
+    }
+    // Execute the AOT-lowered Pallas fused-attention kernel and compare to
+    // the golden oracle context vector.
+    let art = Artifacts::load_default().unwrap();
+    let Ok(path) = art.path("gear_attn_256") else {
+        eprintln!("skipping: gear_attn artifact absent");
+        return;
+    };
+    let g = {
+        let bytes = std::fs::read(art.dir.join("golden/gear_attn.bin")).unwrap();
+        gear_serve::model::weights::read_tensor_map(&bytes).unwrap()
+    };
+    let mut rt = gear_serve::runtime::XlaRuntime::cpu().unwrap();
+    rt.load("gear_attn", &path).unwrap();
+
+    use gear_serve::runtime::executable::{i32_literal, i32_scalar, slice_to_literal};
+    let n_bucket = 256usize;
+    let (n, d) = (g["codes"].rows(), g["codes"].cols());
+    let h = g["a"].shape()[0];
+    let r = g["a"].shape()[2];
+    let dh = d / h;
+    // Pad golden inputs (n=32) into the n=256 bucket.
+    let mut codes = vec![0i32; n_bucket * d];
+    let mut v = vec![0f32; n_bucket * d];
+    for t in 0..n {
+        for c in 0..d {
+            codes[t * d + c] = g["codes"].data()[t * d + c] as i32;
+            v[t * d + c] = g["v"].data()[t * d + c];
+        }
+    }
+    let mut a = vec![0f32; h * n_bucket * r];
+    for hh in 0..h {
+        for t in 0..n {
+            for ri in 0..r {
+                a[hh * n_bucket * r + t * r + ri] = g["a"].data()[hh * n * r + t * r + ri];
+            }
+        }
+    }
+    let out = rt
+        .run(
+            "gear_attn",
+            &[
+                slice_to_literal(g["q"].data(), &[d]).unwrap(),
+                i32_literal(&codes, &[n_bucket, d]).unwrap(),
+                slice_to_literal(g["scales"].data(), &[d]).unwrap(),
+                slice_to_literal(g["zeros"].data(), &[d]).unwrap(),
+                slice_to_literal(&a, &[h, n_bucket, r]).unwrap(),
+                slice_to_literal(g["b"].data(), &[h, dh, r]).unwrap(),
+                slice_to_literal(&v, &[n_bucket, d]).unwrap(),
+                i32_scalar(n as i32),
+            ],
+        )
+        .unwrap();
+    let ctx = out[0].to_vec::<f32>().unwrap();
+    let want = g["ctx"].data();
+    let mut worst = 0f32;
+    for (x, y) in ctx.iter().zip(want) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst < 1e-3, "gear_attn HLO vs oracle: max diff {worst}");
+}
