@@ -14,6 +14,7 @@
 use gear_serve::coordinator::device_model::DeviceModel;
 use gear_serve::coordinator::engine::{Engine, EngineConfig};
 use gear_serve::coordinator::request::GenRequest;
+use gear_serve::coordinator::ExecMode;
 use gear_serve::gear::size::predict_cache_frac;
 use gear_serve::kvcache::CacheSpec;
 use gear_serve::model::config::ModelConfig;
@@ -151,9 +152,83 @@ fn real_engine() {
     println!();
 }
 
+/// Sequential vs batched decode plane on real engine runs: CPU wall-clock
+/// tokens/s across `max_batch ∈ {1, 4, 16}`, plus a machine-readable
+/// `BENCH_throughput.json` so the perf trajectory accumulates across PRs.
+fn compare_exec_planes() {
+    let weights = if Artifacts::available() {
+        ModelWeights::load(&Artifacts::default_dir().join("weights.bin")).unwrap()
+    } else {
+        eprintln!("(artifacts absent: random weights for the exec-plane sweep)");
+        ModelWeights::random(ModelConfig::default(), 3)
+    };
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // Decode-heavy workload (short prompt, long generation) and a
+    // decode-only metric: admission prefill is serial engine-thread work
+    // identical in both modes and would otherwise dilute the comparison.
+    let prompt: Vec<u32> = (0..32).map(|i| (i % 46) + 3).collect();
+    let max_new = 96usize;
+    let n_reqs = 16usize;
+
+    let mut t = Table::new(&format!(
+        "Decode plane: sequential vs batched sweep ({host}-way host, decode-phase tok/s)"
+    ))
+    .header(&["spec", "max_batch", "seq tok/s", "batched tok/s", "speedup"]);
+    let mut json_rows: Vec<String> = Vec::new();
+
+    for (name, spec) in [("fp16", CacheSpec::Fp16), ("gear-4", CacheSpec::gear(4))] {
+        for batch in [1usize, 4, 16] {
+            let mut tput = [0.0f64; 2];
+            for (slot, exec) in [ExecMode::Sequential, ExecMode::Batched].into_iter().enumerate()
+            {
+                let mut e = Engine::new(
+                    Model::new(weights.clone()),
+                    EngineConfig::new(spec).with_max_batch(batch).with_exec(exec),
+                );
+                for i in 0..n_reqs {
+                    e.submit(GenRequest::greedy(i as u64, prompt.clone(), max_new));
+                }
+                let _ = e.run_to_completion();
+                tput[slot] = e.metrics.decode_throughput();
+            }
+            let speedup = tput[1] / tput[0].max(1e-9);
+            t.row(vec![
+                name.into(),
+                batch.to_string(),
+                sig(tput[0]),
+                sig(tput[1]),
+                format!("{speedup:.2}x"),
+            ]);
+            json_rows.push(format!(
+                "{{\"spec\": \"{name}\", \"max_batch\": {batch}, \
+                 \"seq_decode_tok_s\": {:.3}, \"batched_decode_tok_s\": {:.3}, \
+                 \"speedup\": {speedup:.4}}}",
+                tput[0], tput[1]
+            ));
+        }
+    }
+    t.print();
+    println!("expected shape: ~1x at batch 1 (inline path), > 1x at batch >= 8 on multi-core\n");
+
+    let json = format!(
+        "{{\n  \"bench\": \"decode_plane_compare\",\n  \"host_parallelism\": {host},\n  \
+         \"prompt_len\": {},\n  \"max_new_tokens\": {max_new},\n  \"requests\": {n_reqs},\n  \
+         \"rows\": [\n    {}\n  ]\n}}\n",
+        prompt.len(),
+        json_rows.join(",\n    ")
+    );
+    let path = "BENCH_throughput.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
-    let all = !args.iter().any(|a| a.starts_with("--fig") || a.starts_with("--table") || a == "--real");
+    let all = !args.iter().any(|a| {
+        a.starts_with("--fig") || a.starts_with("--table") || a == "--real" || a == "--compare"
+    });
     let want = |f: &str| all || args.iter().any(|a| a == f);
     let v100 = DeviceModel::v100();
     if want("--fig3b") || want("--fig3c") {
@@ -167,5 +242,8 @@ fn main() {
     }
     if want("--real") {
         real_engine();
+    }
+    if want("--compare") {
+        compare_exec_planes();
     }
 }

@@ -10,7 +10,7 @@
 
 use crate::gear::size::SizeBreakdown;
 use crate::kvcache::dense::softmax_heads;
-use crate::kvcache::LayerKv;
+use crate::kvcache::{AttendScratch, LayerKv};
 use crate::tensor::ops::dot;
 use crate::tensor::Tensor;
 use crate::util::f16::to_f16_precision;
@@ -26,7 +26,6 @@ pub struct H2oLayerKv {
     acc: Vec<f32>,
     /// Total tokens ever seen (drives the budget).
     seen: usize,
-    scores: Vec<f32>,
 }
 
 impl H2oLayerKv {
@@ -40,7 +39,6 @@ impl H2oLayerKv {
             v: Vec::new(),
             acc: Vec::new(),
             seen: 0,
-            scores: Vec::new(),
         }
     }
 
@@ -111,29 +109,36 @@ impl LayerKv for H2oLayerKv {
         self.n()
     }
 
-    fn attend(&mut self, q: &[f32], n_heads: usize, out: &mut [f32]) {
+    fn attend_scratch(
+        &mut self,
+        q: &[f32],
+        n_heads: usize,
+        scratch: &mut AttendScratch,
+        out: &mut [f32],
+    ) {
         let (n, d) = (self.n(), self.d);
         debug_assert_eq!(out.len(), d);
         let dh = d / n_heads;
         let scale = 1.0 / (dh as f32).sqrt();
 
-        self.scores.clear();
-        self.scores.resize(n * n_heads, 0.0);
+        let scores = &mut scratch.scores;
+        scores.clear();
+        scores.resize(n * n_heads, 0.0);
         for t in 0..n {
             let krow = &self.k[t * d..(t + 1) * d];
             for h in 0..n_heads {
-                self.scores[t * n_heads + h] =
+                scores[t * n_heads + h] =
                     scale * dot(&q[h * dh..(h + 1) * dh], &krow[h * dh..(h + 1) * dh]);
             }
         }
-        softmax_heads(&mut self.scores, n, n_heads);
+        softmax_heads(scores, n, n_heads);
 
         out.fill(0.0);
         for t in 0..n {
             let vrow = &self.v[t * d..(t + 1) * d];
             let mut mass = 0.0f32;
             for h in 0..n_heads {
-                let p = self.scores[t * n_heads + h];
+                let p = scores[t * n_heads + h];
                 mass += p;
                 crate::tensor::ops::axpy(p, &vrow[h * dh..(h + 1) * dh], &mut out[h * dh..(h + 1) * dh]);
             }

@@ -1,30 +1,45 @@
-//! The serving engine: continuous batching over a byte-budgeted cache pool.
+//! The serving engine: a two-plane architecture over a byte-budgeted cache
+//! pool.
 //!
-//! Scheduling policy (vLLM-flavored):
-//! 1. **Admission** — before every decode sweep, waiting requests are
-//!    admitted FCFS while (a) the active set is below `max_batch` and
-//!    (b) the memory budget can hold a conservative estimate of the
-//!    request's cache at full length.
-//! 2. **Decode sweep** — every active request advances one token; cache
-//!    reservations are adjusted to real bytes after each step.
-//! 3. **Preemption** — if a reservation can't grow, the *youngest* active
-//!    request is preempted: its cache is dropped, and it requeues at the
-//!    front to re-prefill later (recompute preemption, as in vLLM). A
-//!    request that cannot fit even alone finishes as `OutOfMemory`.
+//! * **Scheduling plane** ([`super::scheduler`]) — admission, budget
+//!   accounting, preemption, finish bookkeeping. Pure policy, FCFS
+//!   deterministic, unchanged from the single-plane engine.
+//! * **Execution plane** ([`super::executor`]) — one decode step for the
+//!   *whole* active set as a single batched, layer-major model call,
+//!   chunked across worker threads with a fixed-order reduction.
 //!
-//! The engine is deterministic: FCFS admission, fixed iteration order, and
-//! per-request seeded samplers.
+//! A sweep has three phases:
+//! 1. **Emit** (policy, sequential): each active request's previously
+//!    sampled token is emitted; stop/length/context finishes retire.
+//! 2. **Execute**: the surviving requests advance one token in a single
+//!    [`BatchExecutor::run`] call.
+//! 3. **Commit** (policy, sequential, fixed order): per request — sample
+//!    the next token, grow its cache reservation; on budget exhaustion the
+//!    youngest active request is preempted (recompute preemption) and the
+//!    adjustment retries.
+//!
+//! Phases 1 and 3 are sequential and order-fixed, and phase 2 is
+//! bit-identical between [`ExecMode::Sequential`] and [`ExecMode::Batched`]
+//! (each request's forward touches only its own state), so the two modes
+//! produce identical token streams, finish reasons, and peak cache bytes —
+//! `tests/batched_vs_sequential.rs` pins this.
+//!
+//! Budget semantics: reservations are checked in the commit phase, *after*
+//! the batch decodes, so real cache bytes may transiently exceed the
+//! configured budget by up to one step's growth across the active set
+//! (the single-plane engine bounded the overshoot to one request's step).
+//! `peak_cache_bytes` tracks reservations, as it always has. Pre-reserving
+//! per-step headroom before phase 2 would close the window — ROADMAP.
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::kvcache::budget::MemoryBudget;
-use crate::kvcache::{CacheSpec, RequestCache};
+use crate::kvcache::CacheSpec;
 use crate::model::Model;
-use crate::util::rng::Rng;
 
+use super::executor::{BatchExecutor, ExecMode};
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, GenRequest, GenResult};
+use super::scheduler::{ActiveRequest, Scheduler};
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -36,11 +51,20 @@ pub struct EngineConfig {
     pub budget_bytes: usize,
     /// Seed for sampling RNGs.
     pub seed: u64,
+    /// How decode sweeps execute. `Batched` is the default; `Sequential`
+    /// is the single-thread reference with identical results.
+    pub exec: ExecMode,
 }
 
 impl EngineConfig {
     pub fn new(spec: CacheSpec) -> EngineConfig {
-        EngineConfig { spec, max_batch: 64, budget_bytes: usize::MAX, seed: 0x5EED }
+        EngineConfig {
+            spec,
+            max_batch: 64,
+            budget_bytes: usize::MAX,
+            seed: 0x5EED,
+            exec: ExecMode::Batched,
+        }
     }
 
     pub fn with_budget(mut self, bytes: usize) -> Self {
@@ -52,43 +76,31 @@ impl EngineConfig {
         self.max_batch = b;
         self
     }
+
+    pub fn with_exec(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
+        self
+    }
 }
 
-struct Active {
-    req: GenRequest,
-    cache: RequestCache,
-    /// Bytes currently reserved in the budget for this request.
-    reserved: usize,
-    output: Vec<u32>,
-    /// Next token to feed (last sampled).
-    next_token: u32,
-    /// Position of the next decode step.
-    pos: usize,
-    preemptions: usize,
-    rng: Rng,
-    enqueued_at: Instant,
-    started_at: Instant,
-}
-
-/// Synchronous serving engine.
+/// Synchronous serving engine: scheduler (policy) + batch executor
+/// (execution) around one model.
 pub struct Engine {
     model: Model,
-    cfg: EngineConfig,
-    budget: MemoryBudget,
-    waiting: VecDeque<(GenRequest, Instant, usize)>,
-    active: Vec<Active>,
+    scheduler: Scheduler,
+    executor: BatchExecutor,
+    active: Vec<ActiveRequest>,
     finished: Vec<GenResult>,
     pub metrics: EngineMetrics,
 }
 
 impl Engine {
     pub fn new(model: Model, cfg: EngineConfig) -> Engine {
-        let budget = MemoryBudget::new(cfg.budget_bytes);
+        let executor = BatchExecutor::new(&model, cfg.exec);
         Engine {
+            scheduler: Scheduler::new(cfg),
+            executor,
             model,
-            cfg,
-            budget,
-            waiting: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
             metrics: EngineMetrics::default(),
@@ -100,199 +112,93 @@ impl Engine {
     }
 
     pub fn submit(&mut self, req: GenRequest) {
-        self.waiting.push_back((req, Instant::now(), 0));
-    }
-
-    /// Conservative cache-size estimate for admission: prompt + full
-    /// generation at the configured compression ratio, via the analytic
-    /// size model (FP16 methods estimate at 100%).
-    fn estimate_bytes(&self, prompt_len: usize, max_new: usize) -> usize {
-        let c = self.model.config();
-        let n = prompt_len + max_new;
-        let frac = match self.cfg.spec {
-            CacheSpec::Fp16 => 1.0,
-            CacheSpec::Compressed { method, buffer, .. } => {
-                // 1.25 safety factor: decode-phase chunks (n_b tokens at
-                // rank r_g) carry proportionally more low-rank/meta overhead
-                // than the analytic whole-matrix prediction.
-                1.25 * crate::gear::size::predict_cache_frac(
-                    method,
-                    n,
-                    c.d_model,
-                    c.n_layers,
-                    c.n_heads,
-                    buffer,
-                )
-            }
-            CacheSpec::H2o { keep, .. } => keep.max(0.05) + 0.05,
-        };
-        (c.fp16_kv_bytes(n) as f64 * frac).ceil() as usize
-    }
-
-    fn try_admit(&mut self) {
-        while self.active.len() < self.cfg.max_batch {
-            let Some((req, enq, preemptions)) = self.waiting.front().cloned() else { break };
-            let est = self.estimate_bytes(req.prompt.len(), req.max_new_tokens);
-            if !self.budget.try_reserve(est) {
-                // Can it ever fit? If nothing is active and it still fails,
-                // reject rather than deadlock.
-                if self.active.is_empty() {
-                    self.waiting.pop_front();
-                    self.metrics.requests_oom += 1;
-                    self.finished.push(GenResult {
-                        id: req.id,
-                        output: Vec::new(),
-                        finish: FinishReason::OutOfMemory,
-                        prompt_len: req.prompt.len(),
-                        preemptions,
-                        queue_secs: enq.elapsed().as_secs_f64(),
-                        run_secs: 0.0,
-                    });
-                    continue;
-                }
-                break;
-            }
-            self.waiting.pop_front();
-
-            // Prefill.
-            let c = self.model.config();
-            let mut cache = RequestCache::new(&self.cfg.spec, c.n_layers, c.d_model, c.n_heads);
-            let started_at = Instant::now();
-            let out = self.model.prefill(&req.prompt, &mut cache);
-            // Swap the estimate for real bytes.
-            let real = cache.nbytes();
-            let est_after = if real > est { real } else { est };
-            // Keep the conservative estimate reserved (it covers growth);
-            // shrink only if the estimate was below reality.
-            if real > est {
-                // Rare (estimate is conservative); grow reservation.
-                let _ = self.budget.adjust(est, real);
-            }
-            let mut rng = Rng::new(self.cfg.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
-            let first = req.sampler.sample(&out.last_logits, &mut rng);
-            let pos = req.prompt.len();
-            self.metrics.prompt_tokens += pos;
-            self.active.push(Active {
-                req,
-                cache,
-                reserved: est_after,
-                output: Vec::new(),
-                next_token: first,
-                pos,
-                preemptions,
-                rng,
-                enqueued_at: enq,
-                started_at,
-            });
-            self.metrics.max_concurrency = self.metrics.max_concurrency.max(self.active.len());
-        }
+        self.scheduler.submit(req);
     }
 
     /// Run one decode sweep over all active requests. Returns the number of
     /// tokens generated this step.
     fn sweep(&mut self) -> usize {
+        // Phase 1 — emit previously sampled tokens; retire finishes. The
+        // sampled token from the previous step/prefill is emitted first;
+        // stop tokens never enter the output.
+        let max_seq = self.model.config().max_seq;
         let mut produced = 0;
         let mut idx = 0;
         while idx < self.active.len() {
-            let a = &mut self.active[idx];
-            // The sampled token from the previous step/prefill is emitted
-            // first; stop tokens never enter the output.
-            if a.req.stop_tokens.contains(&a.next_token) {
-                Self::finish_at(
-                    &mut self.active,
-                    idx,
-                    &mut self.finished,
-                    &mut self.metrics,
-                    &self.budget,
-                    FinishReason::Stop,
-                );
+            let stopped = {
+                let a = &self.active[idx];
+                a.req.stop_tokens.contains(&a.next_token)
+            };
+            if stopped {
+                self.finish_at(idx, FinishReason::Stop);
                 continue;
             }
-            a.output.push(a.next_token);
+            let done = {
+                let a = &mut self.active[idx];
+                a.output.push(a.next_token);
+                a.output.len() >= a.req.max_new_tokens || a.pos + 1 >= max_seq
+            };
             produced += 1;
             self.metrics.generated_tokens += 1;
-            let done_len = a.output.len() >= a.req.max_new_tokens;
-            let done_ctx = a.pos + 1 >= self.model.config().max_seq;
-            if done_len || done_ctx {
-                Self::finish_at(
-                    &mut self.active,
-                    idx,
-                    &mut self.finished,
-                    &mut self.metrics,
-                    &self.budget,
-                    FinishReason::Length,
-                );
+            if done {
+                self.finish_at(idx, FinishReason::Length);
                 continue;
             }
-            let logits = self.model.decode_step(a.next_token, a.pos, &mut a.cache);
-            a.pos += 1;
-            a.next_token = a.req.sampler.sample(&logits, &mut a.rng);
-
-            // Track real cache growth against the reservation.
-            let real = a.cache.nbytes();
-            if real > a.reserved {
-                let old = a.reserved;
-                if self.budget.adjust(old, real) {
-                    a.reserved = real;
-                } else {
-                    // Budget exhausted: preempt the youngest active request.
-                    self.preempt_youngest();
-                    // Current index may have shifted; restart the sweep scan.
-                    idx = 0;
-                    continue;
-                }
-            }
             idx += 1;
+        }
+        if self.active.is_empty() {
+            return produced;
+        }
+
+        // Phase 2 — one batched decode step for every survivor. Requests
+        // are re-found by admission serial afterwards (caller-chosen
+        // `req.id`s need not be unique; serials are).
+        let serials: Vec<u64> = self.active.iter().map(|a| a.serial).collect();
+        let logits = {
+            let mut refs: Vec<&mut ActiveRequest> = self.active.iter_mut().collect();
+            self.executor.run(&self.model, &mut refs)
+        };
+
+        // Phase 3 — commit in batch order: sample, grow reservations,
+        // preempt on exhaustion. A request preempted by an earlier commit
+        // in this loop is skipped (its state was dropped and requeued).
+        for (lg, serial) in logits.into_iter().zip(serials) {
+            let Some(i) = self.active.iter().position(|a| a.serial == serial) else { continue };
+            let real = {
+                let a = &mut self.active[i];
+                a.pos += 1;
+                a.next_token = a.req.sampler.sample(&lg, &mut a.rng);
+                a.cache.nbytes()
+            };
+            loop {
+                let Some(i) = self.active.iter().position(|a| a.serial == serial) else { break };
+                let old = self.active[i].reserved;
+                if real <= old {
+                    break;
+                }
+                if self.scheduler.budget.adjust(old, real) {
+                    self.active[i].reserved = real;
+                    break;
+                }
+                // Budget exhausted: preempt the youngest and retry. Each
+                // preemption shrinks the active set, so this terminates —
+                // in the worst case the committing request itself is
+                // preempted (or OOM-finished when it is the last one).
+                self.scheduler.preempt_youngest(
+                    &mut self.active,
+                    &mut self.finished,
+                    &mut self.metrics,
+                );
+            }
         }
         produced
     }
 
-    fn finish_at(
-        active: &mut Vec<Active>,
-        idx: usize,
-        finished: &mut Vec<GenResult>,
-        metrics: &mut EngineMetrics,
-        budget: &MemoryBudget,
-        finish: FinishReason,
-    ) {
-        let a = active.swap_remove(idx);
-        budget.release(a.reserved);
-        metrics.requests_finished += 1;
-        finished.push(GenResult {
-            id: a.req.id,
-            output: a.output,
-            finish,
-            prompt_len: a.req.prompt.len(),
-            preemptions: a.preemptions,
-            queue_secs: (a.started_at - a.enqueued_at).as_secs_f64(),
-            run_secs: a.started_at.elapsed().as_secs_f64(),
-        });
-    }
-
-    fn preempt_youngest(&mut self) {
-        // Youngest = last admitted (highest started_at).
-        if let Some(idx) = (0..self.active.len()).max_by_key(|&i| self.active[i].started_at) {
-            let a = self.active.swap_remove(idx);
-            self.budget.release(a.reserved);
-            // A sole request that still can't grow will never fit: fail it
-            // rather than livelock on preempt/re-admit.
-            if self.active.is_empty() {
-                self.metrics.requests_oom += 1;
-                self.finished.push(GenResult {
-                    id: a.req.id,
-                    output: a.output,
-                    finish: FinishReason::OutOfMemory,
-                    prompt_len: a.req.prompt.len(),
-                    preemptions: a.preemptions,
-                    queue_secs: (a.started_at - a.enqueued_at).as_secs_f64(),
-                    run_secs: a.started_at.elapsed().as_secs_f64(),
-                });
-                return;
-            }
-            self.metrics.requests_preempted += 1;
-            // Requeue at the front with its original enqueue time.
-            self.waiting.push_front((a.req, a.enqueued_at, a.preemptions + 1));
-        }
+    fn finish_at(&mut self, idx: usize, finish: FinishReason) {
+        let a = self.active.swap_remove(idx);
+        self.scheduler.budget.release(a.reserved);
+        self.metrics.requests_finished += 1;
+        self.finished.push(a.into_result(finish));
     }
 
     /// Drive the engine until all submitted work is done; returns results
@@ -301,11 +207,16 @@ impl Engine {
         let t0 = Instant::now();
         // Reset component timers so the breakdown covers only this run.
         let _ = crate::gear::take_phase_timings();
-        self.budget.reset_peak();
+        self.scheduler.budget.reset_peak();
         loop {
-            self.try_admit();
+            self.scheduler.try_admit(
+                &self.model,
+                &mut self.active,
+                &mut self.finished,
+                &mut self.metrics,
+            );
             if self.active.is_empty() {
-                if self.waiting.is_empty() {
+                if self.scheduler.waiting_len() == 0 {
                     break;
                 }
                 // Nothing active and nothing admittable -> the head request
@@ -316,13 +227,14 @@ impl Engine {
             self.sweep();
         }
         self.metrics.wall += t0.elapsed();
-        self.metrics.peak_cache_bytes = self.metrics.peak_cache_bytes.max(self.budget.peak());
+        self.metrics.peak_cache_bytes =
+            self.metrics.peak_cache_bytes.max(self.scheduler.budget.peak());
         self.metrics.phases.merge(&crate::gear::take_phase_timings());
         std::mem::take(&mut self.finished)
     }
 
     pub fn pending(&self) -> usize {
-        self.waiting.len() + self.active.len()
+        self.scheduler.waiting_len() + self.active.len()
     }
 }
 
@@ -364,6 +276,42 @@ mod tests {
             e.run_to_completion().pop().unwrap().output
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn duplicate_request_ids_both_served() {
+        // Caller-chosen ids need not be unique: the commit phase keys on
+        // admission serials, so twin ids must not cross-contaminate state.
+        let mut e = tiny_engine(CacheSpec::Fp16, usize::MAX);
+        e.submit(GenRequest::greedy(7, vec![1, 2, 3], 6));
+        e.submit(GenRequest::greedy(7, vec![1, 2, 3], 6));
+        let results = e.run_to_completion();
+        assert_eq!(results.len(), 2);
+        // Same id + same prompt -> same sampler seed -> identical streams.
+        assert_eq!(results[0].output, results[1].output);
+        assert!(results.iter().all(|r| r.output.len() <= 6));
+    }
+
+    #[test]
+    fn sequential_mode_matches_batched_mode() {
+        // The two execution planes must agree token-for-token.
+        let run = |exec: ExecMode| {
+            let cfg =
+                ModelConfig { vocab: 13, d_model: 32, n_layers: 2, n_heads: 4, max_seq: 96 };
+            let model = Model::new(ModelWeights::random(cfg, 7));
+            let mut e = Engine::new(
+                model,
+                EngineConfig::new(CacheSpec::gear(4)).with_exec(exec),
+            );
+            // ≥ MIN_FANOUT requests so the batched mode actually threads.
+            for i in 0..9 {
+                e.submit(GenRequest::greedy(i, vec![1, 2, 3 + (i % 7) as u32], 12));
+            }
+            let mut res = e.run_to_completion();
+            res.sort_by_key(|r| r.id);
+            res.into_iter().map(|r| (r.id, r.output, r.finish)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(ExecMode::Sequential), run(ExecMode::Batched));
     }
 
     #[test]

@@ -1,0 +1,118 @@
+//! The execution plane: one batched decode step over the whole active set.
+//!
+//! The executor owns no policy. It receives the active requests in engine
+//! order, runs [`Model::decode_batch_with`] over them — layer-major, so each
+//! block's weights are streamed once per step for the whole batch — and
+//! returns per-request logits in the same order.
+//!
+//! Parallelism: the batch is split into contiguous chunks, one scoped worker
+//! thread per chunk (`std::thread::scope`; the offline vendor set has no
+//! rayon, and scoped threads give the same fixed-order reduction a rayon
+//! pool would). Each worker owns a [`DecodeBufs`] so the per-layer inner
+//! loop is allocation-free (per sweep there remain O(batch) small setup
+//! allocations: hidden-state and logits vectors), and results are
+//! stitched back together in chunk order —
+//! a fixed-order reduction. Every request's forward touches only its own
+//! cache and hidden state, so the parallel step is **bit-identical** to the
+//! sequential one; the engine's golden test pins this.
+//!
+//! GEAR component timings accumulate in worker-thread thread-locals; the
+//! executor drains them and folds them back into the engine thread's
+//! accumulator so the Fig 3a breakdown still covers off-thread work.
+
+use crate::model::transformer::{DecodeBufs, DecodeSlot};
+use crate::model::Model;
+use crate::util::timing::PhaseTimer;
+
+use super::scheduler::ActiveRequest;
+
+/// How the engine executes a decode sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Whole batch on the engine thread (the reference semantics).
+    Sequential,
+    /// Batch chunked across scoped worker threads.
+    Batched,
+}
+
+/// Executes batched decode steps for the engine.
+pub struct BatchExecutor {
+    mode: ExecMode,
+    /// Worker-thread cap (host parallelism for `Batched`, 1 for
+    /// `Sequential`).
+    workers: usize,
+    /// Engine-thread scratch, used for inline (unthreaded) execution.
+    bufs: DecodeBufs,
+}
+
+/// Batches smaller than this run inline (still layer-major, just
+/// unthreaded): per-sweep thread spawn plus per-worker scratch setup costs
+/// tens of microseconds, which dominates small-model decode steps. 8 is
+/// where the parallel win is promised and measured (`bench_throughput
+/// -- --compare`); below it the inline path is never slower than the old
+/// per-request loop.
+const MIN_FANOUT: usize = 8;
+
+impl BatchExecutor {
+    pub fn new(model: &Model, mode: ExecMode) -> BatchExecutor {
+        let workers = match mode {
+            ExecMode::Sequential => 1,
+            ExecMode::Batched => {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }
+        };
+        BatchExecutor { mode, workers, bufs: DecodeBufs::new(model.config()) }
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Advance every request in `batch` one decode step; logits come back
+    /// in `batch` order regardless of which worker produced them.
+    pub fn run(&mut self, model: &Model, batch: &mut [&mut ActiveRequest]) -> Vec<Vec<f32>> {
+        let b = batch.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        let workers = self.workers.min(b);
+        if workers <= 1 || b < MIN_FANOUT {
+            let mut slots: Vec<DecodeSlot> = batch
+                .iter_mut()
+                .map(|a| DecodeSlot { token: a.next_token, pos: a.pos, cache: &mut a.cache })
+                .collect();
+            return model.decode_batch_with(&mut slots, &mut self.bufs);
+        }
+
+        let chunk = b.div_ceil(workers);
+        let n_chunks = b.div_ceil(chunk);
+        let mut partials: Vec<(Vec<Vec<f32>>, PhaseTimer)> =
+            (0..n_chunks).map(|_| (Vec::new(), PhaseTimer::new())).collect();
+        std::thread::scope(|s| {
+            for (reqs, out) in batch.chunks_mut(chunk).zip(partials.iter_mut()) {
+                s.spawn(move || {
+                    let mut bufs = DecodeBufs::new(model.config());
+                    let mut slots: Vec<DecodeSlot> = reqs
+                        .iter_mut()
+                        .map(|a| DecodeSlot {
+                            token: a.next_token,
+                            pos: a.pos,
+                            cache: &mut a.cache,
+                        })
+                        .collect();
+                    let logits = model.decode_batch_with(&mut slots, &mut bufs);
+                    *out = (logits, crate::gear::take_phase_timings());
+                });
+            }
+        });
+
+        // Fixed-order reduction: chunk order == batch order.
+        let mut logits = Vec::with_capacity(b);
+        for (part, phases) in partials {
+            logits.extend(part);
+            crate::gear::merge_phase_timings(&phases);
+        }
+        debug_assert_eq!(logits.len(), b);
+        logits
+    }
+}

@@ -14,6 +14,9 @@ pub struct EngineMetrics {
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
     pub wall: Duration,
+    /// Wall time spent in admission prefills (a serial, engine-thread cost
+    /// identical across exec modes; subtract it to compare decode planes).
+    pub prefill: Duration,
     /// Peak KV-cache bytes across the run (from the budget tracker).
     pub peak_cache_bytes: usize,
     /// Wall time attributed to GEAR components (quant/sparse/lowrank) vs
@@ -27,6 +30,13 @@ impl EngineMetrics {
     /// Generated tokens per second of wall time.
     pub fn throughput(&self) -> f64 {
         self.generated_tokens as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Generated tokens per second of *decode* wall time (prefill
+    /// excluded) — the decode-plane comparison metric.
+    pub fn decode_throughput(&self) -> f64 {
+        let secs = self.wall.saturating_sub(self.prefill).as_secs_f64();
+        self.generated_tokens as f64 / secs.max(1e-9)
     }
 
     /// Fig 3a rows: (component, seconds, fraction of total wall).

@@ -1,22 +1,38 @@
-//! The serving coordinator (layer 3).
+//! The serving coordinator (layer 3): a two-plane engine for GEAR-compressed
+//! KV caches.
 //!
-//! A vLLM-style engine specialized for GEAR-compressed KV caches:
+//! The engine is split into a **scheduling plane** (policy) and an
+//! **execution plane** (model math), composed by [`engine::Engine`]:
 //!
+//! * [`scheduler`] — the policy half: FCFS admission against a byte budget,
+//!   recompute preemption of the youngest request, finish bookkeeping.
+//!   Deterministic and sequential by construction.
+//! * [`executor`] — the execution half: one layer-major batched decode step
+//!   for the whole active set per sweep, chunked across scoped worker
+//!   threads with a fixed-order reduction. Bit-identical to sequential
+//!   execution; [`executor::ExecMode`] selects between them.
+//! * [`engine`] — the composition: emit → execute → commit sweeps over a
+//!   byte-budgeted cache pool.
 //! * [`request`] — generation requests, results, lifecycle states.
-//! * [`engine`] — continuous-batching prefill/decode loop over a byte-
-//!   budgeted cache pool, with preemption when memory runs out.
 //! * [`metrics`] — latency/throughput counters + the GEAR component time
-//!   breakdown (Fig 3a).
+//!   breakdown (Fig 3a), including work done on executor workers.
 //! * [`device_model`] — analytic V100-class step-time model used by the
-//!   throughput benches (this testbed is a single CPU core; see DESIGN.md
-//!   §3 on why byte accounting + a bandwidth model reproduces Fig 3b/3c).
+//!   throughput benches (see DESIGN.md §3 on why byte accounting + a
+//!   bandwidth model reproduces Fig 3b/3c).
 //! * [`server`] — a minimal TCP line-protocol front-end.
+//!
+//! Later PRs extend the execution plane without touching policy: prefill
+//! chunking slots in as a second executor entry point, and shard-per-layer
+//! execution replaces the chunk split inside [`executor::BatchExecutor`].
 
 pub mod device_model;
 pub mod engine;
+pub mod executor;
 pub mod metrics;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
 pub use engine::{Engine, EngineConfig};
+pub use executor::ExecMode;
 pub use request::{GenRequest, GenResult, RequestId};

@@ -1,0 +1,215 @@
+//! The scheduling plane: admission, budget accounting, and preemption
+//! *policy*. No model math happens here — the execution plane
+//! ([`super::executor`]) owns that. The engine composes the two.
+//!
+//! Policy (vLLM-flavored, unchanged from the single-plane engine):
+//! * **Admission** — FCFS while the active set is below `max_batch` and the
+//!   byte budget can hold a conservative whole-lifetime estimate of the
+//!   request's cache.
+//! * **Preemption** — when a reservation cannot grow mid-sweep, the
+//!   *youngest* active request is preempted (recompute preemption: cache
+//!   dropped, requeued at the front). A request that cannot fit even alone
+//!   finishes as `OutOfMemory`.
+//!
+//! Everything is deterministic: FCFS order, per-request seeded samplers,
+//! and fixed iteration order in the engine's commit phase.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::kvcache::budget::MemoryBudget;
+use crate::kvcache::{CacheSpec, RequestCache};
+use crate::model::Model;
+use crate::util::rng::Rng;
+
+use super::engine::EngineConfig;
+use super::metrics::EngineMetrics;
+use super::request::{FinishReason, GenRequest, GenResult};
+
+/// One admitted request's full decode state. Owned by the engine's active
+/// set; the executor borrows `(next_token, pos, cache)` for each sweep.
+pub struct ActiveRequest {
+    /// Engine-internal admission serial, unique per (re)admission. The
+    /// commit phase keys on this rather than `req.id` — caller-chosen ids
+    /// are not required to be unique.
+    pub serial: u64,
+    pub req: GenRequest,
+    pub cache: RequestCache,
+    /// Bytes currently reserved in the budget for this request.
+    pub reserved: usize,
+    pub output: Vec<u32>,
+    /// Next token to feed (last sampled).
+    pub next_token: u32,
+    /// Position of the next decode step.
+    pub pos: usize,
+    pub preemptions: usize,
+    pub rng: Rng,
+    pub enqueued_at: Instant,
+    pub started_at: Instant,
+}
+
+impl ActiveRequest {
+    /// Consume into a finished result.
+    pub fn into_result(self, finish: FinishReason) -> GenResult {
+        GenResult {
+            id: self.req.id,
+            output: self.output,
+            finish,
+            prompt_len: self.req.prompt.len(),
+            preemptions: self.preemptions,
+            queue_secs: (self.started_at - self.enqueued_at).as_secs_f64(),
+            run_secs: self.started_at.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Admission queue + memory budget: the policy half of the engine.
+pub struct Scheduler {
+    cfg: EngineConfig,
+    pub budget: MemoryBudget,
+    waiting: VecDeque<(GenRequest, Instant, usize)>,
+    /// Next admission serial (see [`ActiveRequest::serial`]).
+    next_serial: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: EngineConfig) -> Scheduler {
+        let budget = MemoryBudget::new(cfg.budget_bytes);
+        Scheduler { cfg, budget, waiting: VecDeque::new(), next_serial: 0 }
+    }
+
+    pub fn submit(&mut self, req: GenRequest) {
+        self.waiting.push_back((req, Instant::now(), 0));
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Requeue a preempted request at the front with its original enqueue
+    /// time (recompute preemption).
+    pub fn requeue_front(&mut self, req: GenRequest, enqueued_at: Instant, preemptions: usize) {
+        self.waiting.push_front((req, enqueued_at, preemptions));
+    }
+
+    /// Conservative cache-size estimate for admission: prompt + full
+    /// generation at the configured compression ratio, via the analytic
+    /// size model (FP16 methods estimate at 100%).
+    fn estimate_bytes(&self, model: &Model, prompt_len: usize, max_new: usize) -> usize {
+        let c = model.config();
+        let n = prompt_len + max_new;
+        let frac = match self.cfg.spec {
+            CacheSpec::Fp16 => 1.0,
+            CacheSpec::Compressed { method, buffer, .. } => {
+                // 1.25 safety factor: decode-phase chunks (n_b tokens at
+                // rank r_g) carry proportionally more low-rank/meta overhead
+                // than the analytic whole-matrix prediction.
+                1.25 * crate::gear::size::predict_cache_frac(
+                    method,
+                    n,
+                    c.d_model,
+                    c.n_layers,
+                    c.n_heads,
+                    buffer,
+                )
+            }
+            CacheSpec::H2o { keep, .. } => keep.max(0.05) + 0.05,
+        };
+        (c.fp16_kv_bytes(n) as f64 * frac).ceil() as usize
+    }
+
+    /// Admit waiting requests FCFS into `active` while the batch and byte
+    /// budgets allow, running each admitted request's prefill. Requests
+    /// that can never fit finish as `OutOfMemory`.
+    pub fn try_admit(
+        &mut self,
+        model: &Model,
+        active: &mut Vec<ActiveRequest>,
+        finished: &mut Vec<GenResult>,
+        metrics: &mut EngineMetrics,
+    ) {
+        while active.len() < self.cfg.max_batch {
+            let Some((req, enq, preemptions)) = self.waiting.front().cloned() else { break };
+            let est = self.estimate_bytes(model, req.prompt.len(), req.max_new_tokens);
+            if !self.budget.try_reserve(est) {
+                // Can it ever fit? If nothing is active and it still fails,
+                // reject rather than deadlock.
+                if active.is_empty() {
+                    self.waiting.pop_front();
+                    metrics.requests_oom += 1;
+                    finished.push(GenResult {
+                        id: req.id,
+                        output: Vec::new(),
+                        finish: FinishReason::OutOfMemory,
+                        prompt_len: req.prompt.len(),
+                        preemptions,
+                        queue_secs: enq.elapsed().as_secs_f64(),
+                        run_secs: 0.0,
+                    });
+                    continue;
+                }
+                break;
+            }
+            self.waiting.pop_front();
+
+            // Prefill.
+            let c = model.config();
+            let mut cache = RequestCache::new(&self.cfg.spec, c.n_layers, c.d_model, c.n_heads);
+            let started_at = Instant::now();
+            let out = model.prefill(&req.prompt, &mut cache);
+            metrics.prefill += started_at.elapsed();
+            // Swap the estimate for real bytes.
+            let real = cache.nbytes();
+            let est_after = if real > est { real } else { est };
+            // Keep the conservative estimate reserved (it covers growth);
+            // grow only if the estimate was below reality (rare).
+            if real > est {
+                let _ = self.budget.adjust(est, real);
+            }
+            let mut rng = Rng::new(self.cfg.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
+            let first = req.sampler.sample(&out.last_logits, &mut rng);
+            let pos = req.prompt.len();
+            metrics.prompt_tokens += pos;
+            let serial = self.next_serial;
+            self.next_serial += 1;
+            active.push(ActiveRequest {
+                serial,
+                req,
+                cache,
+                reserved: est_after,
+                output: Vec::new(),
+                next_token: first,
+                pos,
+                preemptions,
+                rng,
+                enqueued_at: enq,
+                started_at,
+            });
+            metrics.max_concurrency = metrics.max_concurrency.max(active.len());
+        }
+    }
+
+    /// Preempt the youngest active request (highest `started_at`): release
+    /// its reservation and requeue it at the front. If it was the *only*
+    /// active request it can never fit and finishes as `OutOfMemory`
+    /// (avoids a preempt/re-admit livelock).
+    pub fn preempt_youngest(
+        &mut self,
+        active: &mut Vec<ActiveRequest>,
+        finished: &mut Vec<GenResult>,
+        metrics: &mut EngineMetrics,
+    ) {
+        if let Some(idx) = (0..active.len()).max_by_key(|&i| active[i].started_at) {
+            let a = active.swap_remove(idx);
+            self.budget.release(a.reserved);
+            if active.is_empty() {
+                metrics.requests_oom += 1;
+                finished.push(a.into_result(FinishReason::OutOfMemory));
+                return;
+            }
+            metrics.requests_preempted += 1;
+            let (req, enq, preemptions) = (a.req, a.enqueued_at, a.preemptions + 1);
+            self.requeue_front(req, enq, preemptions);
+        }
+    }
+}

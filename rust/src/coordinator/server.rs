@@ -11,7 +11,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use crate::util::error::{Error, Result};
 
 use crate::model::config::Tokenizer;
 use crate::model::Model;
@@ -39,8 +39,8 @@ impl EngineClient {
         let (reply_tx, reply_rx) = channel();
         self.tx
             .send(Submission { req, reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("engine thread terminated"))?;
-        reply_rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))
+            .map_err(|_| Error::msg("engine thread terminated"))?;
+        reply_rx.recv().map_err(|_| Error::msg("engine dropped request"))
     }
 }
 

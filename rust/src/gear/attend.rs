@@ -7,12 +7,41 @@
 //! optimization"); for the value side, `pᵀ(A Bᵀ)` is `(pᵀ A) Bᵀ`. Both cost
 //! O((n + d_H)·r) per head instead of O(n·d_H·r).
 //!
+//! All kernels operate through a caller-owned [`SegScratch`]: the dequant
+//! row buffer, the per-column scale/zero gather plan, and the rank-sized
+//! down-projection `Bᵀq` each live in the scratch and are computed once per
+//! segment per call — the batch executor hands every worker one scratch, so
+//! no allocation happens in the sweep hot loop. The legacy `*_into` entry
+//! points allocate a throwaway scratch for callers that don't batch.
+//!
 //! Layout convention: multi-head scores/probabilities are stored row-major
 //! per token: `s[t * n_heads + h]`.
 
 use super::compose::CompressedMatrix;
-use super::quant::Axis;
+use super::quant::{Axis, RowDequantPlan};
 use crate::tensor::ops::dot;
+
+/// Per-segment kernel scratch: reusable buffers for the fused score /
+/// weighted-sum kernels. One instance per executor worker; sized lazily to
+/// the largest segment it has seen.
+#[derive(Debug, Default, Clone)]
+pub struct SegScratch {
+    /// Dequantized-row staging buffer (`cols` long while in use).
+    pub row: Vec<f32>,
+    /// Low-rank down-projection `Bᵀq` / up-projection `pᵀA` (`r` long).
+    pub w: Vec<f32>,
+    /// Scale/zero gather plan for Col-axis quantization schemes.
+    pub plan: RowDequantPlan,
+}
+
+/// Grow `buf` to at least `n` and return the `n`-prefix.
+#[inline]
+fn prep(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
+}
 
 impl CompressedMatrix {
     /// Accumulate attention scores of query `q` (d-dim, heads concatenated)
@@ -20,6 +49,20 @@ impl CompressedMatrix {
     ///
     /// `out` must hold `rows * n_heads` values (pre-zeroed by the caller).
     pub fn scores_into(&self, q: &[f32], n_heads: usize, scale: f32, out: &mut [f32]) {
+        let mut scratch = SegScratch::default();
+        self.scores_into_scratch(q, n_heads, scale, &mut scratch, out);
+    }
+
+    /// Scratch-reusing form of [`Self::scores_into`] — the batched decode
+    /// hot path. `scratch` may be shared across segments and calls.
+    pub fn scores_into_scratch(
+        &self,
+        q: &[f32],
+        n_heads: usize,
+        scale: f32,
+        scratch: &mut SegScratch,
+        out: &mut [f32],
+    ) {
         let (n, d) = (self.rows, self.cols);
         debug_assert_eq!(q.len(), d);
         debug_assert_eq!(out.len(), n * n_heads);
@@ -40,10 +83,10 @@ impl CompressedMatrix {
         // Quantized backbone: dequantize a row at a time into scratch.
         if let Some(qm) = &self.quant {
             let t0 = std::time::Instant::now();
-            let mut row = vec![0.0f32; d];
-            let mut plan = qm.row_plan();
+            scratch.plan.prepare(d);
+            let row = prep(&mut scratch.row, d);
             for t in 0..n {
-                qm.dequantize_row_planned(t, &mut plan, &mut row);
+                qm.dequantize_row_planned(t, &mut scratch.plan, row);
                 for h in 0..n_heads {
                     out[t * n_heads + h] +=
                         scale * dot(&q[h * dh..(h + 1) * dh], &row[h * dh..(h + 1) * dh]);
@@ -64,12 +107,15 @@ impl CompressedMatrix {
         }
 
         // Low-rank, factored: per head w = B_hᵀ q_h (r), then out += w·A_h[t].
+        // The down-projection is computed once per (segment, head) into the
+        // shared scratch instead of a fresh allocation each time.
         if let Some(lrh) = &self.lowrank {
             let t0 = std::time::Instant::now();
             for (h, lr) in lrh.heads.iter().enumerate() {
                 let qh = &q[h * dh..(h + 1) * dh];
                 let r = lr.r;
-                let mut w = vec![0.0f32; r];
+                let w = prep(&mut scratch.w, r);
+                w.fill(0.0);
                 for j in 0..dh {
                     let brow = &lr.b[j * r..(j + 1) * r];
                     let qj = qh[j];
@@ -81,7 +127,7 @@ impl CompressedMatrix {
                     }
                 }
                 for t in 0..n {
-                    out[t * n_heads + h] += scale * dot(&w, &lr.a[t * r..(t + 1) * r]);
+                    out[t * n_heads + h] += scale * dot(w, &lr.a[t * r..(t + 1) * r]);
                 }
             }
             super::record_phase("lowrank", t0.elapsed());
@@ -91,6 +137,18 @@ impl CompressedMatrix {
     /// Accumulate the attention-weighted value sum:
     /// `out[h*dh + c] += Σ_t p[t*H + h] · V[t]_{h,c}`.
     pub fn weighted_sum_into(&self, probs: &[f32], n_heads: usize, out: &mut [f32]) {
+        let mut scratch = SegScratch::default();
+        self.weighted_sum_into_scratch(probs, n_heads, &mut scratch, out);
+    }
+
+    /// Scratch-reusing form of [`Self::weighted_sum_into`].
+    pub fn weighted_sum_into_scratch(
+        &self,
+        probs: &[f32],
+        n_heads: usize,
+        scratch: &mut SegScratch,
+        out: &mut [f32],
+    ) {
         let (n, d) = (self.rows, self.cols);
         debug_assert_eq!(probs.len(), n * n_heads);
         debug_assert_eq!(out.len(), d);
@@ -116,10 +174,10 @@ impl CompressedMatrix {
 
         if let Some(qm) = &self.quant {
             let t0 = std::time::Instant::now();
-            let mut row = vec![0.0f32; d];
-            let mut plan = qm.row_plan();
+            scratch.plan.prepare(d);
+            let row = prep(&mut scratch.row, d);
             for t in 0..n {
-                qm.dequantize_row_planned(t, &mut plan, &mut row);
+                qm.dequantize_row_planned(t, &mut scratch.plan, row);
                 for h in 0..n_heads {
                     let p = probs[t * n_heads + h];
                     crate::tensor::ops::axpy(
@@ -147,17 +205,18 @@ impl CompressedMatrix {
             let t0 = std::time::Instant::now();
             for (h, lr) in lrh.heads.iter().enumerate() {
                 let r = lr.r;
-                let mut w = vec![0.0f32; r];
+                let w = prep(&mut scratch.w, r);
+                w.fill(0.0);
                 for t in 0..n {
                     let p = probs[t * n_heads + h];
                     if p == 0.0 {
                         continue;
                     }
-                    crate::tensor::ops::axpy(p, &lr.a[t * r..(t + 1) * r], &mut w);
+                    crate::tensor::ops::axpy(p, &lr.a[t * r..(t + 1) * r], w);
                 }
                 let oh = &mut out[h * dh..(h + 1) * dh];
                 for j in 0..dh {
-                    oh[j] += dot(&w, &lr.b[j * r..(j + 1) * r]);
+                    oh[j] += dot(w, &lr.b[j * r..(j + 1) * r]);
                 }
             }
             super::record_phase("lowrank", t0.elapsed());

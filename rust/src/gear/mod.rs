@@ -61,6 +61,14 @@ pub fn take_phase_timings() -> crate::util::timing::PhaseTimer {
     PHASE_TIMER.with(|t| std::mem::take(&mut *t.borrow_mut()))
 }
 
+/// Merge externally-collected component timings into this thread's
+/// accumulator. The batch executor's worker threads each accumulate into
+/// their own thread-local; the engine folds them back through this so the
+/// Fig 3a breakdown still covers work done off the engine thread.
+pub fn merge_phase_timings(other: &crate::util::timing::PhaseTimer) {
+    PHASE_TIMER.with(|t| t.borrow_mut().merge(other));
+}
+
 /// Whether a matrix is a Key or Value cache. Keys are quantized / filtered
 /// per-channel (column vectors), Values per-token (row vectors), following
 /// KIVI / KVQuant's observation that Key outliers live in fixed channels.

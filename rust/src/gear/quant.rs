@@ -341,11 +341,31 @@ impl QuantizedMatrix {
 }
 
 /// Scratch state for a planned row sweep (see `QuantizedMatrix::row_plan`).
+///
+/// A plan caches the per-column scale/zero gather of one sub-block of one
+/// matrix; reusing it against a *different* matrix requires [`Self::prepare`]
+/// first, which invalidates the cached gather and re-sizes the buffers.
 #[derive(Debug, Clone)]
 pub struct RowDequantPlan {
     cur_sub: usize,
     scale_row: Vec<f32>,
     zero_row: Vec<f32>,
+}
+
+impl Default for RowDequantPlan {
+    fn default() -> Self {
+        RowDequantPlan { cur_sub: usize::MAX, scale_row: Vec::new(), zero_row: Vec::new() }
+    }
+}
+
+impl RowDequantPlan {
+    /// Re-arm the plan for a (possibly different) matrix with `cols`
+    /// columns. Cheap when the size is unchanged.
+    pub fn prepare(&mut self, cols: usize) {
+        self.cur_sub = usize::MAX;
+        self.scale_row.resize(cols, 0.0);
+        self.zero_row.resize(cols, 0.0);
+    }
 }
 
 /// Flat group index of element (i, j).

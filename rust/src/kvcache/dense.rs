@@ -8,7 +8,7 @@ use crate::tensor::ops::dot;
 use crate::tensor::Tensor;
 use crate::util::f16::to_f16_precision;
 
-use super::LayerKv;
+use super::{AttendScratch, LayerKv};
 
 pub struct DenseLayerKv {
     d: usize,
@@ -16,13 +16,11 @@ pub struct DenseLayerKv {
     k: Vec<f32>,
     v: Vec<f32>,
     n: usize,
-    /// Scratch reused across attend calls (no allocation in the hot loop).
-    scores: Vec<f32>,
 }
 
 impl DenseLayerKv {
     pub fn new(d: usize) -> Self {
-        DenseLayerKv { d, k: Vec::new(), v: Vec::new(), n: 0, scores: Vec::new() }
+        DenseLayerKv { d, k: Vec::new(), v: Vec::new(), n: 0 }
     }
 
     fn push_rows(&mut self, k: &[f32], v: &[f32]) {
@@ -55,30 +53,37 @@ impl LayerKv for DenseLayerKv {
         self.n
     }
 
-    fn attend(&mut self, q: &[f32], n_heads: usize, out: &mut [f32]) {
+    fn attend_scratch(
+        &mut self,
+        q: &[f32],
+        n_heads: usize,
+        scratch: &mut AttendScratch,
+        out: &mut [f32],
+    ) {
         let (n, d) = (self.n, self.d);
         debug_assert_eq!(q.len(), d);
         debug_assert_eq!(out.len(), d);
         let dh = d / n_heads;
         let scale = 1.0 / (dh as f32).sqrt();
 
-        self.scores.clear();
-        self.scores.resize(n * n_heads, 0.0);
+        let scores = &mut scratch.scores;
+        scores.clear();
+        scores.resize(n * n_heads, 0.0);
         for t in 0..n {
             let krow = &self.k[t * d..(t + 1) * d];
             for h in 0..n_heads {
-                self.scores[t * n_heads + h] =
+                scores[t * n_heads + h] =
                     scale * dot(&q[h * dh..(h + 1) * dh], &krow[h * dh..(h + 1) * dh]);
             }
         }
         // Per-head softmax over the token axis (stride n_heads).
-        softmax_heads(&mut self.scores, n, n_heads);
+        softmax_heads(scores, n, n_heads);
 
         out.fill(0.0);
         for t in 0..n {
             let vrow = &self.v[t * d..(t + 1) * d];
             for h in 0..n_heads {
-                let p = self.scores[t * n_heads + h];
+                let p = scores[t * n_heads + h];
                 crate::tensor::ops::axpy(p, &vrow[h * dh..(h + 1) * dh], &mut out[h * dh..(h + 1) * dh]);
             }
         }

@@ -16,7 +16,7 @@ use crate::tensor::Tensor;
 use crate::util::f16::to_f16_precision;
 
 use super::dense::softmax_heads;
-use super::LayerKv;
+use super::{AttendScratch, LayerKv};
 
 pub struct GearLayerKv {
     d: usize,
@@ -34,8 +34,6 @@ pub struct GearLayerKv {
     buf_n: usize,
     /// Total tokens across segments (excluding buffer).
     seg_tokens: usize,
-    /// Scratch for attend (scores across all tokens), reused.
-    scores: Vec<f32>,
 }
 
 impl GearLayerKv {
@@ -61,7 +59,6 @@ impl GearLayerKv {
             buf_v: Vec::new(),
             buf_n: 0,
             seg_tokens: 0,
-            scores: Vec::new(),
         }
     }
 
@@ -131,7 +128,13 @@ impl LayerKv for GearLayerKv {
         self.seg_tokens + self.buf_n
     }
 
-    fn attend(&mut self, q: &[f32], n_heads: usize, out: &mut [f32]) {
+    fn attend_scratch(
+        &mut self,
+        q: &[f32],
+        n_heads: usize,
+        scratch: &mut AttendScratch,
+        out: &mut [f32],
+    ) {
         let d = self.d;
         debug_assert_eq!(n_heads, self.n_heads);
         debug_assert_eq!(q.len(), d);
@@ -140,32 +143,42 @@ impl LayerKv for GearLayerKv {
         let scale = 1.0 / (dh as f32).sqrt();
         let total = self.len();
 
-        self.scores.clear();
-        self.scores.resize(total * n_heads, 0.0);
+        // Split the scratch so score storage and per-segment kernel buffers
+        // can be borrowed simultaneously.
+        let AttendScratch { scores, seg: kscratch } = scratch;
+        scores.clear();
+        scores.resize(total * n_heads, 0.0);
 
         // Scores: fused against each compressed K segment, dense against buffer.
         let mut off = 0usize;
         for seg in &self.seg_k {
-            seg.scores_into(q, n_heads, scale, &mut self.scores[off * n_heads..(off + seg.rows) * n_heads]);
+            seg.scores_into_scratch(
+                q,
+                n_heads,
+                scale,
+                kscratch,
+                &mut scores[off * n_heads..(off + seg.rows) * n_heads],
+            );
             off += seg.rows;
         }
         for t in 0..self.buf_n {
             let krow = &self.buf_k[t * d..(t + 1) * d];
             for h in 0..n_heads {
-                self.scores[(off + t) * n_heads + h] =
+                scores[(off + t) * n_heads + h] =
                     scale * dot(&q[h * dh..(h + 1) * dh], &krow[h * dh..(h + 1) * dh]);
             }
         }
 
-        softmax_heads(&mut self.scores, total, n_heads);
+        softmax_heads(scores, total, n_heads);
 
         // Weighted value sum, fused per segment.
         out.fill(0.0);
         let mut off = 0usize;
         for seg in &self.seg_v {
-            seg.weighted_sum_into(
-                &self.scores[off * n_heads..(off + seg.rows) * n_heads],
+            seg.weighted_sum_into_scratch(
+                &scores[off * n_heads..(off + seg.rows) * n_heads],
                 n_heads,
+                kscratch,
                 out,
             );
             off += seg.rows;
@@ -173,7 +186,7 @@ impl LayerKv for GearLayerKv {
         for t in 0..self.buf_n {
             let vrow = &self.buf_v[t * d..(t + 1) * d];
             for h in 0..n_heads {
-                let p = self.scores[(off + t) * n_heads + h];
+                let p = scores[(off + t) * n_heads + h];
                 crate::tensor::ops::axpy(p, &vrow[h * dh..(h + 1) * dh], &mut out[h * dh..(h + 1) * dh]);
             }
         }

@@ -14,9 +14,22 @@ pub mod budget;
 pub mod dense;
 pub mod gear_cache;
 
+use crate::gear::attend::SegScratch;
 use crate::gear::size::SizeBreakdown;
 use crate::gear::Method;
 use crate::tensor::Tensor;
+
+/// Reusable attention scratch: every `Vec` the attend hot path needs, owned
+/// by the caller so batch-executor workers never allocate inside the
+/// per-layer attend loop. One instance per worker; buffers grow to the
+/// largest cache seen.
+#[derive(Debug, Default, Clone)]
+pub struct AttendScratch {
+    /// Interleaved multi-head scores `s[t*H + h]` across the whole cache.
+    pub scores: Vec<f32>,
+    /// Per-segment kernel scratch (dequant row, `Bᵀq` projection, plan).
+    pub seg: SegScratch,
+}
 
 /// Per-layer KV cache: stores K/V rows and answers fused attention queries.
 pub trait LayerKv: Send {
@@ -39,7 +52,22 @@ pub trait LayerKv: Send {
     /// Multi-head causal attention of query `q` (d, heads concatenated)
     /// against all stored tokens; writes the context vector into `out` (d).
     /// `&mut self` because score-tracking caches (H₂O) update statistics.
-    fn attend(&mut self, q: &[f32], n_heads: usize, out: &mut [f32]);
+    /// All intermediate buffers live in `scratch`, which the batched decode
+    /// plane reuses across requests, layers, and sweeps.
+    fn attend_scratch(
+        &mut self,
+        q: &[f32],
+        n_heads: usize,
+        scratch: &mut AttendScratch,
+        out: &mut [f32],
+    );
+
+    /// Convenience form of [`Self::attend_scratch`] with a throwaway
+    /// scratch — fine for tests and analysis, not for the sweep hot loop.
+    fn attend(&mut self, q: &[f32], n_heads: usize, out: &mut [f32]) {
+        let mut scratch = AttendScratch::default();
+        self.attend_scratch(q, n_heads, &mut scratch, out);
+    }
 
     /// Current real storage bytes.
     fn nbytes(&self) -> usize;
@@ -98,9 +126,18 @@ impl CacheSpec {
         CacheSpec::Compressed { method, buffer, prefill_rank: 0, decode_rank: 0 }
     }
 
-    /// Parse a CLI spec string. Accepted forms: `fp16`, `gear-2`, `gear-4`,
-    /// `gear-l-2`, `gear-l-4`, `kivi-2`, `kivi-4`, `kcvt-4`, `kcvt-2`,
-    /// `per-token-2`, `per-token-4`, `h2o-50` (keep percentage).
+    /// Parse a CLI spec string. Accepted forms, with `<b>` any of the
+    /// paper's bit widths 2, 4, or 8:
+    ///
+    /// * `fp16` — uncompressed baseline;
+    /// * `gear-<b>` / `gear-l-<b>` — the paper's GEAR / GEAR-L recipes
+    ///   (e.g. `gear-2`, `gear-8`, `gear-l-8`);
+    /// * `kivi-<b>`, `kcvt-<b>`, `per-token-<b>` — quantization-only
+    ///   backbones (e.g. `kivi-8`);
+    /// * `h2o-<pct>` — H₂O token dropping at `<pct>`% kept (e.g. `h2o-50`).
+    ///
+    /// Parsing is case-insensitive. [`Self::canonical_name`] inverts this
+    /// mapping for specs that came from it.
     pub fn parse(s: &str) -> Option<CacheSpec> {
         use crate::gear::compose::Backbone;
         let s = s.to_ascii_lowercase();
@@ -135,6 +172,29 @@ impl CacheSpec {
             CacheSpec::Compressed { method, .. } => method.label(),
             CacheSpec::H2o { keep, .. } => format!("H2O keep={:.0}%", keep * 100.0),
         }
+    }
+
+    /// The CLI string [`Self::parse`] would turn back into exactly this
+    /// spec, or `None` for configurations `parse` cannot express (custom
+    /// buffers, ranks, or backbone group sizes).
+    pub fn canonical_name(&self) -> Option<String> {
+        use crate::gear::compose::Backbone;
+        let name = match *self {
+            CacheSpec::Fp16 => "fp16".to_string(),
+            CacheSpec::H2o { keep, .. } => format!("h2o-{:.0}", keep * 100.0),
+            CacheSpec::Compressed { method, .. } => match method {
+                Method::Gear { bits, .. } => format!("gear-{bits}"),
+                Method::GearL { bits, .. } => format!("gear-l-{bits}"),
+                Method::QuantOnly { bits, backbone: Backbone::Kivi(64) } => format!("kivi-{bits}"),
+                Method::QuantOnly { bits, backbone: Backbone::Kcvt } => format!("kcvt-{bits}"),
+                Method::QuantOnly { bits, backbone: Backbone::PerTokenGroup(64) } => {
+                    format!("per-token-{bits}")
+                }
+                _ => return None,
+            },
+        };
+        // Canonical only when it round-trips to this exact spec.
+        (CacheSpec::parse(&name) == Some(*self)).then_some(name)
     }
 
     /// Build one layer's cache.
@@ -208,5 +268,40 @@ mod tests {
         assert_eq!(rc.layers.len(), 4);
         assert_eq!(rc.len(), 0);
         assert!(rc.is_empty());
+    }
+
+    #[test]
+    fn parse_canonical_name_round_trips() {
+        // Every documented CLI form, including the 8-bit variants the old
+        // doc comment omitted.
+        for s in [
+            "fp16",
+            "gear-2", "gear-4", "gear-8",
+            "gear-l-2", "gear-l-4", "gear-l-8",
+            "kivi-2", "kivi-4", "kivi-8",
+            "kcvt-2", "kcvt-4", "kcvt-8",
+            "per-token-2", "per-token-4", "per-token-8",
+            "h2o-25", "h2o-50", "h2o-100",
+        ] {
+            let spec = CacheSpec::parse(s).unwrap_or_else(|| panic!("{s} must parse"));
+            assert_eq!(spec.canonical_name().as_deref(), Some(s), "round trip of {s}");
+            // Case-insensitive parse agrees.
+            assert_eq!(CacheSpec::parse(&s.to_ascii_uppercase()), Some(spec), "{s}");
+        }
+        // Unsupported bit widths and unknown names still rejected.
+        for s in ["gear-3", "gear-l-16", "kivi-0", "bogus"] {
+            assert!(CacheSpec::parse(s).is_none(), "{s}");
+        }
+        // Hand-built specs parse cannot express have no canonical name.
+        let custom = CacheSpec::Compressed {
+            method: Method::QuantOnly {
+                bits: 2,
+                backbone: crate::gear::compose::Backbone::Kivi(16),
+            },
+            buffer: 7,
+            prefill_rank: 0,
+            decode_rank: 0,
+        };
+        assert_eq!(custom.canonical_name(), None);
     }
 }

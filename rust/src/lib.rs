@@ -11,13 +11,20 @@
 //!   (`X ≈ D̂ + L + S`): ultra-low-bit quantized backbone, head-wise
 //!   low-rank residual via power iteration, sparse outliers.
 //! * [`kvcache`] — paged, byte-budgeted KV-cache manager with streaming
-//!   buffers; stores [`gear::CompressedMatrix`] segments.
+//!   buffers; stores [`gear::CompressedMatrix`] segments and answers fused
+//!   attention through reusable [`kvcache::AttendScratch`] buffers.
 //! * [`model`] — tiny-GPT inference (weights trained at build time by the
-//!   Python layer) with pluggable KV caches.
-//! * [`coordinator`] — the serving engine: request queue, continuous
-//!   batcher, prefill/decode scheduler, metrics, TCP server.
+//!   Python layer) with pluggable KV caches; decoding runs either one
+//!   request at a time or as a layer-major batched step
+//!   (`Model::decode_batch`) with bit-identical results.
+//! * [`coordinator`] — the serving engine, split into two planes: a
+//!   deterministic FCFS *scheduler* (admission, budget, preemption) and a
+//!   parallel *batch executor* that advances the whole active set one token
+//!   per sweep. The split is the scaling seam: prefill chunking and
+//!   multi-device sharding extend the executor without touching policy.
 //! * [`runtime`] — PJRT (XLA) executable loading for the AOT-compiled JAX
-//!   graphs in `artifacts/` (Python never runs at serve time).
+//!   graphs in `artifacts/` (Python never runs at serve time). Gated
+//!   behind the `xla` cargo feature (needs the vendored `xla` crate).
 //! * [`baselines`] — H₂O token dropping, for the paper's comparisons.
 //! * [`workload`] — synthetic task generators and scorers standing in for
 //!   GSM8k-CoT / LongBench (see DESIGN.md §3 for the substitution argument).

@@ -10,7 +10,7 @@
 //! Spec strings: fp16, gear-2, gear-4, gear-l-2, gear-l-4, kivi-2, kivi-4,
 //! kcvt-4, per-token-4, h2o-50.
 
-use anyhow::{bail, Context, Result};
+use gear_serve::util::error::{bail, Context, Result};
 
 use gear_serve::coordinator::engine::{Engine, EngineConfig};
 use gear_serve::coordinator::request::GenRequest;
@@ -141,6 +141,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 engine.metrics.peak_cache_bytes as f64 / (1 << 20) as f64
             );
         }
+        #[cfg(feature = "xla")]
         "xla" => {
             let xm = gear_serve::runtime::xla_model::XlaModel::load_default()?;
             let nl = tok.encode("\n")[0];
@@ -155,6 +156,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
             }
             println!("(xla backend serves FP16 dense cache; compression evals use --backend rust)");
         }
+        #[cfg(not(feature = "xla"))]
+        "xla" => bail!("xla backend requires building with --features xla"),
         other => bail!("unknown backend {other} (rust|xla)"),
     }
     println!(

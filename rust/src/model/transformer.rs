@@ -10,8 +10,19 @@
 //! compress them (GEAR) or prune them (H₂O). Decode steps attend through
 //! the cache only — compression error therefore affects decoding exactly as
 //! in the paper's system.
+//!
+//! ## Batched decode
+//!
+//! [`Model::decode_batch`] advances a whole batch of requests one token in
+//! a single call, traversing the weights **layer-major** (layer `l` for
+//! every request before layer `l+1`) so each block's matrices stay hot in
+//! cache across the batch, with all intermediate buffers in a reusable
+//! [`DecodeBufs`]. Per request it performs *exactly* the same floating-point
+//! operations in the same order as [`Model::decode_step`] — both funnel
+//! through the same `layer_forward` — so batched decoding is bit-identical
+//! to the one-request-at-a-time path (the engine's golden test pins this).
 
-use crate::kvcache::RequestCache;
+use crate::kvcache::{AttendScratch, LayerKv, RequestCache};
 use crate::tensor::ops::{self, dot, gelu, layernorm, matmul, softmax_inplace};
 use crate::tensor::Tensor;
 
@@ -157,52 +168,107 @@ impl Model {
     }
 
     /// One decode step: embed `token` at `pos`, attend through the cache,
-    /// return logits.
+    /// return logits. Allocates a fresh [`DecodeBufs`]; loops that decode
+    /// many steps should hold one and call [`Self::decode_step_with`].
     pub fn decode_step(&self, token: u32, pos: usize, cache: &mut RequestCache) -> Vec<f32> {
-        let c = self.config();
-        let (d, nh) = (c.d_model, c.n_heads);
-        let x0 = self.embed(&[token], pos);
-        let mut x = x0.into_data();
-        let mut norm = vec![0.0f32; d];
-        let mut qkv = vec![0.0f32; 3 * d];
-        let mut ctx = vec![0.0f32; d];
-        let mut h1 = vec![0.0f32; c.mlp_dim()];
+        let mut bufs = DecodeBufs::new(self.config());
+        self.decode_step_with(token, pos, cache, &mut bufs)
+    }
 
-        for (l, blk) in self.weights.blocks.iter().enumerate() {
-            let bt = &self.blocks_t[l];
-            layernorm(&x, &blk.ln1_g, &blk.ln1_b, 1e-5, &mut norm);
-            // GEMV via transposed weights (unit-stride dot products).
-            let (qs, rest) = qkv.split_at_mut(d);
-            let (ks, vs) = rest.split_at_mut(d);
-            gemv_t(&bt.wq_t, &norm, qs);
-            gemv_t(&bt.wk_t, &norm, ks);
-            gemv_t(&bt.wv_t, &norm, vs);
+    /// One decode step using caller-owned scratch buffers.
+    pub fn decode_step_with(
+        &self,
+        token: u32,
+        pos: usize,
+        cache: &mut RequestCache,
+        bufs: &mut DecodeBufs,
+    ) -> Vec<f32> {
+        let mut x = self.embed(&[token], pos).into_data();
+        for l in 0..self.weights.blocks.len() {
+            self.layer_forward(l, &mut x, cache.layers[l].as_mut(), bufs);
+        }
+        self.finish_logits(&x, bufs)
+    }
 
-            let layer = &mut cache.layers[l];
-            layer.append(ks, vs);
-            layer.attend(qs, nh, &mut ctx);
+    /// Advance every slot one token in a single batched step.
+    ///
+    /// The traversal is layer-major: layer `l` runs for every request
+    /// before layer `l+1`, so each block's (transposed) weight matrices are
+    /// streamed once per step for the whole batch instead of once per
+    /// request. Logits are returned in slot order. Allocates scratch; the
+    /// executor uses [`Self::decode_batch_with`] with a per-worker buffer.
+    pub fn decode_batch(&self, steps: &mut [DecodeSlot]) -> Vec<Vec<f32>> {
+        let mut bufs = DecodeBufs::new(self.config());
+        self.decode_batch_with(steps, &mut bufs)
+    }
 
-            // x += ctx @ Wo
-            let mut proj = vec![0.0f32; d];
-            gemv_t(&bt.wo_t, &ctx, &mut proj);
-            for (xi, pi) in x.iter_mut().zip(&proj) {
-                *xi += pi;
-            }
-
-            layernorm(&x, &blk.ln2_g, &blk.ln2_b, 1e-5, &mut norm);
-            gemv_t(&bt.w1_t, &norm, &mut h1);
-            for (j, hv) in h1.iter_mut().enumerate() {
-                *hv = gelu(*hv + blk.b1[j]);
-            }
-            let mut h2 = vec![0.0f32; d];
-            gemv_t(&bt.w2_t, &h1, &mut h2);
-            for j in 0..d {
-                x[j] += h2[j] + blk.b2[j];
+    /// Batched decode step with caller-owned scratch. Per request this is
+    /// op-for-op identical to [`Self::decode_step_with`].
+    pub fn decode_batch_with(
+        &self,
+        steps: &mut [DecodeSlot],
+        bufs: &mut DecodeBufs,
+    ) -> Vec<Vec<f32>> {
+        let mut xs: Vec<Vec<f32>> = steps
+            .iter()
+            .map(|s| self.embed(&[s.token], s.pos).into_data())
+            .collect();
+        for l in 0..self.weights.blocks.len() {
+            for (x, slot) in xs.iter_mut().zip(steps.iter_mut()) {
+                self.layer_forward(l, x, slot.cache.layers[l].as_mut(), bufs);
             }
         }
+        xs.iter().map(|x| self.finish_logits(x, bufs)).collect()
+    }
 
-        layernorm(&x.clone(), &self.weights.lnf_g, &self.weights.lnf_b, 1e-5, &mut x);
-        self.lm_head(&x)
+    /// One transformer block over a single request's hidden state `x`
+    /// (d-long), reading/writing its KV cache layer. Shared by the
+    /// sequential and batched decode paths — bit-identity between them
+    /// rests on this being the only implementation.
+    fn layer_forward(
+        &self,
+        l: usize,
+        x: &mut [f32],
+        layer: &mut dyn LayerKv,
+        bufs: &mut DecodeBufs,
+    ) {
+        let c = self.config();
+        let (d, nh) = (c.d_model, c.n_heads);
+        let blk = &self.weights.blocks[l];
+        let bt = &self.blocks_t[l];
+
+        layernorm(x, &blk.ln1_g, &blk.ln1_b, 1e-5, &mut bufs.norm);
+        // GEMV via transposed weights (unit-stride dot products).
+        let (qs, rest) = bufs.qkv.split_at_mut(d);
+        let (ks, vs) = rest.split_at_mut(d);
+        gemv_t(&bt.wq_t, &bufs.norm, qs);
+        gemv_t(&bt.wk_t, &bufs.norm, ks);
+        gemv_t(&bt.wv_t, &bufs.norm, vs);
+
+        layer.append(ks, vs);
+        layer.attend_scratch(qs, nh, &mut bufs.attend, &mut bufs.ctx);
+
+        // x += ctx @ Wo
+        gemv_t(&bt.wo_t, &bufs.ctx, &mut bufs.proj);
+        for (xi, pi) in x.iter_mut().zip(&bufs.proj) {
+            *xi += pi;
+        }
+
+        layernorm(x, &blk.ln2_g, &blk.ln2_b, 1e-5, &mut bufs.norm);
+        gemv_t(&bt.w1_t, &bufs.norm, &mut bufs.h1);
+        for (j, hv) in bufs.h1.iter_mut().enumerate() {
+            *hv = gelu(*hv + blk.b1[j]);
+        }
+        gemv_t(&bt.w2_t, &bufs.h1, &mut bufs.h2);
+        for j in 0..d {
+            x[j] += bufs.h2[j] + blk.b2[j];
+        }
+    }
+
+    /// Final LayerNorm + LM head over a finished hidden state.
+    fn finish_logits(&self, x: &[f32], bufs: &mut DecodeBufs) -> Vec<f32> {
+        layernorm(x, &self.weights.lnf_g, &self.weights.lnf_b, 1e-5, &mut bufs.norm);
+        self.lm_head(&bufs.norm)
     }
 
     fn lm_head(&self, x: &[f32]) -> Vec<f32> {
@@ -210,6 +276,44 @@ impl Model {
         let mut logits = vec![0.0f32; c.vocab];
         gemv_t(&self.head_t, x, &mut logits);
         logits
+    }
+}
+
+/// One request's slice of a batched decode step: the token sampled at the
+/// previous step, the position it lands at, and the request's cache.
+pub struct DecodeSlot<'a> {
+    pub token: u32,
+    pub pos: usize,
+    pub cache: &'a mut RequestCache,
+}
+
+/// Reusable scratch for decode steps: every intermediate the per-layer
+/// forward needs, plus the cache-attention scratch. One per executor
+/// worker; contents are fully overwritten before use, so sharing one
+/// instance across requests cannot change results.
+#[derive(Debug, Clone)]
+pub struct DecodeBufs {
+    norm: Vec<f32>,
+    qkv: Vec<f32>,
+    ctx: Vec<f32>,
+    proj: Vec<f32>,
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    attend: AttendScratch,
+}
+
+impl DecodeBufs {
+    pub fn new(c: &ModelConfig) -> DecodeBufs {
+        let d = c.d_model;
+        DecodeBufs {
+            norm: vec![0.0; d],
+            qkv: vec![0.0; 3 * d],
+            ctx: vec![0.0; d],
+            proj: vec![0.0; d],
+            h1: vec![0.0; c.mlp_dim()],
+            h2: vec![0.0; d],
+            attend: AttendScratch::default(),
+        }
     }
 }
 
@@ -309,6 +413,57 @@ mod tests {
         assert!(c.len() <= 4); // pruned to 50%
         let logits = m.decode_step(3, 8, &mut c);
         assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    /// The batched decode plane must be bit-identical to step-at-a-time
+    /// decoding: same tokens, same caches, exactly equal logits.
+    #[test]
+    fn decode_batch_bit_identical_to_decode_step() {
+        let m = tiny_model();
+        let specs = [
+            CacheSpec::Fp16,
+            CacheSpec::gear(4),
+            CacheSpec::H2o { keep: 0.6, recent: 2 },
+        ];
+        let prompts: [&[u32]; 3] = [&[1, 3, 5, 7], &[2, 4, 6], &[9, 8, 7, 6, 5]];
+
+        // Reference: sequential decode_step per request.
+        let mut seq_caches: Vec<RequestCache> =
+            specs.iter().map(|s| new_cache(&m, s)).collect();
+        let mut seq_logits = Vec::new();
+        for step in 0..4 {
+            let mut per_req = Vec::new();
+            for (i, cache) in seq_caches.iter_mut().enumerate() {
+                if step == 0 {
+                    m.prefill(prompts[i], cache);
+                }
+                let tok = (i as u32 + step as u32) % 13;
+                per_req.push(m.decode_step(tok, prompts[i].len() + step, cache));
+            }
+            seq_logits.push(per_req);
+        }
+
+        // Batched: same requests through decode_batch.
+        let mut bat_caches: Vec<RequestCache> =
+            specs.iter().map(|s| new_cache(&m, s)).collect();
+        for (i, cache) in bat_caches.iter_mut().enumerate() {
+            let _ = m.prefill(prompts[i], cache);
+        }
+        for step in 0..4 {
+            let mut slots: Vec<DecodeSlot> = bat_caches
+                .iter_mut()
+                .enumerate()
+                .map(|(i, cache)| DecodeSlot {
+                    token: (i as u32 + step as u32) % 13,
+                    pos: prompts[i].len() + step,
+                    cache,
+                })
+                .collect();
+            let batched = m.decode_batch(&mut slots);
+            for (i, lg) in batched.iter().enumerate() {
+                assert_eq!(lg, &seq_logits[step][i], "req {i} step {step} diverged");
+            }
+        }
     }
 
     #[test]

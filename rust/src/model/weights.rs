@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use std::io::Read;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::tensor::Tensor;
 

@@ -7,7 +7,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// Parsed artifacts directory.
 #[derive(Debug, Clone)]

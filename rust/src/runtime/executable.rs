@@ -8,9 +8,15 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::tensor::Tensor;
+
+impl From<xla::Error> for crate::util::error::Error {
+    fn from(e: xla::Error) -> Self {
+        crate::util::error::Error::msg(e)
+    }
+}
 
 /// PJRT client + a cache of compiled executables keyed by artifact name.
 pub struct XlaRuntime {

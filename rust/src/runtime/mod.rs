@@ -8,9 +8,17 @@
 //!   executables with a dense KV cache (the `--backend xla` path), plus the
 //!   fused GEAR-attention executable (the Pallas L1 kernel, AOT-lowered).
 
+//! The PJRT-backed modules are gated behind the `xla` cargo feature: they
+//! need the vendored `xla` crate and the xla_extension shared library,
+//! neither of which exists on a plain offline build host. [`artifacts`] is
+//! pure Rust and always available.
+
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod executable;
+#[cfg(feature = "xla")]
 pub mod xla_model;
 
 pub use artifacts::Artifacts;
+#[cfg(feature = "xla")]
 pub use executable::XlaRuntime;

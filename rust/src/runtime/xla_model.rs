@@ -8,7 +8,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::runtime::artifacts::Artifacts;
 use crate::runtime::executable::{i32_literal, i32_scalar, literal_to_vec, slice_to_literal, XlaRuntime};

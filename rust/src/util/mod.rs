@@ -2,8 +2,9 @@
 //!
 //! The build is fully offline against a fixed vendor set, so facilities that
 //! would normally come from external crates (property testing, f16
-//! conversion, table formatting) are implemented here.
+//! conversion, table formatting, error context) are implemented here.
 
+pub mod error;
 pub mod f16;
 pub mod prop;
 pub mod rng;

@@ -1,6 +1,8 @@
 //! XLA-backend integration: load the AOT artifacts on the PJRT CPU client,
 //! run generation, and cross-validate against the pure-Rust forward.
-//! All tests skip when artifacts are absent.
+//! All tests skip when artifacts are absent. The whole suite is gated on
+//! the `xla` cargo feature (PJRT runtime needs the vendored `xla` crate).
+#![cfg(feature = "xla")]
 
 use gear_serve::kvcache::{CacheSpec, RequestCache};
 use gear_serve::model::config::Tokenizer;
