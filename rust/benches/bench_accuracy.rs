@@ -155,7 +155,12 @@ fn fig4a(weights: &ModelWeights, n: usize) {
             (false, true) => Method::GearL { bits: 2, backbone: bb, r },
             (true, true) => Method::Gear { bits: 2, backbone: bb, s, r },
         };
-        let spec = CacheSpec::Compressed { method, buffer: 20, prefill_rank: r, decode_rank: r.min(2) };
+        let spec = CacheSpec::Compressed {
+            method,
+            buffer: 20,
+            prefill_rank: r,
+            decode_rank: r.min(2),
+        };
         t.row(vec![
             format!("{:.0}%", s * 100.0),
             r.to_string(),

@@ -59,12 +59,20 @@ fn table9() {
         ("LongBench", 3642, 256),
     ];
     let methods: Vec<(String, Method, usize)> = vec![
-        ("Per-token Q 4b".into(), Method::QuantOnly { bits: 4, backbone: Backbone::PerTokenGroup(64) }, 64),
+        (
+            "Per-token Q 4b".into(),
+            Method::QuantOnly { bits: 4, backbone: Backbone::PerTokenGroup(64) },
+            64,
+        ),
         ("KCVT 4b".into(), Method::QuantOnly { bits: 4, backbone: Backbone::Kcvt }, 20),
         ("KIVI 4b".into(), Method::QuantOnly { bits: 4, backbone: Backbone::Kivi(64) }, 64),
         ("GEAR-L 4b".into(), Method::gear_l_default(4), 20),
         ("GEAR 4b".into(), Method::gear_default(4), 20),
-        ("Per-token Q 2b".into(), Method::QuantOnly { bits: 2, backbone: Backbone::PerTokenGroup(64) }, 64),
+        (
+            "Per-token Q 2b".into(),
+            Method::QuantOnly { bits: 2, backbone: Backbone::PerTokenGroup(64) },
+            64,
+        ),
         ("KIVI 2b".into(), Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) }, 64),
         ("GEAR-L 2b".into(), Method::gear_l_default(2), 20),
         ("GEAR 2b".into(), Method::gear_default(2), 20),
@@ -99,7 +107,8 @@ fn fig6() {
     ] {
         // Build one request cache mid-generation and inspect it.
         let c = w.config;
-        let mut cache = gear_serve::kvcache::RequestCache::new(&spec, c.n_layers, c.d_model, c.n_heads);
+        let mut cache =
+            gear_serve::kvcache::RequestCache::new(&spec, c.n_layers, c.d_model, c.n_heads);
         let model = Model::new(w.clone());
         model.prefill(&prompt, &mut cache);
         for step in 0..30 {

@@ -30,7 +30,8 @@ fn err_and_size(x: &Tensor, kind: KvKind, m: Method) -> (f64, f64) {
 
 /// Fig 1a: approximation error of methods at 2-bit compression.
 fn fig1a() {
-    let mut t = Table::new("Fig 1a — relative approximation error at 2-bit (synthetic LLaMA-like KV)")
+    let mut t =
+        Table::new("Fig 1a — relative approximation error at 2-bit (synthetic LLaMA-like KV)")
         .header(&["method", "Key err", "Value err", "KV size"]);
     let (xk, xv) = (kv(1, KvKind::Key), kv(2, KvKind::Value));
     for m in [
@@ -133,10 +134,12 @@ fn adaptive_ablation() {
     );
     let recon = q.reconstruct();
     let resid: Vec<f32> = x.data().iter().zip(recon.data()).map(|(a, b)| a - b).collect();
-    let mut t = Table::new("§6.1 extension — adaptive vs uniform rank allocation on the residual")
+    let mut t =
+        Table::new("§6.1 extension — adaptive vs uniform rank allocation on the residual")
         .header(&["total rank budget", "uniform err", "adaptive err"]);
     for total in [4usize, 8, 16, 32] {
-        let uni = HeadwiseLowRank::decompose(&resid, N, D, HEADS, total / HEADS, 3, &mut Rng::new(8));
+        let uni =
+            HeadwiseLowRank::decompose(&resid, N, D, HEADS, total / HEADS, 3, &mut Rng::new(8));
         let ada = adaptive_decompose(&resid, N, D, HEADS, total, 3, &mut Rng::new(8));
         let err = |hw: &HeadwiseLowRank| {
             let mut r = vec![0.0f32; N * D];
@@ -152,7 +155,10 @@ fn adaptive_ablation() {
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
-    let want = |f: &str| args.iter().any(|a| a == f) || !args.iter().any(|a| a.starts_with("--fig") || a.starts_with("--adaptive"));
+    let want = |f: &str| {
+        args.iter().any(|a| a == f)
+            || !args.iter().any(|a| a.starts_with("--fig") || a.starts_with("--adaptive"))
+    };
     if want("--fig1a") {
         fig1a();
     }

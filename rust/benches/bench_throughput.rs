@@ -113,7 +113,9 @@ fn table7(dev: &DeviceModel) {
         t.row(vec![name.into(), per_tok.to_string(), max_len.to_string()]);
     }
     t.print();
-    println!("paper: FP16 5319 vs GEAR 7291 (theirs includes activation overheads we don't model)\n");
+    println!(
+        "paper: FP16 5319 vs GEAR 7291 (theirs includes activation overheads we don't model)\n"
+    );
 }
 
 /// Real engine sweep on the tiny model: exact peak cache bytes + honest CPU
@@ -152,10 +154,12 @@ fn real_engine() {
     println!();
 }
 
-/// Sequential vs batched decode plane on real engine runs: CPU wall-clock
-/// tokens/s across `max_batch ∈ {1, 4, 16}`, plus a machine-readable
+/// Sequential vs batched decode plane, and chunked vs whole-prompt prefill,
+/// on real engine runs: CPU wall-clock tokens/s across
+/// `max_batch ∈ {1, 4, 16}`, plus a machine-readable
 /// `BENCH_throughput.json` so the perf trajectory accumulates across PRs.
-fn compare_exec_planes() {
+/// `smoke` shrinks the workload so CI can run the comparison per push.
+fn compare_exec_planes(smoke: bool) {
     let weights = if Artifacts::available() {
         ModelWeights::load(&Artifacts::default_dir().join("weights.bin")).unwrap()
     } else {
@@ -164,17 +168,17 @@ fn compare_exec_planes() {
     };
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     // Decode-heavy workload (short prompt, long generation) and a
-    // decode-only metric: admission prefill is serial engine-thread work
-    // identical in both modes and would otherwise dilute the comparison.
-    let prompt: Vec<u32> = (0..32).map(|i| (i % 46) + 3).collect();
-    let max_new = 96usize;
-    let n_reqs = 16usize;
+    // decode-only metric: prefill work is identical in both modes and would
+    // otherwise dilute the comparison.
+    let (prompt_len, max_new, n_reqs) =
+        if smoke { (16usize, 24usize, 8usize) } else { (32, 96, 16) };
+    let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| (i % 46) + 3).collect();
 
     let mut t = Table::new(&format!(
         "Decode plane: sequential vs batched sweep ({host}-way host, decode-phase tok/s)"
     ))
     .header(&["spec", "max_batch", "seq tok/s", "batched tok/s", "speedup"]);
-    let mut json_rows: Vec<String> = Vec::new();
+    let mut decode_rows: Vec<String> = Vec::new();
 
     for (name, spec) in [("fp16", CacheSpec::Fp16), ("gear-4", CacheSpec::gear(4))] {
         for batch in [1usize, 4, 16] {
@@ -199,7 +203,7 @@ fn compare_exec_planes() {
                 sig(tput[1]),
                 format!("{speedup:.2}x"),
             ]);
-            json_rows.push(format!(
+            decode_rows.push(format!(
                 "{{\"spec\": \"{name}\", \"max_batch\": {batch}, \
                  \"seq_decode_tok_s\": {:.3}, \"batched_decode_tok_s\": {:.3}, \
                  \"speedup\": {speedup:.4}}}",
@@ -210,12 +214,63 @@ fn compare_exec_planes() {
     t.print();
     println!("expected shape: ~1x at batch 1 (inline path), > 1x at batch >= 8 on multi-core\n");
 
+    // Chunked vs whole-prompt prefill on a prompt-heavy workload: total
+    // tokens/s (prefill included). Chunking must not regress throughput;
+    // its win is latency (decode keeps flowing while long prompts prefill),
+    // which run_to_completion totals cannot show.
+    let (long_len, pre_new, pre_reqs) =
+        if smoke { (96usize, 12usize, 6usize) } else { (192, 24, 12) };
+    let long_prompt: Vec<u32> = (0..long_len as u32).map(|i| (i % 46) + 3).collect();
+    let mut t = Table::new(&format!(
+        "Prefill plane: whole-prompt vs chunked ({long_len}-token prompts, total tok/s)"
+    ))
+    .header(&["spec", "max_batch", "whole tok/s", "chunked tok/s", "ratio"]);
+    let mut prefill_rows: Vec<String> = Vec::new();
+    for (name, spec) in [("fp16", CacheSpec::Fp16), ("gear-4", CacheSpec::gear(4))] {
+        for batch in [1usize, 4, 16] {
+            let mut tput = [0.0f64; 2];
+            for (slot, chunk) in [usize::MAX, 32].into_iter().enumerate() {
+                let mut e = Engine::new(
+                    Model::new(weights.clone()),
+                    EngineConfig::new(spec).with_max_batch(batch).with_prefill_chunk(chunk),
+                );
+                for i in 0..pre_reqs {
+                    e.submit(GenRequest::greedy(i as u64, long_prompt.clone(), pre_new));
+                }
+                let _ = e.run_to_completion();
+                tput[slot] = e.metrics.throughput();
+            }
+            let ratio = tput[1] / tput[0].max(1e-9);
+            t.row(vec![
+                name.into(),
+                batch.to_string(),
+                sig(tput[0]),
+                sig(tput[1]),
+                format!("{ratio:.2}x"),
+            ]);
+            prefill_rows.push(format!(
+                "{{\"spec\": \"{name}\", \"max_batch\": {batch}, \
+                 \"whole_prefill_tok_s\": {:.3}, \"chunked_prefill_tok_s\": {:.3}, \
+                 \"ratio\": {ratio:.4}}}",
+                tput[0], tput[1]
+            ));
+        }
+    }
+    t.print();
+    println!("expected shape: ratio ~1x (chunking is a latency feature, not a throughput one)\n");
+
     let json = format!(
-        "{{\n  \"bench\": \"decode_plane_compare\",\n  \"host_parallelism\": {host},\n  \
-         \"prompt_len\": {},\n  \"max_new_tokens\": {max_new},\n  \"requests\": {n_reqs},\n  \
-         \"rows\": [\n    {}\n  ]\n}}\n",
-        prompt.len(),
-        json_rows.join(",\n    ")
+        "{{\n  \"bench\": \"throughput_compare\",\n  \"provenance\": \"measured\",\n  \
+         \"mode\": \"{}\",\n  \"host_parallelism\": {host},\n  \
+         \"decode_workload\": {{\"prompt_len\": {prompt_len}, \
+         \"max_new_tokens\": {max_new}, \"requests\": {n_reqs}}},\n  \
+         \"prefill_workload\": {{\"prompt_len\": {long_len}, \
+         \"max_new_tokens\": {pre_new}, \"requests\": {pre_reqs}, \
+         \"prefill_chunk\": 32}},\n  \
+         \"decode_plane\": [\n    {}\n  ],\n  \"chunked_prefill\": [\n    {}\n  ]\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        decode_rows.join(",\n    "),
+        prefill_rows.join(",\n    ")
     );
     let path = "BENCH_throughput.json";
     match std::fs::write(path, &json) {
@@ -230,6 +285,7 @@ fn main() {
         a.starts_with("--fig") || a.starts_with("--table") || a == "--real" || a == "--compare"
     });
     let want = |f: &str| all || args.iter().any(|a| a == f);
+    let smoke = args.iter().any(|a| a == "--smoke");
     let v100 = DeviceModel::v100();
     if want("--fig3b") || want("--fig3c") {
         fig3_table6(&v100, "Fig 3b/3c + Table 6 — V100-16GB projection (LLaMA-7B scale)");
@@ -244,6 +300,6 @@ fn main() {
         real_engine();
     }
     if want("--compare") {
-        compare_exec_planes();
+        compare_exec_planes(smoke);
     }
 }

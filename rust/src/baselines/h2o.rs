@@ -140,7 +140,8 @@ impl LayerKv for H2oLayerKv {
             for h in 0..n_heads {
                 let p = scores[t * n_heads + h];
                 mass += p;
-                crate::tensor::ops::axpy(p, &vrow[h * dh..(h + 1) * dh], &mut out[h * dh..(h + 1) * dh]);
+                let seg = h * dh..(h + 1) * dh;
+                crate::tensor::ops::axpy(p, &vrow[seg.clone()], &mut out[seg]);
             }
             // Heavy-hitter statistic: accumulated attention mass.
             self.acc[t] += mass;
@@ -149,6 +150,11 @@ impl LayerKv for H2oLayerKv {
 
     fn nbytes(&self) -> usize {
         (self.k.len() + self.v.len()) * 2 + self.acc.len() * 4
+    }
+
+    fn step_growth_bound(&self) -> usize {
+        // K + V rows at FP16 plus the f32 score slot; eviction only shrinks.
+        4 * self.d + 4
     }
 
     fn breakdown(&self) -> SizeBreakdown {

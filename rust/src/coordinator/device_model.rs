@@ -48,7 +48,12 @@ impl DeviceModel {
     /// * `overhead_bytes` — extra traffic/compute of the compression method
     ///   expressed in byte-equivalents (scales/zeros re-reads, low-rank
     ///   factors, sparse values), per request.
-    pub fn step_seconds(&self, weight_bytes: usize, kv_bytes: &[usize], overhead_bytes: &[usize]) -> f64 {
+    pub fn step_seconds(
+        &self,
+        weight_bytes: usize,
+        kv_bytes: &[usize],
+        overhead_bytes: &[usize],
+    ) -> f64 {
         let moved: usize =
             weight_bytes + kv_bytes.iter().sum::<usize>() + overhead_bytes.iter().sum::<usize>();
         moved as f64 / (self.bandwidth * self.efficiency)

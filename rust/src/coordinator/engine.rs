@@ -3,43 +3,57 @@
 //!
 //! * **Scheduling plane** ([`super::scheduler`]) — admission, budget
 //!   accounting, preemption, finish bookkeeping. Pure policy, FCFS
-//!   deterministic, unchanged from the single-plane engine.
+//!   deterministic.
 //! * **Execution plane** ([`super::executor`]) — one decode step for the
-//!   *whole* active set as a single batched, layer-major model call,
-//!   chunked across worker threads with a fixed-order reduction.
+//!   *whole* active set, and one round of prefill chunks, each as a single
+//!   batched, layer-major model call chunked across worker threads.
 //!
-//! A sweep has three phases:
-//! 1. **Emit** (policy, sequential): each active request's previously
+//! A sweep runs **reserve → prefill chunks → decode batch**:
+//! 1. **Emit** (policy, sequential): each decoding request's previously
 //!    sampled token is emitted; stop/length/context finishes retire.
-//! 2. **Execute**: the surviving requests advance one token in a single
-//!    [`BatchExecutor::run`] call.
-//! 3. **Commit** (policy, sequential, fixed order): per request — sample
-//!    the next token, grow its cache reservation; on budget exhaustion the
-//!    youngest active request is preempted (recompute preemption) and the
-//!    adjustment retries.
+//! 2. **Reserve** (policy, sequential, fixed order): per request, the
+//!    sweep's worst-case byte growth is reserved *before* any model math —
+//!    `cache.step_growth_bound()` for decoders (exact per-method flush
+//!    accounting from `gear::size`), the next chunk's FP16-accounted
+//!    in-flight KV for prefillers. On exhaustion the youngest request is
+//!    preempted (recompute preemption) and the reservation retries, so real
+//!    cache bytes can no longer overshoot the budget mid-sweep.
+//! 3. **Prefill** (execute): every request still in
+//!    [`super::scheduler::ReqPhase::Prefill`] advances one chunk
+//!    (`prefill_chunk` tokens) in a single [`BatchExecutor::run_prefill`]
+//!    call. A request whose final chunk completed commits: the whole
+//!    prompt's exact K/V compresses through the one-shot `ingest_prefill`
+//!    path (bit-identical to whole-prompt prefill), its first token is
+//!    sampled, and it joins the decode set *next* sweep.
+//! 4. **Decode** (execute): the surviving decoders advance one token in a
+//!    single [`BatchExecutor::run`] call.
+//! 5. **Commit** (policy, sequential, fixed order): per request — sample
+//!    the next token and fold the sweep's transient headroom back into the
+//!    steady reservation (with a preempt-and-retry backstop should a cache
+//!    ever outgrow its bound).
 //!
-//! Phases 1 and 3 are sequential and order-fixed, and phase 2 is
+//! Policy phases are sequential and order-fixed, and the execute phases are
 //! bit-identical between [`ExecMode::Sequential`] and [`ExecMode::Batched`]
 //! (each request's forward touches only its own state), so the two modes
 //! produce identical token streams, finish reasons, and peak cache bytes —
-//! `tests/batched_vs_sequential.rs` pins this.
+//! `tests/batched_vs_sequential.rs` pins this. Chunked prefill is likewise
+//! bit-identical to whole-prompt prefill for every chunk size
+//! (`tests/prefill_chunked.rs`).
 //!
-//! Budget semantics: reservations are checked in the commit phase, *after*
-//! the batch decodes, so real cache bytes may transiently exceed the
-//! configured budget by up to one step's growth across the active set
-//! (the single-plane engine bounded the overshoot to one request's step).
-//! `peak_cache_bytes` tracks reservations, as it always has. Pre-reserving
-//! per-step headroom before phase 2 would close the window — ROADMAP.
+//! Budget semantics: `peak_cache_bytes` tracks reservations, which now
+//! *lead* real bytes (phase 2) instead of trailing them — the transient
+//! overshoot window of the previous engine (up to one step's growth × the
+//! active set) is closed.
 
 use std::time::Instant;
 
 use crate::kvcache::CacheSpec;
-use crate::model::Model;
+use crate::model::{Model, PrefillSlot};
 
 use super::executor::{BatchExecutor, ExecMode};
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, GenRequest, GenResult};
-use super::scheduler::{ActiveRequest, Scheduler};
+use super::scheduler::{ActiveRequest, ReqPhase, Scheduler};
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -54,6 +68,11 @@ pub struct EngineConfig {
     /// How decode sweeps execute. `Batched` is the default; `Sequential`
     /// is the single-thread reference with identical results.
     pub exec: ExecMode,
+    /// Prefill token budget per request per sweep: long prompts are
+    /// prefilled `prefill_chunk` tokens at a time, interleaved with decode
+    /// sweeps, so an arriving long prompt never stalls the active batch.
+    /// The token stream is bit-identical for every value.
+    pub prefill_chunk: usize,
 }
 
 impl EngineConfig {
@@ -64,6 +83,7 @@ impl EngineConfig {
             budget_bytes: usize::MAX,
             seed: 0x5EED,
             exec: ExecMode::Batched,
+            prefill_chunk: 128,
         }
     }
 
@@ -79,6 +99,11 @@ impl EngineConfig {
 
     pub fn with_exec(mut self, exec: ExecMode) -> Self {
         self.exec = exec;
+        self
+    }
+
+    pub fn with_prefill_chunk(mut self, tokens: usize) -> Self {
+        self.prefill_chunk = tokens.max(1);
         self
     }
 }
@@ -115,16 +140,22 @@ impl Engine {
         self.scheduler.submit(req);
     }
 
-    /// Run one decode sweep over all active requests. Returns the number of
+    /// Run one engine sweep over all active requests (emit → reserve →
+    /// prefill chunks → decode batch → commit). Returns the number of
     /// tokens generated this step.
     fn sweep(&mut self) -> usize {
         // Phase 1 — emit previously sampled tokens; retire finishes. The
         // sampled token from the previous step/prefill is emitted first;
-        // stop tokens never enter the output.
+        // stop tokens never enter the output. Requests still prefilling
+        // have no sampled token yet and are skipped.
         let max_seq = self.model.config().max_seq;
         let mut produced = 0;
         let mut idx = 0;
         while idx < self.active.len() {
+            if matches!(self.active[idx].phase, ReqPhase::Prefill(_)) {
+                idx += 1;
+                continue;
+            }
             let stopped = {
                 let a = &self.active[idx];
                 a.req.stop_tokens.contains(&a.next_token)
@@ -150,39 +181,57 @@ impl Engine {
             return produced;
         }
 
-        // Phase 2 — one batched decode step for every survivor. Requests
-        // are re-found by admission serial afterwards (caller-chosen
-        // `req.id`s need not be unique; serials are).
-        let serials: Vec<u64> = self.active.iter().map(|a| a.serial).collect();
-        let logits = {
-            let mut refs: Vec<&mut ActiveRequest> = self.active.iter_mut().collect();
-            self.executor.run(&self.model, &mut refs)
-        };
+        // Phase 2 — pre-reserve this sweep's worst-case byte growth.
+        self.reserve_phase();
 
-        // Phase 3 — commit in batch order: sample, grow reservations,
-        // preempt on exhaustion. A request preempted by an earlier commit
-        // in this loop is skipped (its state was dropped and requeued).
-        for (lg, serial) in logits.into_iter().zip(serials) {
-            let Some(i) = self.active.iter().position(|a| a.serial == serial) else { continue };
-            let real = {
-                let a = &mut self.active[i];
-                a.pos += 1;
-                a.next_token = a.req.sampler.sample(&lg, &mut a.rng);
-                a.cache.nbytes()
-            };
+        // Snapshot who decodes this sweep: requests whose prefill commits
+        // in phase 3 join the decode set next sweep (their first token must
+        // be emitted before their first decode step).
+        let decode_serials: Vec<u64> = self
+            .active
+            .iter()
+            .filter(|a| matches!(a.phase, ReqPhase::Decode))
+            .map(|a| a.serial)
+            .collect();
+
+        // Phase 3 — one round of prefill chunks.
+        self.prefill_phase();
+
+        // Phase 4/5 — batched decode + commit.
+        self.decode_phase(&decode_serials);
+        produced
+    }
+
+    /// Reserve, per active request and *before* any model math, the bytes
+    /// this sweep can grow its cache by: the exact one-step growth bound
+    /// for decoders, the FP16-accounted in-flight KV through the next chunk
+    /// for prefillers. Preempts the youngest request (recompute preemption)
+    /// when the budget cannot cover a reservation.
+    fn reserve_phase(&mut self) {
+        let chunk = self.scheduler.cfg().prefill_chunk.max(1);
+        let serials: Vec<u64> = self.active.iter().map(|a| a.serial).collect();
+        for serial in serials {
             loop {
                 let Some(i) = self.active.iter().position(|a| a.serial == serial) else { break };
-                let old = self.active[i].reserved;
-                if real <= old {
+                let a = &self.active[i];
+                let need = match &a.phase {
+                    ReqPhase::Decode => a.cache.nbytes() + a.cache.step_growth_bound(),
+                    ReqPhase::Prefill(state) => {
+                        let next_done = (state.done() + chunk).min(state.total());
+                        state.transient_fp16_bytes(next_done)
+                    }
+                };
+                let held = a.reserved + a.headroom;
+                if need <= held {
                     break;
                 }
-                if self.scheduler.budget.adjust(old, real) {
-                    self.active[i].reserved = real;
+                if self.scheduler.budget.try_reserve(need - held) {
+                    self.active[i].headroom += need - held;
                     break;
                 }
                 // Budget exhausted: preempt the youngest and retry. Each
                 // preemption shrinks the active set, so this terminates —
-                // in the worst case the committing request itself is
+                // in the worst case the reserving request itself is
                 // preempted (or OOM-finished when it is the last one).
                 self.scheduler.preempt_youngest(
                     &mut self.active,
@@ -191,14 +240,141 @@ impl Engine {
                 );
             }
         }
-        produced
+    }
+
+    /// Advance every prefilling request by one chunk through the executor,
+    /// then commit the requests whose prompt completed: compress the whole
+    /// prompt into the cache (the same one-shot ingest as whole-prompt
+    /// prefill — bit-identical layout and bytes), sample the first token,
+    /// and settle the byte reservation.
+    fn prefill_phase(&mut self) {
+        let chunk = self.scheduler.cfg().prefill_chunk.max(1);
+        let t0 = Instant::now();
+        let mut completed: Vec<u64> = Vec::new();
+        let n_chunks = {
+            let mut slots: Vec<PrefillSlot> = Vec::new();
+            for a in self.active.iter_mut() {
+                let ActiveRequest { req, phase, serial, .. } = a;
+                if let ReqPhase::Prefill(state) = phase {
+                    let done = state.done();
+                    let end = (done + chunk).min(req.prompt.len());
+                    if end == req.prompt.len() {
+                        completed.push(*serial);
+                    }
+                    slots.push(PrefillSlot { tokens: &req.prompt[done..end], state });
+                }
+            }
+            if slots.is_empty() {
+                return;
+            }
+            self.executor.run_prefill(&self.model, &mut slots);
+            slots.len()
+        };
+        self.metrics.prefill_chunks += n_chunks;
+
+        for serial in completed {
+            // A commit-time settle below can preempt other still-prefilling
+            // requests; re-find each by serial and skip the evicted.
+            let Some(i) = self.active.iter().position(|a| a.serial == serial) else { continue };
+            let a = &mut self.active[i];
+            let phase = std::mem::replace(&mut a.phase, ReqPhase::Decode);
+            let ReqPhase::Prefill(state) = phase else { unreachable!() };
+            debug_assert!(state.is_complete());
+            let last_logits = self.model.commit_prefill(state, &mut a.cache);
+            a.next_token = a.req.sampler.sample(&last_logits, &mut a.rng);
+            a.pos = a.req.prompt.len();
+            self.metrics.prompt_tokens += a.pos;
+            self.settle_reservation(serial);
+        }
+        self.metrics.prefill += t0.elapsed();
+    }
+
+    /// One batched decode step for the given (still-present) requests, then
+    /// the sequential fixed-order commit: sample the next token and settle
+    /// the byte reservation. Requests are re-found by admission serial
+    /// (caller-chosen `req.id`s need not be unique; serials are).
+    fn decode_phase(&mut self, serials: &[u64]) {
+        let (logits, present) = {
+            let mut refs: Vec<&mut ActiveRequest> = self
+                .active
+                .iter_mut()
+                .filter(|a| serials.contains(&a.serial))
+                .collect();
+            if refs.is_empty() {
+                return;
+            }
+            let present: Vec<u64> = refs.iter().map(|a| a.serial).collect();
+            (self.executor.run(&self.model, &mut refs), present)
+        };
+
+        for (lg, serial) in logits.into_iter().zip(present) {
+            let Some(i) = self.active.iter().position(|a| a.serial == serial) else { continue };
+            {
+                let a = &mut self.active[i];
+                a.pos += 1;
+                a.next_token = a.req.sampler.sample(&lg, &mut a.rng);
+            }
+            self.settle_reservation(serial);
+        }
+    }
+
+    /// Fold a request's transient sweep headroom back into its steady
+    /// reservation after its cache changed: keep `max(reserved, real)`,
+    /// release the rest. If the cache outgrew even the pre-reserved bound
+    /// (possible only if a `step_growth_bound` impl under-estimated), fall
+    /// back to grow-with-preemption — the pre-chunked engine's commit path.
+    fn settle_reservation(&mut self, serial: u64) {
+        loop {
+            let Some(i) = self.active.iter().position(|a| a.serial == serial) else { return };
+            let a = &self.active[i];
+            let real = a.cache.nbytes();
+            let held = a.reserved + a.headroom;
+            let steady = a.reserved.max(real);
+            if steady <= held {
+                if steady < held {
+                    self.scheduler.budget.release(held - steady);
+                }
+                let a = &mut self.active[i];
+                a.reserved = steady;
+                a.headroom = 0;
+                return;
+            }
+            if self.scheduler.budget.adjust(held, steady) {
+                let a = &mut self.active[i];
+                a.reserved = steady;
+                a.headroom = 0;
+                return;
+            }
+            self.scheduler.preempt_youngest(
+                &mut self.active,
+                &mut self.finished,
+                &mut self.metrics,
+            );
+        }
     }
 
     fn finish_at(&mut self, idx: usize, finish: FinishReason) {
         let a = self.active.swap_remove(idx);
-        self.scheduler.budget.release(a.reserved);
+        self.scheduler.budget.release(a.reserved + a.headroom);
         self.metrics.requests_finished += 1;
         self.finished.push(a.into_result(finish));
+    }
+
+    /// Run one scheduling + execution step: admit what fits, then one
+    /// sweep. Returns the number of tokens generated. Exposed so callers
+    /// (and the interleaving tests) can observe per-sweep progress;
+    /// [`Self::run_to_completion`] is a loop over this.
+    pub fn step(&mut self) -> usize {
+        self.scheduler.try_admit(
+            &self.model,
+            &mut self.active,
+            &mut self.finished,
+            &mut self.metrics,
+        );
+        if self.active.is_empty() {
+            return 0;
+        }
+        self.sweep()
     }
 
     /// Drive the engine until all submitted work is done; returns results
@@ -208,23 +384,10 @@ impl Engine {
         // Reset component timers so the breakdown covers only this run.
         let _ = crate::gear::take_phase_timings();
         self.scheduler.budget.reset_peak();
-        loop {
-            self.scheduler.try_admit(
-                &self.model,
-                &mut self.active,
-                &mut self.finished,
-                &mut self.metrics,
-            );
-            if self.active.is_empty() {
-                if self.scheduler.waiting_len() == 0 {
-                    break;
-                }
-                // Nothing active and nothing admittable -> the head request
-                // can't fit; try_admit handles the OOM case, so reaching
-                // here means a transient state. Avoid a spin.
-                continue;
-            }
-            self.sweep();
+        while self.pending() > 0 {
+            // Progress is guaranteed: with nothing active, try_admit either
+            // admits the head request or finishes it as OutOfMemory.
+            self.step();
         }
         self.metrics.wall += t0.elapsed();
         self.metrics.peak_cache_bytes =
@@ -235,6 +398,17 @@ impl Engine {
 
     pub fn pending(&self) -> usize {
         self.scheduler.waiting_len() + self.active.len()
+    }
+
+    /// Active requests still in the chunked-prefill phase.
+    pub fn active_prefilling(&self) -> usize {
+        self.active.iter().filter(|a| matches!(a.phase, ReqPhase::Prefill(_))).count()
+    }
+
+    /// Bytes currently reserved against the cache budget (zero once all
+    /// work has drained — the accounting invariant the tests pin).
+    pub fn budget_used(&self) -> usize {
+        self.scheduler.budget.used()
     }
 }
 
@@ -375,6 +549,56 @@ mod tests {
             decode_rank: 2,
         });
         assert!(gear > fp16, "gear concurrency {gear} !> fp16 {fp16}");
+    }
+
+    /// The point of chunked prefill: an arriving long prompt must not
+    /// stall the active batch. Every sweep that advances the long
+    /// request's prefill must also decode the already-active request.
+    #[test]
+    fn decode_continues_while_long_prompt_prefills() {
+        let cfg = ModelConfig { vocab: 13, d_model: 32, n_layers: 2, n_heads: 4, max_seq: 256 };
+        let model = Model::new(ModelWeights::random(cfg, 7));
+        let mut e =
+            Engine::new(model, EngineConfig::new(CacheSpec::Fp16).with_prefill_chunk(16));
+
+        // A short-prompt request starts decoding first (no stop tokens, so
+        // it keeps producing for the whole observation window).
+        let mut short = GenRequest::greedy(0, vec![1, 2, 3], 64);
+        short.stop_tokens.clear();
+        e.submit(short);
+        while e.metrics.generated_tokens == 0 {
+            e.step();
+        }
+
+        // A long prompt arrives: 160 tokens = 10 chunks of 16.
+        let mut long =
+            GenRequest::greedy(1, (0..160).map(|i| (i % 10) + 3).collect(), 4);
+        long.stop_tokens.clear();
+        e.submit(long);
+
+        let mut prefill_sweeps = 0;
+        loop {
+            let g0 = e.metrics.generated_tokens;
+            e.step();
+            if e.active_prefilling() > 0 {
+                prefill_sweeps += 1;
+                assert!(
+                    e.metrics.generated_tokens > g0,
+                    "decode stalled during sweep {prefill_sweeps} of the long prefill"
+                );
+            } else {
+                break;
+            }
+        }
+        assert!(
+            prefill_sweeps >= 8,
+            "expected ~9 interleaved prefill sweeps, got {prefill_sweeps}"
+        );
+        assert!(e.metrics.prefill_chunks >= 10);
+
+        let results = e.run_to_completion();
+        assert_eq!(results.len(), 2);
+        assert_eq!(e.budget_used(), 0, "all reservations must drain");
     }
 
     #[test]

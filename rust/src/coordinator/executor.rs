@@ -1,9 +1,11 @@
-//! The execution plane: one batched decode step over the whole active set.
+//! The execution plane: one batched decode step — and one batched round of
+//! prefill chunks — over the whole active set.
 //!
 //! The executor owns no policy. It receives the active requests in engine
-//! order, runs [`Model::decode_batch_with`] over them — layer-major, so each
-//! block's weights are streamed once per step for the whole batch — and
-//! returns per-request logits in the same order.
+//! order, runs [`Model::decode_batch_with`] (decode) or
+//! [`Model::prefill_chunk_batch`] (prefill) over them — layer-major, so
+//! each block's weights are streamed once per sweep for the whole batch —
+//! and returns per-request results in the same order.
 //!
 //! Parallelism: the batch is split into contiguous chunks, one scoped worker
 //! thread per chunk (`std::thread::scope`; the offline vendor set has no
@@ -20,7 +22,7 @@
 //! executor drains them and folds them back into the engine thread's
 //! accumulator so the Fig 3a breakdown still covers off-thread work.
 
-use crate::model::transformer::{DecodeBufs, DecodeSlot};
+use crate::model::transformer::{DecodeBufs, DecodeSlot, PrefillSlot};
 use crate::model::Model;
 use crate::util::timing::PhaseTimer;
 
@@ -52,6 +54,12 @@ pub struct BatchExecutor {
 /// -- --compare`); below it the inline path is never slower than the old
 /// per-request loop.
 const MIN_FANOUT: usize = 8;
+
+/// Prefill chunks thread at a much lower fan-in than decode steps: one
+/// chunk is O(chunk × prompt-so-far) attention work per layer, hundreds of
+/// times a decode step, so the per-sweep spawn cost amortizes already at
+/// two concurrent prefills.
+const MIN_PREFILL_FANOUT: usize = 2;
 
 impl BatchExecutor {
     pub fn new(model: &Model, mode: ExecMode) -> BatchExecutor {
@@ -114,5 +122,33 @@ impl BatchExecutor {
         }
         debug_assert_eq!(logits.len(), b);
         logits
+    }
+
+    /// Advance every slot's prefill by one chunk. Results land in each
+    /// slot's [`crate::model::PrefillState`], so there is nothing to
+    /// reduce; slots are split across scoped workers exactly like decode
+    /// chunks. Every slot's chunk touches only its own state, so the
+    /// threaded round is bit-identical to the inline one. (No GEAR
+    /// component work happens here — compression runs at commit time on the
+    /// engine thread — so no timing fold-back is needed.)
+    pub fn run_prefill(&mut self, model: &Model, slots: &mut [PrefillSlot<'_>]) {
+        let b = slots.len();
+        if b == 0 {
+            return;
+        }
+        let workers = self.workers.min(b);
+        if workers <= 1 || b < MIN_PREFILL_FANOUT {
+            model.prefill_chunk_batch(slots, &mut self.bufs);
+            return;
+        }
+        let chunk = b.div_ceil(workers);
+        std::thread::scope(|s| {
+            for part in slots.chunks_mut(chunk) {
+                s.spawn(move || {
+                    let mut bufs = DecodeBufs::new(model.config());
+                    model.prefill_chunk_batch(part, &mut bufs);
+                });
+            }
+        });
     }
 }

@@ -14,9 +14,13 @@ pub struct EngineMetrics {
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
     pub wall: Duration,
-    /// Wall time spent in admission prefills (a serial, engine-thread cost
-    /// identical across exec modes; subtract it to compare decode planes).
+    /// Wall time spent in the sweep prefill phase (chunk execution plus
+    /// commit-time compression; subtract it to compare decode planes).
     pub prefill: Duration,
+    /// Prefill chunks executed (one request-chunk each). With chunking
+    /// disabled (`prefill_chunk >= prompt_len`) this equals the number of
+    /// admissions.
+    pub prefill_chunks: usize,
     /// Peak KV-cache bytes across the run (from the budget tracker).
     pub peak_cache_bytes: usize,
     /// Wall time attributed to GEAR components (quant/sparse/lowrank) vs

@@ -6,13 +6,24 @@
 //!
 //! * [`scheduler`] — the policy half: FCFS admission against a byte budget,
 //!   recompute preemption of the youngest request, finish bookkeeping.
-//!   Deterministic and sequential by construction.
-//! * [`executor`] — the execution half: one layer-major batched decode step
-//!   for the whole active set per sweep, chunked across scoped worker
-//!   threads with a fixed-order reduction. Bit-identical to sequential
-//!   execution; [`executor::ExecMode`] selects between them.
-//! * [`engine`] — the composition: emit → execute → commit sweeps over a
-//!   byte-budgeted cache pool.
+//!   Admission is immediate — prompts are *not* prefilled inline; a request
+//!   enters the active set in `ReqPhase::Prefill` and its prompt is
+//!   processed in fixed-size chunks across sweeps. Deterministic and
+//!   sequential by construction.
+//! * [`executor`] — the execution half, two entry points per sweep: one
+//!   layer-major batched round of prefill chunks
+//!   ([`executor::BatchExecutor::run_prefill`]) and one layer-major batched
+//!   decode step ([`executor::BatchExecutor::run`]) for the whole active
+//!   set, chunked across scoped worker threads with a fixed-order
+//!   reduction. Bit-identical to sequential execution;
+//!   [`executor::ExecMode`] selects between them.
+//! * [`engine`] — the composition: **emit → reserve → prefill chunks →
+//!   decode batch → commit** sweeps over a byte-budgeted cache pool. The
+//!   reserve phase pre-books each request's worst-case byte growth for the
+//!   sweep (exact per-method step bounds from `gear::size`, plus the
+//!   in-flight chunk bytes of active prefills), so real cache bytes never
+//!   overshoot the budget mid-sweep; the commit phase folds unused headroom
+//!   back.
 //! * [`request`] — generation requests, results, lifecycle states.
 //! * [`metrics`] — latency/throughput counters + the GEAR component time
 //!   breakdown (Fig 3a), including work done on executor workers.
@@ -21,9 +32,10 @@
 //!   bandwidth model reproduces Fig 3b/3c).
 //! * [`server`] — a minimal TCP line-protocol front-end.
 //!
-//! Later PRs extend the execution plane without touching policy: prefill
-//! chunking slots in as a second executor entry point, and shard-per-layer
-//! execution replaces the chunk split inside [`executor::BatchExecutor`].
+//! Later PRs extend the execution plane without touching policy:
+//! shard-per-layer execution replaces the chunk split inside
+//! [`executor::BatchExecutor`], and a persistent worker pool replaces the
+//! per-sweep scoped threads.
 
 pub mod device_model;
 pub mod engine;

@@ -2,32 +2,47 @@
 //! *policy*. No model math happens here — the execution plane
 //! ([`super::executor`]) owns that. The engine composes the two.
 //!
-//! Policy (vLLM-flavored, unchanged from the single-plane engine):
+//! Policy (vLLM-flavored):
 //! * **Admission** — FCFS while the active set is below `max_batch` and the
 //!   byte budget can hold a conservative whole-lifetime estimate of the
-//!   request's cache.
+//!   request's cache. Admission is immediate: the prompt is *not* prefilled
+//!   here — the request enters the active set in [`ReqPhase::Prefill`] and
+//!   the engine's sweep loop runs its prefill in fixed-size chunks
+//!   interleaved with decode, so a long prompt never stalls the batch.
 //! * **Preemption** — when a reservation cannot grow mid-sweep, the
 //!   *youngest* active request is preempted (recompute preemption: cache
-//!   dropped, requeued at the front). A request that cannot fit even alone
-//!   finishes as `OutOfMemory`.
+//!   and any half-finished prefill state dropped, requeued at the front).
+//!   A request that cannot fit even alone finishes as `OutOfMemory`.
 //!
 //! Everything is deterministic: FCFS order, per-request seeded samplers,
-//! and fixed iteration order in the engine's commit phase.
+//! and fixed iteration order in the engine's reserve and commit phases.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::kvcache::budget::MemoryBudget;
 use crate::kvcache::{CacheSpec, RequestCache};
-use crate::model::Model;
+use crate::model::{Model, PrefillState};
 use crate::util::rng::Rng;
 
 use super::engine::EngineConfig;
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, GenRequest, GenResult};
 
-/// One admitted request's full decode state. Owned by the engine's active
-/// set; the executor borrows `(next_token, pos, cache)` for each sweep.
+/// Where an active request is in its lifecycle.
+pub enum ReqPhase {
+    /// Prompt prefill in flight: chunks of the prompt are processed one
+    /// engine sweep at a time. The cache stays empty until the final chunk
+    /// commits, so preempting a half-prefilled request rolls back cleanly —
+    /// there is nothing to unwind beyond dropping the state.
+    Prefill(PrefillState),
+    /// Prefill committed; the request decodes one token per sweep.
+    Decode,
+}
+
+/// One admitted request's full state. Owned by the engine's active set; the
+/// executor borrows `(next_token, pos, cache)` (decode) or the prefill
+/// state (prefill) for each sweep.
 pub struct ActiveRequest {
     /// Engine-internal admission serial, unique per (re)admission. The
     /// commit phase keys on this rather than `req.id` — caller-chosen ids
@@ -35,12 +50,19 @@ pub struct ActiveRequest {
     pub serial: u64,
     pub req: GenRequest,
     pub cache: RequestCache,
-    /// Bytes currently reserved in the budget for this request.
+    pub phase: ReqPhase,
+    /// Steady bytes reserved in the budget for this request: the admission
+    /// estimate, grown to the largest real cache size seen.
     pub reserved: usize,
+    /// Transient bytes reserved *above* `reserved` for the current sweep
+    /// (step-growth headroom, or in-flight prefill KV). Folded back into
+    /// `reserved`/released when the sweep's work for this request commits.
+    pub headroom: usize,
     pub output: Vec<u32>,
-    /// Next token to feed (last sampled).
+    /// Next token to feed (last sampled). Meaningless until prefill
+    /// commits.
     pub next_token: u32,
-    /// Position of the next decode step.
+    /// Position of the next decode step. Meaningless until prefill commits.
     pub pos: usize,
     pub preemptions: usize,
     pub rng: Rng,
@@ -76,6 +98,10 @@ impl Scheduler {
     pub fn new(cfg: EngineConfig) -> Scheduler {
         let budget = MemoryBudget::new(cfg.budget_bytes);
         Scheduler { cfg, budget, waiting: VecDeque::new(), next_serial: 0 }
+    }
+
+    pub fn cfg(&self) -> &EngineConfig {
+        &self.cfg
     }
 
     pub fn submit(&mut self, req: GenRequest) {
@@ -119,8 +145,10 @@ impl Scheduler {
     }
 
     /// Admit waiting requests FCFS into `active` while the batch and byte
-    /// budgets allow, running each admitted request's prefill. Requests
-    /// that can never fit finish as `OutOfMemory`.
+    /// budgets allow. Admission reserves the conservative estimate and
+    /// creates the request in [`ReqPhase::Prefill`]; the engine's sweeps
+    /// run the prefill in chunks. Requests that can never fit finish as
+    /// `OutOfMemory`.
     pub fn try_admit(
         &mut self,
         model: &Model,
@@ -152,47 +180,40 @@ impl Scheduler {
             }
             self.waiting.pop_front();
 
-            // Prefill.
+            assert!(!req.prompt.is_empty(), "empty prompt");
             let c = model.config();
-            let mut cache = RequestCache::new(&self.cfg.spec, c.n_layers, c.d_model, c.n_heads);
-            let started_at = Instant::now();
-            let out = model.prefill(&req.prompt, &mut cache);
-            metrics.prefill += started_at.elapsed();
-            // Swap the estimate for real bytes.
-            let real = cache.nbytes();
-            let est_after = if real > est { real } else { est };
-            // Keep the conservative estimate reserved (it covers growth);
-            // grow only if the estimate was below reality (rare).
-            if real > est {
-                let _ = self.budget.adjust(est, real);
-            }
-            let mut rng = Rng::new(self.cfg.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
-            let first = req.sampler.sample(&out.last_logits, &mut rng);
-            let pos = req.prompt.len();
-            metrics.prompt_tokens += pos;
+            let cache = RequestCache::new(&self.cfg.spec, c.n_layers, c.d_model, c.n_heads);
+            let state = PrefillState::new(c, req.prompt.len());
+            let rng = Rng::new(self.cfg.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
             let serial = self.next_serial;
             self.next_serial += 1;
             active.push(ActiveRequest {
                 serial,
                 req,
                 cache,
-                reserved: est_after,
+                phase: ReqPhase::Prefill(state),
+                reserved: est,
+                headroom: 0,
                 output: Vec::new(),
-                next_token: first,
-                pos,
+                next_token: 0,
+                pos: 0,
                 preemptions,
                 rng,
                 enqueued_at: enq,
-                started_at,
+                started_at: Instant::now(),
             });
             metrics.max_concurrency = metrics.max_concurrency.max(active.len());
         }
     }
 
     /// Preempt the youngest active request (highest `started_at`): release
-    /// its reservation and requeue it at the front. If it was the *only*
-    /// active request it can never fit and finishes as `OutOfMemory`
-    /// (avoids a preempt/re-admit livelock).
+    /// everything it holds (steady reservation + sweep headroom) and
+    /// requeue it at the front. A half-prefilled victim needs no unwinding:
+    /// its cache is still empty (prefill commits atomically) and the
+    /// in-flight state drops with it — recompute preemption restarts the
+    /// prefill from scratch on re-admission. If it was the *only* active
+    /// request it can never fit and finishes as `OutOfMemory` (avoids a
+    /// preempt/re-admit livelock).
     pub fn preempt_youngest(
         &mut self,
         active: &mut Vec<ActiveRequest>,
@@ -201,7 +222,7 @@ impl Scheduler {
     ) {
         if let Some(idx) = (0..active.len()).max_by_key(|&i| active[i].started_at) {
             let a = active.swap_remove(idx);
-            self.budget.release(a.reserved);
+            self.budget.release(a.reserved + a.headroom);
             if active.is_empty() {
                 metrics.requests_oom += 1;
                 finished.push(a.into_result(FinishReason::OutOfMemory));

@@ -140,7 +140,8 @@ pub struct CompressedMatrix {
 pub fn compress(x: &Tensor, kind: KvKind, cfg: &GearConfig) -> CompressedMatrix {
     let (rows, cols) = (x.rows(), x.cols());
     let mut rng = Rng::new(cfg.seed ^ (rows as u64) << 32 ^ cols as u64);
-    let mut out = CompressedMatrix { rows, cols, dense: None, quant: None, sparse: None, lowrank: None };
+    let mut out =
+        CompressedMatrix { rows, cols, dense: None, quant: None, sparse: None, lowrank: None };
 
     match cfg.method {
         Method::Fp16 => {
@@ -321,7 +322,8 @@ mod tests {
         let x = kv_matrix(&mut rng, 128, 64);
         for kind in [KvKind::Key, KvKind::Value] {
             let q = err_of(&x, kind, Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(32) });
-            let gl = err_of(&x, kind, Method::GearL { bits: 2, backbone: Backbone::Kivi(32), r: 4 });
+            let gl =
+                err_of(&x, kind, Method::GearL { bits: 2, backbone: Backbone::Kivi(32), r: 4 });
             let g = err_of(
                 &x,
                 kind,
@@ -410,7 +412,8 @@ mod tests {
                 let bits = 2;
                 let bb = Backbone::Kivi(16);
                 let q = err_of(x, KvKind::Value, Method::QuantOnly { bits, backbone: bb });
-                let g = err_of(x, KvKind::Value, Method::Gear { bits, backbone: bb, s: 0.02, r: 4 });
+                let g =
+                    err_of(x, KvKind::Value, Method::Gear { bits, backbone: bb, s: 0.02, r: 4 });
                 if g <= q * 1.05 {
                     Ok(())
                 } else {

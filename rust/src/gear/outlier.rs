@@ -247,7 +247,12 @@ mod tests {
                         .filter(|(&(r_, _), _)| r_ as usize == i)
                         .map(|(_, &v)| v)
                         .collect();
-                    prop_assert!(extracted.len() == 2 * k, "row {i}: {} != {}", extracted.len(), 2 * k);
+                    prop_assert!(
+                        extracted.len() == 2 * k,
+                        "row {i}: {} != {}",
+                        extracted.len(),
+                        2 * k
+                    );
                     let max_pos = extracted.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                     let min_neg = extracted.iter().cloned().fold(f32::INFINITY, f32::min);
                     for (j, &v) in rem.row(i).iter().enumerate() {

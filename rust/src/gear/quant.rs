@@ -520,7 +520,11 @@ mod tests {
                 (randmat(r, rows, cols), *r.choose(&[2u8, 4]))
             },
             |(x, bits)| {
-                let q = QuantizedMatrix::quantize(x, *bits, QuantScheme::kcvt(crate::gear::KvKind::Value));
+                let q = QuantizedMatrix::quantize(
+                    x,
+                    *bits,
+                    QuantScheme::kcvt(crate::gear::KvKind::Value),
+                );
                 let max = (1u32 << bits) - 1;
                 for i in 0..x.rows() {
                     for j in 0..x.cols() {

@@ -26,7 +26,11 @@ pub struct SizeBreakdown {
 
 impl SizeBreakdown {
     pub fn total(&self) -> usize {
-        self.quant_bytes + self.meta_bytes + self.sparse_bytes + self.lowrank_bytes + self.dense_bytes
+        self.quant_bytes
+            + self.meta_bytes
+            + self.sparse_bytes
+            + self.lowrank_bytes
+            + self.dense_bytes
     }
 
     /// Fraction of the FP16 size of an n×d matrix.
@@ -192,8 +196,8 @@ mod tests {
         // Table 1's Ave. KV size ordering at 2-bit:
         // per-token/KIVI (21.7%) < GEAR-L (23.6%) < GEAR (27.6%).
         let (n, d) = (1024, 128);
-        let kivi = predict(Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) }, true, n, d, 4)
-            .frac_of_fp16(n, d);
+        let kivi_m = Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(64) };
+        let kivi = predict(kivi_m, true, n, d, 4).frac_of_fp16(n, d);
         let gearl = predict(Method::gear_l_default(2), true, n, d, 4).frac_of_fp16(n, d);
         let gear = predict(Method::gear_default(2), true, n, d, 4).frac_of_fp16(n, d);
         assert!(kivi < gearl && gearl < gear, "{kivi} {gearl} {gear}");

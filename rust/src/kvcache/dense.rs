@@ -84,13 +84,19 @@ impl LayerKv for DenseLayerKv {
             let vrow = &self.v[t * d..(t + 1) * d];
             for h in 0..n_heads {
                 let p = scores[t * n_heads + h];
-                crate::tensor::ops::axpy(p, &vrow[h * dh..(h + 1) * dh], &mut out[h * dh..(h + 1) * dh]);
+                let seg = h * dh..(h + 1) * dh;
+                crate::tensor::ops::axpy(p, &vrow[seg.clone()], &mut out[seg]);
             }
         }
     }
 
     fn nbytes(&self) -> usize {
         (self.k.len() + self.v.len()) * 2
+    }
+
+    fn step_growth_bound(&self) -> usize {
+        // One appended token: a K row and a V row at FP16.
+        4 * self.d
     }
 
     fn breakdown(&self) -> SizeBreakdown {

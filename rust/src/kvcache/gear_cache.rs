@@ -187,7 +187,8 @@ impl LayerKv for GearLayerKv {
             let vrow = &self.buf_v[t * d..(t + 1) * d];
             for h in 0..n_heads {
                 let p = scores[(off + t) * n_heads + h];
-                crate::tensor::ops::axpy(p, &vrow[h * dh..(h + 1) * dh], &mut out[h * dh..(h + 1) * dh]);
+                let seg = h * dh..(h + 1) * dh;
+                crate::tensor::ops::axpy(p, &vrow[seg.clone()], &mut out[seg]);
             }
         }
     }
@@ -195,6 +196,24 @@ impl LayerKv for GearLayerKv {
     fn nbytes(&self) -> usize {
         let segs: usize = self.seg_k.iter().chain(&self.seg_v).map(|s| s.nbytes()).sum();
         segs + (self.buf_k.len() + self.buf_v.len()) * 2
+    }
+
+    fn step_growth_bound(&self) -> usize {
+        // The appended token lands in the FP16 buffer (a K and a V row).
+        let append = 4 * self.d;
+        if self.buf_n + 1 < self.buffer_cap {
+            return append;
+        }
+        // The append fills the buffer and triggers a flush: the whole
+        // buffer becomes one compressed segment. The analytic size model is
+        // exact for every method (`gear::size` pins predict == measured),
+        // but we stay conservative and do not credit back the freed buffer
+        // rows — the bound only has to never under-estimate.
+        let m = self.method_with_rank(self.decode_rank);
+        let seg = crate::gear::size::predict(m, true, self.buffer_cap, self.d, self.n_heads)
+            .total()
+            + crate::gear::size::predict(m, false, self.buffer_cap, self.d, self.n_heads).total();
+        append + seg
     }
 
     fn breakdown(&self) -> SizeBreakdown {
@@ -267,7 +286,12 @@ mod tests {
         let mut gear = GearLayerKv::new(
             d,
             h,
-            Method::Gear { bits: 8, backbone: crate::gear::compose::Backbone::Kivi(16), s: 0.02, r: 4 },
+            Method::Gear {
+                bits: 8,
+                backbone: crate::gear::compose::Backbone::Kivi(16),
+                s: 0.02,
+                r: 4,
+            },
             20,
             4,
             2,
@@ -317,6 +341,40 @@ mod tests {
         let e_quant = run(Method::QuantOnly { bits: 2, backbone: bb });
         let e_gear = run(Method::Gear { bits: 2, backbone: bb, s: 0.02, r: 4 });
         assert!(e_gear < e_quant, "gear {e_gear} !< quant {e_quant}");
+    }
+
+    #[test]
+    fn step_growth_bound_covers_append_and_flush() {
+        // The engine's step-headroom reservation relies on this bound never
+        // under-estimating one append's growth, including flush sweeps —
+        // exercise small buffers and high decode ranks (chunk overhead
+        // dominates there).
+        let mut rng = Rng::new(95);
+        for (method, buffer, decode_rank) in [
+            (Method::gear_default(2), 4, 2),
+            (Method::gear_l_default(4), 2, 4),
+            (
+                Method::QuantOnly {
+                    bits: 2,
+                    backbone: crate::gear::compose::Backbone::Kivi(16),
+                },
+                3,
+                0,
+            ),
+        ] {
+            let mut c = GearLayerKv::new(32, 4, method, buffer, 4, decode_rank);
+            let (k, v) = fill(&mut rng, 1, 32);
+            for step in 0..13 {
+                let before = c.nbytes();
+                let bound = c.step_growth_bound();
+                c.append(k.row(0), v.row(0));
+                assert!(
+                    c.nbytes() <= before + bound,
+                    "step {step} {method:?}: {} > {before} + {bound}",
+                    c.nbytes()
+                );
+            }
+        }
     }
 
     #[test]

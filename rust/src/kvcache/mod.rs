@@ -72,6 +72,13 @@ pub trait LayerKv: Send {
     /// Current real storage bytes.
     fn nbytes(&self) -> usize;
 
+    /// Conservative upper bound on how much [`Self::nbytes`] can grow from
+    /// appending one token — including any compression flush the append may
+    /// trigger. The engine pre-reserves this for every active request
+    /// before a decode sweep executes, so real cache bytes can no longer
+    /// overshoot the byte budget mid-sweep.
+    fn step_growth_bound(&self) -> usize;
+
     /// Component breakdown (Fig 6).
     fn breakdown(&self) -> SizeBreakdown;
 }
@@ -239,6 +246,12 @@ impl RequestCache {
             .iter()
             .map(|l| l.breakdown())
             .fold(SizeBreakdown::default(), |acc, b| acc.add(&b))
+    }
+
+    /// Upper bound on the byte growth of one decode step across all layers
+    /// (see [`LayerKv::step_growth_bound`]).
+    pub fn step_growth_bound(&self) -> usize {
+        self.layers.iter().map(|l| l.step_growth_bound()).sum()
     }
 
     /// Token count tracked by layer 0 (all layers stay in lockstep).

@@ -4,6 +4,11 @@
 //! and in `python/compile/model.py` (JAX, the build path that trains the
 //! weights and lowers the AOT graphs). The two must stay in lockstep; the
 //! golden-vector tests in `tests/` enforce logit parity.
+//!
+//! Prefill is chunkable: [`PrefillState`] carries a request's in-flight
+//! exact K/V so the prompt can be processed in fixed-size chunks across
+//! engine sweeps ([`Model::prefill_chunk_batch`]) with results bit-identical
+//! to a whole-prompt pass.
 
 pub mod config;
 pub mod sampler;
@@ -11,5 +16,5 @@ pub mod transformer;
 pub mod weights;
 
 pub use config::{ModelConfig, Tokenizer};
-pub use transformer::Model;
+pub use transformer::{Model, PrefillSlot, PrefillState};
 pub use weights::ModelWeights;

@@ -94,77 +94,165 @@ impl Model {
 
     /// Prefill the prompt, populating `cache`, and return last-position
     /// logits. `cache` must be empty.
+    ///
+    /// Implemented as a single maximal chunk through the chunked-prefill
+    /// plane ([`Self::prefill_chunk_batch`] + [`Self::commit_prefill`]), so
+    /// the whole-prompt and chunked paths share one attention loop and stay
+    /// bit-identical by construction.
     pub fn prefill(&self, tokens: &[u32], cache: &mut RequestCache) -> PrefillOutput {
         assert!(!tokens.is_empty(), "empty prompt");
         assert!(cache.is_empty(), "prefill into non-empty cache");
+        let mut state = PrefillState::new(self.config(), tokens.len());
+        let mut bufs = DecodeBufs::new(self.config());
+        self.prefill_chunk_batch(&mut [PrefillSlot { tokens, state: &mut state }], &mut bufs);
+        let last_logits = self.commit_prefill(state, cache);
+        PrefillOutput { last_logits }
+    }
+
+    /// Advance every slot's in-flight prefill by its chunk of tokens, in a
+    /// single layer-major pass (layer `l` runs for every slot before layer
+    /// `l+1`, mirroring [`Self::decode_batch_with`]).
+    ///
+    /// Each chunk attends densely and causally against the *exact* f32 K/V
+    /// rows accumulated in its [`PrefillState`] (prior chunks) plus its own
+    /// rows — op-for-op the same computation a whole-prompt prefill performs
+    /// on those rows, so the resulting hidden states, K/V matrices, and
+    /// final logits are bit-identical regardless of how the prompt is
+    /// chunked. (The only order-sensitive difference is the H₂O attention-
+    /// mass accumulator, whose float additions regroup across chunks; see
+    /// `PrefillState::mass`.)
+    ///
+    /// `bufs.attend.scores` is reused as the per-row score scratch; no other
+    /// state in `bufs` is touched.
+    pub fn prefill_chunk_batch(&self, slots: &mut [PrefillSlot<'_>], bufs: &mut DecodeBufs) {
         let c = self.config();
-        let (n, d, nh) = (tokens.len(), c.d_model, c.n_heads);
+        let (d, nh) = (c.d_model, c.n_heads);
         let dh = c.head_dim();
         let scale = 1.0 / (dh as f32).sqrt();
 
-        let mut x = self.embed(tokens, 0);
-        let mut norm = Tensor::zeros(&[n, d]);
+        // Per-slot chunk hidden states, embedded at each slot's resume
+        // position.
+        let mut xs: Vec<Tensor> = slots
+            .iter()
+            .map(|s| {
+                assert!(!s.tokens.is_empty(), "empty prefill chunk");
+                assert!(
+                    s.state.done + s.tokens.len() <= s.state.total,
+                    "chunk overruns prompt: {} + {} > {}",
+                    s.state.done,
+                    s.tokens.len(),
+                    s.state.total
+                );
+                self.embed(s.tokens, s.state.done)
+            })
+            .collect();
 
         for (l, blk) in self.weights.blocks.iter().enumerate() {
-            // LN1
-            for i in 0..n {
-                layernorm(x.row(i), &blk.ln1_g, &blk.ln1_b, 1e-5, norm.row_mut(i));
-            }
-            let q = matmul(&norm, &blk.wq);
-            let k = matmul(&norm, &blk.wk);
-            let v = matmul(&norm, &blk.wv);
+            for (x, slot) in xs.iter_mut().zip(slots.iter_mut()) {
+                let m = slot.tokens.len();
+                let done = slot.state.done;
+                let mut norm = Tensor::zeros(&[m, d]);
+                for i in 0..m {
+                    layernorm(x.row(i), &blk.ln1_g, &blk.ln1_b, 1e-5, norm.row_mut(i));
+                }
+                let q = matmul(&norm, &blk.wq);
+                let k = matmul(&norm, &blk.wk);
+                let v = matmul(&norm, &blk.wv);
 
-            // Dense causal attention per head; also accumulate per-token
-            // attention mass for H₂O's prefill oracle.
-            let mut ctx = Tensor::zeros(&[n, d]);
-            let mut mass = vec![0.0f32; n];
-            let mut row_scores = vec![0.0f32; n];
-            for h in 0..nh {
-                let hs = h * dh;
-                for i in 0..n {
-                    let qrow = &q.row(i)[hs..hs + dh];
-                    for t in 0..=i {
-                        row_scores[t] = scale * dot(qrow, &k.row(t)[hs..hs + dh]);
-                    }
-                    softmax_inplace(&mut row_scores[..=i]);
-                    let crow = &mut ctx.row_mut(i)[hs..hs + dh];
-                    for t in 0..=i {
-                        let p = row_scores[t];
-                        mass[t] += p;
-                        ops::axpy(p, &v.row(t)[hs..hs + dh], crow);
+                // Stash the chunk's exact K/V rows; attention then reads
+                // rows 0..done+m contiguously out of the state.
+                let st = &mut *slot.state;
+                st.k[l].extend_from_slice(k.data());
+                st.v[l].extend_from_slice(v.data());
+                st.mass[l].resize(done + m, 0.0);
+                let k_all = &st.k[l];
+                let v_all = &st.v[l];
+                let mass = &mut st.mass[l];
+
+                // Dense causal attention per head (+ H₂O mass accumulation).
+                let mut ctx = Tensor::zeros(&[m, d]);
+                let row_scores = &mut bufs.attend.scores;
+                row_scores.clear();
+                row_scores.resize(done + m, 0.0);
+                for h in 0..nh {
+                    let hs = h * dh;
+                    for i in 0..m {
+                        let g = done + i;
+                        let qrow = &q.row(i)[hs..hs + dh];
+                        for t in 0..=g {
+                            row_scores[t] =
+                                scale * dot(qrow, &k_all[t * d + hs..t * d + hs + dh]);
+                        }
+                        softmax_inplace(&mut row_scores[..=g]);
+                        let crow = &mut ctx.row_mut(i)[hs..hs + dh];
+                        for t in 0..=g {
+                            let p = row_scores[t];
+                            mass[t] += p;
+                            ops::axpy(p, &v_all[t * d + hs..t * d + hs + dh], crow);
+                        }
                     }
                 }
-            }
-            let proj = matmul(&ctx, &blk.wo);
-            for (xi, pi) in x.data_mut().iter_mut().zip(proj.data()) {
-                *xi += pi;
-            }
-
-            // Hand exact K/V to the cache (it compresses/prunes as configured).
-            cache.layers[l].ingest_prefill(k, v, Some(&mass));
-
-            // MLP
-            for i in 0..n {
-                layernorm(x.row(i), &blk.ln2_g, &blk.ln2_b, 1e-5, norm.row_mut(i));
-            }
-            let mut h1 = matmul(&norm, &blk.w1);
-            for i in 0..n {
-                for (j, hv) in h1.row_mut(i).iter_mut().enumerate() {
-                    *hv = gelu(*hv + blk.b1[j]);
+                let proj = matmul(&ctx, &blk.wo);
+                for (xi, pi) in x.data_mut().iter_mut().zip(proj.data()) {
+                    *xi += pi;
                 }
-            }
-            let h2 = matmul(&h1, &blk.w2);
-            for i in 0..n {
-                for j in 0..d {
-                    x.row_mut(i)[j] += h2.row(i)[j] + blk.b2[j];
+
+                // MLP
+                for i in 0..m {
+                    layernorm(x.row(i), &blk.ln2_g, &blk.ln2_b, 1e-5, norm.row_mut(i));
+                }
+                let mut h1 = matmul(&norm, &blk.w1);
+                for i in 0..m {
+                    for (j, hv) in h1.row_mut(i).iter_mut().enumerate() {
+                        *hv = gelu(*hv + blk.b1[j]);
+                    }
+                }
+                let h2 = matmul(&h1, &blk.w2);
+                for i in 0..m {
+                    for j in 0..d {
+                        x.row_mut(i)[j] += h2.row(i)[j] + blk.b2[j];
+                    }
                 }
             }
         }
 
-        // Final LN + head for the last position only.
-        let mut last = vec![0.0f32; d];
-        layernorm(x.row(n - 1), &self.weights.lnf_g, &self.weights.lnf_b, 1e-5, &mut last);
-        PrefillOutput { last_logits: self.lm_head(&last) }
+        // Advance each slot; the final chunk yields last-position logits.
+        for (x, slot) in xs.iter().zip(slots.iter_mut()) {
+            slot.state.done += slot.tokens.len();
+            if slot.state.done == slot.state.total {
+                let mut last = vec![0.0f32; d];
+                layernorm(
+                    x.row(slot.tokens.len() - 1),
+                    &self.weights.lnf_g,
+                    &self.weights.lnf_b,
+                    1e-5,
+                    &mut last,
+                );
+                slot.state.last_logits = Some(self.lm_head(&last));
+            }
+        }
+    }
+
+    /// Commit a *complete* prefill: hand each layer's exact K/V (and H₂O
+    /// attention mass) to the cache in one shot — the same
+    /// `ingest_prefill` call a whole-prompt prefill makes, so compression
+    /// layout and bytes are identical however the prompt was chunked.
+    /// Returns the last-position logits.
+    pub fn commit_prefill(&self, state: PrefillState, cache: &mut RequestCache) -> Vec<f32> {
+        assert!(cache.is_empty(), "prefill into non-empty cache");
+        assert!(
+            state.is_complete(),
+            "commit of incomplete prefill ({}/{} tokens)",
+            state.done,
+            state.total
+        );
+        let PrefillState { k, v, mass, total, d, last_logits, .. } = state;
+        for (l, ((kl, vl), ml)) in k.into_iter().zip(v).zip(mass).enumerate() {
+            let kt = Tensor::new(&[total, d], kl);
+            let vt = Tensor::new(&[total, d], vl);
+            cache.layers[l].ingest_prefill(kt, vt, Some(&ml));
+        }
+        last_logits.expect("complete prefill must have produced logits")
     }
 
     /// One decode step: embed `token` at `pos`, attend through the cache,
@@ -285,6 +373,82 @@ pub struct DecodeSlot<'a> {
     pub token: u32,
     pub pos: usize,
     pub cache: &'a mut RequestCache,
+}
+
+/// One request's slice of a batched prefill round: the next chunk of prompt
+/// tokens and the request's in-flight prefill state.
+pub struct PrefillSlot<'a> {
+    pub tokens: &'a [u32],
+    pub state: &'a mut PrefillState,
+}
+
+/// In-flight chunked prefill of one request: the *exact* f32 K/V rows of
+/// every prompt token processed so far, per layer, plus the H₂O
+/// attention-mass accumulators.
+///
+/// Keeping the rows exact (not FP16-rounded, not compressed) is what makes
+/// chunked prefill bit-identical to whole-prompt prefill: later chunks
+/// attend against precisely the values a single dense pass would have used,
+/// and [`Model::commit_prefill`] compresses the concatenated matrices in
+/// the same one-shot `ingest_prefill` call. The f32 copies are a
+/// host-simulation artifact of that exactness; for byte-budget purposes the
+/// in-flight KV is accounted at the FP16 rate a serving system would hold
+/// it at ([`Self::transient_fp16_bytes`]).
+pub struct PrefillState {
+    /// Per-layer exact K rows, row-major `done × d`.
+    k: Vec<Vec<f32>>,
+    /// Per-layer exact V rows, row-major `done × d`.
+    v: Vec<Vec<f32>>,
+    /// Per-layer accumulated attention mass per prompt token (H₂O's prefill
+    /// oracle). Float additions regroup across chunk boundaries, so this is
+    /// the one prefill output that is equal only up to rounding between
+    /// chunkings.
+    mass: Vec<Vec<f32>>,
+    /// Prompt tokens prefilled so far.
+    done: usize,
+    /// Total prompt length.
+    total: usize,
+    d: usize,
+    /// Set by the chunk that completes the prompt.
+    last_logits: Option<Vec<f32>>,
+}
+
+impl PrefillState {
+    pub fn new(c: &ModelConfig, prompt_len: usize) -> PrefillState {
+        assert!(prompt_len > 0, "empty prompt");
+        let layer = || Vec::with_capacity(prompt_len * c.d_model);
+        PrefillState {
+            k: (0..c.n_layers).map(|_| layer()).collect(),
+            v: (0..c.n_layers).map(|_| layer()).collect(),
+            mass: (0..c.n_layers).map(|_| Vec::new()).collect(),
+            done: 0,
+            total: prompt_len,
+            d: c.d_model,
+            last_logits: None,
+        }
+    }
+
+    /// Prompt tokens prefilled so far.
+    pub fn done(&self) -> usize {
+        self.done
+    }
+
+    /// Total prompt length.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.done == self.total
+    }
+
+    /// FP16-accounted bytes of the in-flight K/V once `tokens` prompt
+    /// tokens are prefilled (K + V rows across all layers). The scheduler
+    /// reserves this against the byte budget while the prefill is in
+    /// flight; it equals `ModelConfig::fp16_kv_bytes(tokens)`.
+    pub fn transient_fp16_bytes(&self, tokens: usize) -> usize {
+        self.k.len() * 2 * tokens * self.d * 2
+    }
 }
 
 /// Reusable scratch for decode steps: every intermediate the per-layer
@@ -464,6 +628,106 @@ mod tests {
                 assert_eq!(lg, &seq_logits[step][i], "req {i} step {step} diverged");
             }
         }
+    }
+
+    /// Chunked prefill must be bit-identical to whole-prompt prefill —
+    /// same final logits, same committed cache bytes, and an exactly equal
+    /// first decode step — for every chunking of the prompt.
+    #[test]
+    fn chunked_prefill_bit_identical_to_whole() {
+        let m = tiny_model();
+        let prompt: Vec<u32> = (0..23).map(|i| (i % 11) + 1).collect();
+        for spec in [CacheSpec::Fp16, CacheSpec::gear(4), CacheSpec::parse("kivi-2").unwrap()] {
+            let run = |chunk: usize| {
+                let mut cache = new_cache(&m, &spec);
+                let logits = if chunk >= prompt.len() {
+                    // Whole-prompt entry point (itself a single chunk).
+                    m.prefill(&prompt, &mut cache).last_logits
+                } else {
+                    let mut state = PrefillState::new(m.config(), prompt.len());
+                    let mut bufs = DecodeBufs::new(m.config());
+                    let mut done = 0;
+                    while done < prompt.len() {
+                        let end = (done + chunk).min(prompt.len());
+                        let mut slots =
+                            [PrefillSlot { tokens: &prompt[done..end], state: &mut state }];
+                        m.prefill_chunk_batch(&mut slots, &mut bufs);
+                        done = end;
+                    }
+                    m.commit_prefill(state, &mut cache)
+                };
+                let dec = m.decode_step(5, prompt.len(), &mut cache);
+                (logits, dec, cache.nbytes())
+            };
+            let whole = run(usize::MAX);
+            for chunk in [1usize, 4, 7, 16] {
+                assert_eq!(run(chunk), whole, "chunk {} spec {}", chunk, spec.label());
+            }
+        }
+    }
+
+    /// A multi-slot prefill round must leave each slot exactly as a
+    /// single-slot round would (slots are independent).
+    #[test]
+    fn batched_prefill_slots_independent() {
+        let m = tiny_model();
+        let prompts: [&[u32]; 3] = [&[1, 3, 5, 7, 9], &[2, 4, 6], &[9, 8, 7, 6, 5, 4, 3]];
+        let solo: Vec<(Vec<f32>, usize)> = prompts
+            .iter()
+            .map(|p| {
+                let mut cache = new_cache(&m, &CacheSpec::gear(4));
+                let out = m.prefill(p, &mut cache);
+                (out.last_logits, cache.nbytes())
+            })
+            .collect();
+
+        // Same prompts, prefilled together two chunked rounds at a time.
+        let mut states: Vec<PrefillState> =
+            prompts.iter().map(|p| PrefillState::new(m.config(), p.len())).collect();
+        let mut bufs = DecodeBufs::new(m.config());
+        let chunk = 2;
+        let mut done = 0;
+        while states.iter().any(|s| !s.is_complete()) {
+            let mut slots: Vec<PrefillSlot> = Vec::new();
+            for (p, s) in prompts.iter().zip(states.iter_mut()) {
+                if done < p.len() {
+                    let end = (done + chunk).min(p.len());
+                    slots.push(PrefillSlot { tokens: &p[done..end], state: s });
+                }
+            }
+            m.prefill_chunk_batch(&mut slots, &mut bufs);
+            done += chunk;
+        }
+        for ((state, p), (logits, nbytes)) in states.into_iter().zip(prompts).zip(solo) {
+            let mut cache = new_cache(&m, &CacheSpec::gear(4));
+            assert_eq!(state.done(), p.len());
+            assert_eq!(m.commit_prefill(state, &mut cache), logits);
+            assert_eq!(cache.nbytes(), nbytes);
+        }
+    }
+
+    /// H₂O's attention-mass accumulator regroups float additions across
+    /// chunk boundaries, so chunked H₂O prefill is equivalent but not
+    /// bit-pinned; pruning behavior must still match.
+    #[test]
+    fn chunked_prefill_h2o_prunes_identically() {
+        let m = tiny_model();
+        let spec = CacheSpec::H2o { keep: 0.5, recent: 2 };
+        let prompt: Vec<u32> = (0..20).map(|i| (i % 12) + 1).collect();
+        let mut whole = new_cache(&m, &spec);
+        m.prefill(&prompt, &mut whole);
+
+        let mut state = PrefillState::new(m.config(), prompt.len());
+        let mut bufs = DecodeBufs::new(m.config());
+        for start in (0..prompt.len()).step_by(6) {
+            let end = (start + 6).min(prompt.len());
+            let mut slots = [PrefillSlot { tokens: &prompt[start..end], state: &mut state }];
+            m.prefill_chunk_batch(&mut slots, &mut bufs);
+        }
+        let mut chunked = new_cache(&m, &spec);
+        let logits = m.commit_prefill(state, &mut chunked);
+        assert_eq!(chunked.len(), whole.len(), "same pruned token count");
+        assert!(logits.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -11,7 +11,9 @@ use std::path::Path;
 use crate::util::error::{bail, Context, Result};
 
 use crate::runtime::artifacts::Artifacts;
-use crate::runtime::executable::{i32_literal, i32_scalar, literal_to_vec, slice_to_literal, XlaRuntime};
+use crate::runtime::executable::{
+    i32_literal, i32_scalar, literal_to_vec, slice_to_literal, XlaRuntime,
+};
 
 /// Model served via XLA executables.
 pub struct XlaModel {

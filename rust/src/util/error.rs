@@ -116,8 +116,7 @@ mod tests {
 
     #[test]
     fn context_on_result_and_option() {
-        let r: std::result::Result<(), std::io::Error> =
-            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::other("boom"));
         let e = r.context("reading header").unwrap_err();
         assert!(e.to_string().contains("reading header"));
         assert!(e.to_string().contains("boom"));

@@ -1,0 +1,146 @@
+//! Golden tests for the chunked-prefill plane.
+//!
+//! 1. The engine's token streams are **bit-identical** for every
+//!    `prefill_chunk` value (chunked prefill attends against exact f32 K/V
+//!    and commits through the same one-shot ingest as whole-prompt
+//!    prefill), in both execution modes.
+//! 2. Preempting a request mid-prefill rolls back cleanly: the request
+//!    recomputes from scratch, produces the same tokens it would have with
+//!    an unlimited budget, and every reserved byte drains by the end.
+
+use gear_serve::coordinator::engine::{Engine, EngineConfig};
+use gear_serve::coordinator::request::{FinishReason, GenRequest};
+use gear_serve::coordinator::ExecMode;
+use gear_serve::kvcache::CacheSpec;
+use gear_serve::model::config::ModelConfig;
+use gear_serve::model::{Model, ModelWeights};
+
+fn test_config() -> ModelConfig {
+    ModelConfig { vocab: 13, d_model: 64, n_layers: 2, n_heads: 2, max_seq: 256 }
+}
+
+/// Mixed-length prompts so chunk boundaries land everywhere.
+fn submit_mixed(e: &mut Engine, n_reqs: u64) {
+    for i in 0..n_reqs {
+        let len = 5 + (i as usize * 11) % 40;
+        let prompt: Vec<u32> = (0..len).map(|t| ((t + i as usize) % 10) as u32 + 3).collect();
+        e.submit(GenRequest::greedy(i, prompt, 12));
+    }
+}
+
+type Outcome = Vec<(u64, Vec<u32>, FinishReason, usize)>;
+
+fn run(spec: CacheSpec, budget: usize, chunk: usize, exec: ExecMode) -> Outcome {
+    let model = Model::new(ModelWeights::random(test_config(), 11));
+    let mut e = Engine::new(
+        model,
+        EngineConfig::new(spec)
+            .with_budget(budget)
+            .with_max_batch(8)
+            .with_exec(exec)
+            .with_prefill_chunk(chunk),
+    );
+    submit_mixed(&mut e, 8);
+    let mut results = e.run_to_completion();
+    assert_eq!(e.budget_used(), 0, "reservations must drain (chunk {chunk})");
+    results.sort_by_key(|r| r.id);
+    results.into_iter().map(|r| (r.id, r.output, r.finish, r.preemptions)).collect()
+}
+
+#[test]
+fn chunked_prefill_streams_bit_identical_across_chunk_sizes() {
+    for spec in [CacheSpec::Fp16, CacheSpec::gear(4), CacheSpec::parse("kivi-2").unwrap()] {
+        let whole = run(spec, usize::MAX, usize::MAX, ExecMode::Batched);
+        for chunk in [1usize, 3, 16, 128] {
+            for exec in [ExecMode::Sequential, ExecMode::Batched] {
+                let chunked = run(spec, usize::MAX, chunk, exec);
+                assert_eq!(chunked, whole, "chunk {} {:?} spec {}", chunk, exec, spec.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_tight_budget_bit_identical() {
+    // FP16's admission estimate covers all growth, so a serializing budget
+    // is deterministic; the token streams must not depend on chunking.
+    let cfg = test_config();
+    let budget = cfg.fp16_kv_bytes(44 + 12) + cfg.fp16_kv_bytes(20);
+    let whole = run(CacheSpec::Fp16, budget, usize::MAX, ExecMode::Batched);
+    for chunk in [4usize, 32] {
+        assert_eq!(run(CacheSpec::Fp16, budget, chunk, ExecMode::Batched), whole, "chunk {chunk}");
+    }
+    assert!(whole.iter().all(|(_, _, f, _)| *f != FinishReason::OutOfMemory));
+}
+
+/// Overhead-heavy compressed spec: real bytes (and the FP16-accounted
+/// prefill transient) run well past the admission estimate, so a tight
+/// budget forces preemption of the younger, still-prefilling request.
+fn spec_for_preemption() -> CacheSpec {
+    CacheSpec::Compressed {
+        method: gear_serve::gear::Method::GearL {
+            bits: 2,
+            backbone: gear_serve::gear::compose::Backbone::Kivi(16),
+            r: 2,
+        },
+        buffer: 4,
+        prefill_rank: 2,
+        decode_rank: 2,
+    }
+}
+
+#[test]
+fn preemption_mid_prefill_recomputes_from_scratch() {
+    let cfg = test_config();
+    let model = || Model::new(ModelWeights::random(cfg, 11));
+    let short = GenRequest::greedy(0, vec![3, 4, 5, 6, 7, 8, 9, 10], 16);
+    let long_prompt: Vec<u32> = (0..96).map(|t| (t % 10) as u32 + 3).collect();
+    let long = GenRequest::greedy(1, long_prompt.clone(), 4);
+
+    // Reference: unlimited budget, no preemption possible.
+    let reference = {
+        let mut e = Engine::new(
+            model(),
+            EngineConfig::new(spec_for_preemption()).with_max_batch(4).with_prefill_chunk(16),
+        );
+        e.submit(short.clone());
+        e.submit(long.clone());
+        let mut res = e.run_to_completion();
+        assert_eq!(e.metrics.requests_preempted, 0);
+        res.sort_by_key(|r| r.id);
+        res
+    };
+
+    // Tight budget: exactly the long request's peak in-flight prefill
+    // bytes. Both admit (compressed estimates are small), but mid-prefill
+    // the long request's FP16-accounted transient no longer fits next to
+    // the short one — the younger long request is preempted with a
+    // half-finished prefill, recomputes from scratch, and must still
+    // produce identical tokens.
+    let budget = cfg.fp16_kv_bytes(long_prompt.len());
+    let mut e = Engine::new(
+        model(),
+        EngineConfig::new(spec_for_preemption())
+            .with_budget(budget)
+            .with_max_batch(4)
+            .with_prefill_chunk(16),
+    );
+    e.submit(short);
+    e.submit(long);
+    let mut res = e.run_to_completion();
+    res.sort_by_key(|r| r.id);
+
+    assert!(e.metrics.requests_preempted > 0, "scenario must preempt mid-prefill");
+    assert_eq!(res.len(), 2);
+    assert!(res.iter().all(|r| r.finish != FinishReason::OutOfMemory));
+    assert!(res[1].preemptions > 0, "long request must have been preempted");
+    for (r, want) in res.iter().zip(&reference) {
+        assert_eq!(r.output, want.output, "request {} diverged after recompute", r.id);
+        assert_eq!(r.finish, want.finish);
+    }
+
+    // Byte accounting: every reservation (steady + headroom) drained, and
+    // the pre-reserve phase kept the peak within the budget.
+    assert_eq!(e.budget_used(), 0);
+    assert!(e.metrics.peak_cache_bytes <= budget, "{} > {budget}", e.metrics.peak_cache_bytes);
+}
