@@ -13,6 +13,7 @@
 
 use gear_serve::coordinator::device_model::DeviceModel;
 use gear_serve::coordinator::engine::{Engine, EngineConfig};
+use gear_serve::coordinator::executor::default_pool_threads;
 use gear_serve::coordinator::request::GenRequest;
 use gear_serve::coordinator::ExecMode;
 use gear_serve::gear::size::predict_cache_frac;
@@ -167,6 +168,7 @@ fn compare_exec_planes(smoke: bool) {
         ModelWeights::random(ModelConfig::default(), 3)
     };
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pool = default_pool_threads();
     // Decode-heavy workload (short prompt, long generation) and a
     // decode-only metric: prefill work is identical in both modes and would
     // otherwise dilute the comparison.
@@ -175,14 +177,25 @@ fn compare_exec_planes(smoke: bool) {
     let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| (i % 46) + 3).collect();
 
     let mut t = Table::new(&format!(
-        "Decode plane: sequential vs batched sweep ({host}-way host, decode-phase tok/s)"
+        "Decode plane: sequential vs pooled sweep ({pool}-thread pool, {host}-way host, \
+         decode-phase tok/s)"
     ))
-    .header(&["spec", "max_batch", "seq tok/s", "batched tok/s", "speedup"]);
+    .header(&[
+        "spec",
+        "max_batch",
+        "seq tok/s",
+        "pool tok/s",
+        "speedup",
+        "p50 ms",
+        "p99 ms",
+        "flush ms",
+    ]);
     let mut decode_rows: Vec<String> = Vec::new();
 
     for (name, spec) in [("fp16", CacheSpec::Fp16), ("gear-4", CacheSpec::gear(4))] {
         for batch in [1usize, 4, 16] {
             let mut tput = [0.0f64; 2];
+            let mut pooled = None;
             for (slot, exec) in [ExecMode::Sequential, ExecMode::Batched].into_iter().enumerate()
             {
                 let mut e = Engine::new(
@@ -194,25 +207,39 @@ fn compare_exec_planes(smoke: bool) {
                 }
                 let _ = e.run_to_completion();
                 tput[slot] = e.metrics.decode_throughput();
+                if exec == ExecMode::Batched {
+                    pooled = Some(e.metrics.clone());
+                }
             }
+            let m = pooled.expect("batched leg always runs");
             let speedup = tput[1] / tput[0].max(1e-9);
+            let (p50, p99) = (m.step_p50().as_secs_f64() * 1e3, m.step_p99().as_secs_f64() * 1e3);
+            let flush_ms = m.flush_stall.as_secs_f64() * 1e3;
             t.row(vec![
                 name.into(),
                 batch.to_string(),
                 sig(tput[0]),
                 sig(tput[1]),
                 format!("{speedup:.2}x"),
+                format!("{p50:.3}"),
+                format!("{p99:.3}"),
+                format!("{flush_ms:.3}"),
             ]);
             decode_rows.push(format!(
                 "{{\"spec\": \"{name}\", \"max_batch\": {batch}, \
                  \"seq_decode_tok_s\": {:.3}, \"batched_decode_tok_s\": {:.3}, \
-                 \"speedup\": {speedup:.4}}}",
-                tput[0], tput[1]
+                 \"speedup\": {speedup:.4}, \"step_p50_ms\": {p50:.4}, \
+                 \"step_p99_ms\": {p99:.4}, \"flush_jobs\": {}, \
+                 \"flush_stall_ms\": {flush_ms:.4}}}",
+                tput[0], tput[1], m.flush_jobs
             ));
         }
     }
     t.print();
-    println!("expected shape: ~1x at batch 1 (inline path), > 1x at batch >= 8 on multi-core\n");
+    println!(
+        "expected shape: ~1x at batch 1 (inline path), > 1x at batch >= 8 on multi-core; \
+         flush ms is the residual commit-point stall (inline compression would serialize it)\n"
+    );
 
     // Chunked vs whole-prompt prefill on a prompt-heavy workload: total
     // tokens/s (prefill included). Chunking must not regress throughput;
@@ -261,7 +288,7 @@ fn compare_exec_planes(smoke: bool) {
 
     let json = format!(
         "{{\n  \"bench\": \"throughput_compare\",\n  \"provenance\": \"measured\",\n  \
-         \"mode\": \"{}\",\n  \"host_parallelism\": {host},\n  \
+         \"mode\": \"{}\",\n  \"host_parallelism\": {host},\n  \"pool_threads\": {pool},\n  \
          \"decode_workload\": {{\"prompt_len\": {prompt_len}, \
          \"max_new_tokens\": {max_new}, \"requests\": {n_reqs}}},\n  \
          \"prefill_workload\": {{\"prompt_len\": {long_len}, \

@@ -5,10 +5,12 @@
 //!   accounting, preemption, finish bookkeeping. Pure policy, FCFS
 //!   deterministic.
 //! * **Execution plane** ([`super::executor`]) — one decode step for the
-//!   *whole* active set, and one round of prefill chunks, each as a single
-//!   batched, layer-major model call chunked across worker threads.
+//!   *whole* active set, one round of prefill chunks, and the deferred
+//!   segment flushes the decode step seals, each dispatched as contiguous
+//!   chunk descriptors across a persistent worker pool.
 //!
-//! A sweep runs **reserve → prefill chunks → decode batch**:
+//! A sweep runs **emit → reserve → prefill chunks → decode batch → flush →
+//! commit**:
 //! 1. **Emit** (policy, sequential): each decoding request's previously
 //!    sampled token is emitted; stop/length/context finishes retire.
 //! 2. **Reserve** (policy, sequential, fixed order): per request, the
@@ -26,8 +28,14 @@
 //!    path (bit-identical to whole-prompt prefill), its first token is
 //!    sampled, and it joins the decode set *next* sweep.
 //! 4. **Decode** (execute): the surviving decoders advance one token in a
-//!    single [`BatchExecutor::run`] call.
-//! 5. **Commit** (policy, sequential, fixed order): per request — sample
+//!    single [`BatchExecutor::run_into`] call, writing into the engine's
+//!    pooled logits vectors. Streaming buffers the step fills are *sealed*,
+//!    not compressed inline ([`LayerKv::append_deferred`]).
+//! 5. **Flush** (execute, deterministic commit point): every sealed
+//!    (request, layer) pair — collected in fixed request-serial × layer
+//!    order — compresses via [`BatchExecutor::run_flushes`], in parallel
+//!    across requests and layers, before any byte accounting runs.
+//! 6. **Commit** (policy, sequential, fixed order): per request — sample
 //!    the next token and fold the sweep's transient headroom back into the
 //!    steady reservation (with a preempt-and-retry backstop should a cache
 //!    ever outgrow its bound).
@@ -47,7 +55,7 @@
 
 use std::time::Instant;
 
-use crate::kvcache::CacheSpec;
+use crate::kvcache::{CacheSpec, LayerKv};
 use crate::model::{Model, PrefillSlot};
 
 use super::executor::{BatchExecutor, ExecMode};
@@ -73,6 +81,11 @@ pub struct EngineConfig {
     /// sweeps, so an arriving long prompt never stalls the active batch.
     /// The token stream is bit-identical for every value.
     pub prefill_chunk: usize,
+    /// Worker-pool size for [`ExecMode::Batched`]. `None` (the default)
+    /// resolves through [`super::executor::default_pool_threads`]
+    /// (`GEAR_POOL_THREADS`, else host parallelism). The token stream is
+    /// bit-identical for every value (`tests/pool_golden.rs`).
+    pub pool_threads: Option<usize>,
 }
 
 impl EngineConfig {
@@ -84,6 +97,7 @@ impl EngineConfig {
             seed: 0x5EED,
             exec: ExecMode::Batched,
             prefill_chunk: 128,
+            pool_threads: None,
         }
     }
 
@@ -106,6 +120,11 @@ impl EngineConfig {
         self.prefill_chunk = tokens.max(1);
         self
     }
+
+    pub fn with_pool_threads(mut self, threads: usize) -> Self {
+        self.pool_threads = Some(threads.max(1));
+        self
+    }
 }
 
 /// Synchronous serving engine: scheduler (policy) + batch executor
@@ -116,18 +135,22 @@ pub struct Engine {
     executor: BatchExecutor,
     active: Vec<ActiveRequest>,
     finished: Vec<GenResult>,
+    /// Pooled per-request logits vectors, reused across decode sweeps so a
+    /// steady sweep performs no O(batch) allocation.
+    logits_buf: Vec<Vec<f32>>,
     pub metrics: EngineMetrics,
 }
 
 impl Engine {
     pub fn new(model: Model, cfg: EngineConfig) -> Engine {
-        let executor = BatchExecutor::new(&model, cfg.exec);
+        let executor = BatchExecutor::new(&model, cfg.exec, cfg.pool_threads);
         Engine {
             scheduler: Scheduler::new(cfg),
             executor,
             model,
             active: Vec::new(),
             finished: Vec::new(),
+            logits_buf: Vec::new(),
             metrics: EngineMetrics::default(),
         }
     }
@@ -141,8 +164,8 @@ impl Engine {
     }
 
     /// Run one engine sweep over all active requests (emit → reserve →
-    /// prefill chunks → decode batch → commit). Returns the number of
-    /// tokens generated this step.
+    /// prefill chunks → decode batch → flush → commit). Returns the number
+    /// of tokens generated this step.
     fn sweep(&mut self) -> usize {
         // Phase 1 — emit previously sampled tokens; retire finishes. The
         // sampled token from the previous step/prefill is emitted first;
@@ -197,7 +220,7 @@ impl Engine {
         // Phase 3 — one round of prefill chunks.
         self.prefill_phase();
 
-        // Phase 4/5 — batched decode + commit.
+        // Phase 4–6 — batched decode + flush commit point + commit.
         self.decode_phase(&decode_serials);
         produced
     }
@@ -290,32 +313,65 @@ impl Engine {
     }
 
     /// One batched decode step for the given (still-present) requests, then
-    /// the sequential fixed-order commit: sample the next token and settle
-    /// the byte reservation. Requests are re-found by admission serial
-    /// (caller-chosen `req.id`s need not be unique; serials are).
+    /// the deterministic flush commit point, then the sequential fixed-order
+    /// commit: sample the next token and settle the byte reservation.
+    /// Requests are re-found by admission serial (caller-chosen `req.id`s
+    /// need not be unique; serials are).
     fn decode_phase(&mut self, serials: &[u64]) {
-        let (logits, present) = {
+        let t_step = Instant::now();
+        let mut logits = std::mem::take(&mut self.logits_buf);
+        let present: Vec<u64> = {
             let mut refs: Vec<&mut ActiveRequest> = self
                 .active
                 .iter_mut()
                 .filter(|a| serials.contains(&a.serial))
                 .collect();
             if refs.is_empty() {
+                self.logits_buf = logits;
                 return;
             }
-            let present: Vec<u64> = refs.iter().map(|a| a.serial).collect();
-            (self.executor.run(&self.model, &mut refs), present)
+            let present = refs.iter().map(|a| a.serial).collect();
+            self.executor.run_into(&self.model, &mut refs, &mut logits);
+            present
         };
 
-        for (lg, serial) in logits.into_iter().zip(present) {
+        // Flush commit point: every streaming buffer the decode step sealed
+        // compresses here — in parallel across requests and layers on the
+        // executor pool — before sampling and before `settle_reservation`
+        // reads any `nbytes()`. Pending layers are collected in fixed
+        // request-serial × layer order, and each flush touches only its own
+        // layer, so pool size cannot change bytes, peaks, or token streams.
+        {
+            let t_flush = Instant::now();
+            let mut pending: Vec<&mut dyn LayerKv> = Vec::new();
+            for a in self.active.iter_mut() {
+                if !present.contains(&a.serial) {
+                    continue;
+                }
+                for layer in a.cache.layers.iter_mut() {
+                    if layer.flush_pending() {
+                        pending.push(layer.as_mut());
+                    }
+                }
+            }
+            if !pending.is_empty() {
+                self.metrics.flush_jobs += pending.len();
+                self.executor.run_flushes(&mut pending);
+                self.metrics.flush_stall += t_flush.elapsed();
+            }
+        }
+
+        for (lg, &serial) in logits.iter().zip(&present) {
             let Some(i) = self.active.iter().position(|a| a.serial == serial) else { continue };
             {
                 let a = &mut self.active[i];
                 a.pos += 1;
-                a.next_token = a.req.sampler.sample(&lg, &mut a.rng);
+                a.next_token = a.req.sampler.sample(lg, &mut a.rng);
             }
             self.settle_reservation(serial);
         }
+        self.logits_buf = logits;
+        self.metrics.step_latencies.push(t_step.elapsed());
     }
 
     /// Fold a request's transient sweep headroom back into its steady

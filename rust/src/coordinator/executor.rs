@@ -1,27 +1,58 @@
 //! The execution plane: one batched decode step — and one batched round of
-//! prefill chunks — over the whole active set.
+//! prefill chunks — over the whole active set, plus the deferred-flush
+//! compression jobs the decode step seals.
 //!
 //! The executor owns no policy. It receives the active requests in engine
-//! order, runs [`Model::decode_batch_with`] (decode) or
+//! order, runs [`Model::decode_batch_into`] (decode) or
 //! [`Model::prefill_chunk_batch`] (prefill) over them — layer-major, so
 //! each block's weights are streamed once per sweep for the whole batch —
-//! and returns per-request results in the same order.
+//! and writes per-request results in the same order.
 //!
-//! Parallelism: the batch is split into contiguous chunks, one scoped worker
-//! thread per chunk (`std::thread::scope`; the offline vendor set has no
-//! rayon, and scoped threads give the same fixed-order reduction a rayon
-//! pool would). Each worker owns a [`DecodeBufs`] so the per-layer inner
-//! loop is allocation-free (per sweep there remain O(batch) small setup
-//! allocations: hidden-state and logits vectors), and results are
-//! stitched back together in chunk order —
-//! a fixed-order reduction. Every request's forward touches only its own
-//! cache and hidden state, so the parallel step is **bit-identical** to the
-//! sequential one; the engine's golden test pins this.
+//! ## Persistent worker pool
 //!
-//! GEAR component timings accumulate in worker-thread thread-locals; the
-//! executor drains them and folds them back into the engine thread's
-//! accumulator so the Fig 3a breakdown still covers off-thread work.
+//! Parallelism comes from a long-lived `WorkerPool` owned by the
+//! executor: `GEAR_POOL_THREADS` (default: host parallelism) threads are
+//! spawned once per `BatchExecutor` and park on a condvar between sweeps.
+//! Each worker pins one [`DecodeBufs`] — norm/qkv/ctx/mlp scratch, the
+//! attention scratch with its per-segment kernel buffers, and the pooled
+//! per-slot hidden-state vectors — for its whole lifetime, so a sweep does
+//! no scratch setup and no O(batch) allocation: the old per-sweep
+//! `std::thread::scope` spawn (thread create + fresh `DecodeBufs` + fresh
+//! hidden/logits vectors per worker per sweep) is gone.
+//!
+//! Dispatch is deterministic: the batch is split into contiguous chunk
+//! descriptors in engine order, workers claim chunks by index, and results
+//! land directly in the caller's per-request slots — a fixed-order
+//! reduction by construction. Every request's forward touches only its own
+//! cache and hidden state, so which worker runs which chunk cannot change
+//! results: decode and prefill are **bit-identical** to the sequential
+//! reference for every pool size (`tests/pool_golden.rs` pins this).
+//!
+//! ## Deferred segment flush
+//!
+//! Decode sweeps append through [`LayerKv::append_deferred`]: a buffer that
+//! reaches capacity is *sealed*, not compressed inline. After the decode
+//! step, the engine collects every sealed (request, layer) pair — in fixed
+//! request-serial × layer order — and hands them to
+//! [`BatchExecutor::run_flushes`],
+//! which runs the quant/outlier/low-rank compression as one pool job per
+//! layer, in parallel across requests and layers, at a single deterministic
+//! commit point before byte accounting. The compression work that used to
+//! serialize inside one worker's layer loop now overlaps across the pool,
+//! and the decode critical path never stalls on a flush.
+//!
+//! GEAR component timings accumulate in worker-thread thread-locals; each
+//! job drains its own at completion and the executor folds them back into
+//! the engine thread's accumulator in job order, so the Fig 3a breakdown
+//! still covers off-thread work.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::kvcache::LayerKv;
+use crate::model::config::ModelConfig;
 use crate::model::transformer::{DecodeBufs, DecodeSlot, PrefillSlot};
 use crate::model::Model;
 use crate::util::timing::PhaseTimer;
@@ -31,124 +62,411 @@ use super::scheduler::ActiveRequest;
 /// How the engine executes a decode sweep.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
-    /// Whole batch on the engine thread (the reference semantics).
+    /// Whole batch on the engine thread (the reference semantics). No pool
+    /// threads are spawned.
     Sequential,
-    /// Batch chunked across scoped worker threads.
+    /// Batch chunked across the persistent worker pool.
     Batched,
 }
 
-/// Executes batched decode steps for the engine.
-pub struct BatchExecutor {
-    mode: ExecMode,
-    /// Worker-thread cap (host parallelism for `Batched`, 1 for
-    /// `Sequential`).
-    workers: usize,
-    /// Engine-thread scratch, used for inline (unthreaded) execution.
-    bufs: DecodeBufs,
-}
-
-/// Batches smaller than this run inline (still layer-major, just
-/// unthreaded): per-sweep thread spawn plus per-worker scratch setup costs
-/// tens of microseconds, which dominates small-model decode steps. 8 is
-/// where the parallel win is promised and measured (`bench_throughput
-/// -- --compare`); below it the inline path is never slower than the old
-/// per-request loop.
+/// Batches smaller than this run inline (still layer-major, just on the
+/// engine thread): waking the parked pool and dispatching descriptors costs
+/// a few microseconds, which dominates small-model decode steps. 8 is where
+/// the parallel win is promised (`bench_throughput -- --compare`); below it
+/// the inline path is never slower than the old per-request loop.
 const MIN_FANOUT: usize = 8;
 
-/// Prefill chunks thread at a much lower fan-in than decode steps: one
+/// Prefill chunks dispatch at a much lower fan-in than decode steps: one
 /// chunk is O(chunk × prompt-so-far) attention work per layer, hundreds of
-/// times a decode step, so the per-sweep spawn cost amortizes already at
-/// two concurrent prefills.
+/// times a decode step, so the dispatch cost amortizes already at two
+/// concurrent prefills.
 const MIN_PREFILL_FANOUT: usize = 2;
 
-impl BatchExecutor {
-    pub fn new(model: &Model, mode: ExecMode) -> BatchExecutor {
-        let workers = match mode {
-            ExecMode::Sequential => 1,
-            ExecMode::Batched => {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+/// Below this many sealed layers the flush runs inline: a single segment's
+/// compression is comparable to the dispatch wakeup, so fanning out one job
+/// buys nothing.
+const MIN_FLUSH_FANOUT: usize = 2;
+
+/// Live pool-worker threads across the process (observability; the
+/// lifecycle test pins that dropping an [`super::engine::Engine`] joins its
+/// workers).
+static LIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of pool worker threads currently alive in this process.
+pub fn live_pool_workers() -> usize {
+    LIVE_WORKERS.load(Ordering::SeqCst)
+}
+
+/// Resolve the pool size for [`ExecMode::Batched`]: the `GEAR_POOL_THREADS`
+/// environment variable when set to a positive integer, otherwise the host
+/// parallelism. CI runs the test suite at both 1 and 4 so the single-worker
+/// and multi-worker dispatch paths stay exercised.
+pub fn default_pool_threads() -> usize {
+    let avail = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match std::env::var("GEAR_POOL_THREADS") {
+        Ok(s) => s.trim().parse::<usize>().ok().filter(|&n| n >= 1).unwrap_or_else(avail),
+        Err(_) => avail(),
+    }
+}
+
+/// A dispatched job batch: workers call `f(job_index, &mut pinned_bufs)`
+/// for every index in `0..n_jobs`. The reference is transmuted to `'static`
+/// only while [`WorkerPool::run_jobs`] blocks — see the safety argument
+/// there.
+#[derive(Clone, Copy)]
+struct JobRef(&'static (dyn Fn(usize, &mut DecodeBufs) + Sync));
+
+/// Shared pool state: one mutex-guarded control block plus two condvars
+/// (workers park on `work_cv`; the dispatcher parks on `done_cv`).
+struct PoolCtrl {
+    /// The current job batch, present only while a dispatch is in flight.
+    job: Option<JobRef>,
+    /// Next unclaimed job index.
+    next: usize,
+    /// Total jobs in the current batch.
+    n_jobs: usize,
+    /// Jobs finished (claimed *and* run) in the current batch.
+    done: usize,
+    /// Set once by `Drop`; workers exit on observing it.
+    shutdown: bool,
+    /// First panic payload captured from a job, re-raised on the dispatcher.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct PoolShared {
+    ctrl: Mutex<PoolCtrl>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// A fixed-size persistent worker pool. Threads are spawned once, park on a
+/// condvar when idle, and each pins one [`DecodeBufs`] for its lifetime.
+/// Dropping the pool signals shutdown and joins every worker.
+struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Erase the dispatch-scoped lifetime of a job closure.
+///
+/// # Safety
+/// The returned reference is only valid while `f` is. `run_jobs` installs
+/// it under the control lock, blocks until every job has finished running,
+/// and clears it before returning — so no worker can observe the reference
+/// after the borrow it came from expires. This is the classic scoped-pool
+/// pattern (`std::thread::scope` does the same erasure internally).
+unsafe fn erase(
+    f: &(dyn Fn(usize, &mut DecodeBufs) + Sync),
+) -> &'static (dyn Fn(usize, &mut DecodeBufs) + Sync) {
+    std::mem::transmute::<
+        &(dyn Fn(usize, &mut DecodeBufs) + Sync),
+        &'static (dyn Fn(usize, &mut DecodeBufs) + Sync),
+    >(f)
+}
+
+impl WorkerPool {
+    fn new(threads: usize, cfg: ModelConfig) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            ctrl: Mutex::new(PoolCtrl {
+                job: None,
+                next: 0,
+                n_jobs: 0,
+                done: 0,
+                shutdown: false,
+                panic: None,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                // Count the worker live from the spawning thread so the
+                // observable count is already exact when `new` returns
+                // (the worker itself decrements on exit).
+                LIVE_WORKERS.fetch_add(1, Ordering::SeqCst);
+                std::thread::Builder::new()
+                    .name(format!("gear-exec-{i}"))
+                    .spawn(move || worker_main(shared, cfg))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Run `n_jobs` jobs on the pool and block until all have finished.
+    /// Workers claim indices in order; `f` must be safe to call
+    /// concurrently for distinct indices (each job owns disjoint data). A
+    /// panic inside any job is captured and re-raised here after the batch
+    /// drains, so worker threads survive poisoned sweeps.
+    fn run_jobs(&self, n_jobs: usize, f: &(dyn Fn(usize, &mut DecodeBufs) + Sync)) {
+        if n_jobs == 0 {
+            return;
+        }
+        // SAFETY: cleared below before this borrow of `f` ends; see `erase`.
+        let job = JobRef(unsafe { erase(f) });
+        {
+            let mut g = self.shared.ctrl.lock().unwrap();
+            debug_assert!(g.job.is_none(), "overlapping dispatch");
+            g.job = Some(job);
+            g.next = 0;
+            g.done = 0;
+            g.n_jobs = n_jobs;
+        }
+        self.shared.work_cv.notify_all();
+        let mut g = self.shared.ctrl.lock().unwrap();
+        while g.done < g.n_jobs {
+            g = self.shared.done_cv.wait(g).unwrap();
+        }
+        g.job = None;
+        g.next = 0;
+        g.n_jobs = 0;
+        g.done = 0;
+        let panic = g.panic.take();
+        drop(g);
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.ctrl.lock().unwrap();
+            g.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(shared: Arc<PoolShared>, cfg: ModelConfig) {
+    // The matching increment happens on the spawning thread (see
+    // `WorkerPool::new`); the guard decrements on any exit path, and
+    // `Drop for WorkerPool` joins the thread *after* that runs — so once
+    // the pool is dropped the count is exact, no polling needed.
+    struct LiveGuard;
+    impl Drop for LiveGuard {
+        fn drop(&mut self) {
+            LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    let _live = LiveGuard;
+
+    // The worker's pinned scratch: allocated once here, reused by every job
+    // this thread ever runs. Buffers inside grow to high-water marks and
+    // are fully overwritten before use, so reuse cannot change results.
+    let mut bufs = DecodeBufs::new(&cfg);
+    loop {
+        let (job, idx) = {
+            let mut g = shared.ctrl.lock().unwrap();
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                match g.job {
+                    Some(job) if g.next < g.n_jobs => {
+                        let idx = g.next;
+                        g.next += 1;
+                        break (job, idx);
+                    }
+                    _ => g = shared.work_cv.wait(g).unwrap(),
+                }
             }
         };
-        BatchExecutor { mode, workers, bufs: DecodeBufs::new(model.config()) }
+        let res = catch_unwind(AssertUnwindSafe(|| (job.0)(idx, &mut bufs)));
+        let mut g = shared.ctrl.lock().unwrap();
+        if let Err(p) = res {
+            if g.panic.is_none() {
+                g.panic = Some(p);
+            }
+        }
+        g.done += 1;
+        if g.done >= g.n_jobs {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+/// One contiguous slice of a decode sweep, handed to a pool worker: the
+/// requests to advance, the per-request logits slots to fill, and the slot
+/// for the worker's component timings.
+struct DecodeChunk<'a, 'b> {
+    reqs: &'a mut [&'b mut ActiveRequest],
+    outs: &'a mut [Vec<f32>],
+    timer: &'a mut PhaseTimer,
+}
+
+/// Executes batched decode steps, prefill rounds, and deferred segment
+/// flushes for the engine.
+pub struct BatchExecutor {
+    mode: ExecMode,
+    /// Pool size (1 for `Sequential`, which never dispatches).
+    workers: usize,
+    /// The persistent pool; `None` in `Sequential` mode.
+    pool: Option<WorkerPool>,
+    /// Engine-thread scratch, used for inline (undispatched) execution.
+    bufs: DecodeBufs,
+    /// Per-job timing slots, reused across dispatches; folded back into
+    /// the engine thread's accumulator in job order after each batch.
+    timers: Vec<PhaseTimer>,
+}
+
+impl BatchExecutor {
+    /// `threads` overrides the pool size for `Batched` mode; `None` falls
+    /// back to [`default_pool_threads`] (`GEAR_POOL_THREADS` / host
+    /// parallelism). `Sequential` spawns no threads.
+    pub fn new(model: &Model, mode: ExecMode, threads: Option<usize>) -> BatchExecutor {
+        let workers = match mode {
+            ExecMode::Sequential => 1,
+            ExecMode::Batched => threads.unwrap_or_else(default_pool_threads).max(1),
+        };
+        let pool = match mode {
+            ExecMode::Sequential => None,
+            ExecMode::Batched => Some(WorkerPool::new(workers, *model.config())),
+        };
+        BatchExecutor {
+            mode,
+            workers,
+            pool,
+            bufs: DecodeBufs::new(model.config()),
+            timers: Vec::new(),
+        }
     }
 
     pub fn mode(&self) -> ExecMode {
         self.mode
     }
 
-    /// Advance every request in `batch` one decode step; logits come back
-    /// in `batch` order regardless of which worker produced them.
-    pub fn run(&mut self, model: &Model, batch: &mut [&mut ActiveRequest]) -> Vec<Vec<f32>> {
+    /// Pool size this executor dispatches across.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Advance every request in `batch` one decode step; logits land in
+    /// `out` in `batch` order regardless of which worker produced them.
+    /// `out` is resized to the batch and its inner vectors are reused
+    /// across sweeps (the engine keeps one pooled instance), so a steady
+    /// decode sweep performs no per-request allocation.
+    pub fn run_into(
+        &mut self,
+        model: &Model,
+        batch: &mut [&mut ActiveRequest],
+        out: &mut Vec<Vec<f32>>,
+    ) {
         let b = batch.len();
+        out.resize_with(b, Vec::new);
         if b == 0 {
-            return Vec::new();
+            return;
         }
-        let workers = self.workers.min(b);
-        if workers <= 1 || b < MIN_FANOUT {
-            let mut slots: Vec<DecodeSlot> = batch
+        let pool = match &self.pool {
+            Some(pool) if b >= MIN_FANOUT => pool,
+            _ => {
+                let mut slots: Vec<DecodeSlot> = batch
+                    .iter_mut()
+                    .map(|a| DecodeSlot { token: a.next_token, pos: a.pos, cache: &mut a.cache })
+                    .collect();
+                model.decode_batch_into(&mut slots, &mut self.bufs, out);
+                return;
+            }
+        };
+
+        // Contiguous chunk descriptors in batch order; workers claim them
+        // by index and write into disjoint output slices, so the reduction
+        // order is fixed by construction.
+        let chunk = b.div_ceil(self.workers.min(b));
+        let n_chunks = b.div_ceil(chunk);
+        self.timers.clear();
+        self.timers.resize_with(n_chunks, PhaseTimer::new);
+        let tasks: Vec<Mutex<Option<DecodeChunk>>> = batch
+            .chunks_mut(chunk)
+            .zip(out.chunks_mut(chunk))
+            .zip(self.timers.iter_mut())
+            .map(|((reqs, outs), timer)| Mutex::new(Some(DecodeChunk { reqs, outs, timer })))
+            .collect();
+        pool.run_jobs(tasks.len(), &|i, bufs| {
+            let DecodeChunk { reqs, outs, timer } =
+                tasks[i].lock().unwrap().take().expect("decode chunk claimed twice");
+            let mut slots: Vec<DecodeSlot> = reqs
                 .iter_mut()
                 .map(|a| DecodeSlot { token: a.next_token, pos: a.pos, cache: &mut a.cache })
                 .collect();
-            return model.decode_batch_with(&mut slots, &mut self.bufs);
-        }
-
-        let chunk = b.div_ceil(workers);
-        let n_chunks = b.div_ceil(chunk);
-        let mut partials: Vec<(Vec<Vec<f32>>, PhaseTimer)> =
-            (0..n_chunks).map(|_| (Vec::new(), PhaseTimer::new())).collect();
-        std::thread::scope(|s| {
-            for (reqs, out) in batch.chunks_mut(chunk).zip(partials.iter_mut()) {
-                s.spawn(move || {
-                    let mut bufs = DecodeBufs::new(model.config());
-                    let mut slots: Vec<DecodeSlot> = reqs
-                        .iter_mut()
-                        .map(|a| DecodeSlot {
-                            token: a.next_token,
-                            pos: a.pos,
-                            cache: &mut a.cache,
-                        })
-                        .collect();
-                    let logits = model.decode_batch_with(&mut slots, &mut bufs);
-                    *out = (logits, crate::gear::take_phase_timings());
-                });
-            }
+            model.decode_batch_into(&mut slots, bufs, outs);
+            *timer = crate::gear::take_phase_timings();
         });
-
-        // Fixed-order reduction: chunk order == batch order.
-        let mut logits = Vec::with_capacity(b);
-        for (part, phases) in partials {
-            logits.extend(part);
-            crate::gear::merge_phase_timings(&phases);
+        for t in &self.timers {
+            crate::gear::merge_phase_timings(t);
         }
-        debug_assert_eq!(logits.len(), b);
-        logits
     }
 
     /// Advance every slot's prefill by one chunk. Results land in each
     /// slot's [`crate::model::PrefillState`], so there is nothing to
-    /// reduce; slots are split across scoped workers exactly like decode
-    /// chunks. Every slot's chunk touches only its own state, so the
-    /// threaded round is bit-identical to the inline one. (No GEAR
-    /// component work happens here — compression runs at commit time on the
-    /// engine thread — so no timing fold-back is needed.)
+    /// reduce; slots are split into contiguous chunk descriptors exactly
+    /// like decode. Every slot's chunk touches only its own state, so the
+    /// dispatched round is bit-identical to the inline one. (No GEAR
+    /// component work happens in the chunk jobs — chunks accumulate exact
+    /// f32 K/V, and the prompt compresses later in `Model::commit_prefill`
+    /// on the engine thread — so there are no timings to fold back.)
     pub fn run_prefill(&mut self, model: &Model, slots: &mut [PrefillSlot<'_>]) {
         let b = slots.len();
         if b == 0 {
             return;
         }
-        let workers = self.workers.min(b);
-        if workers <= 1 || b < MIN_PREFILL_FANOUT {
-            model.prefill_chunk_batch(slots, &mut self.bufs);
+        let pool = match &self.pool {
+            Some(pool) if b >= MIN_PREFILL_FANOUT => pool,
+            _ => {
+                model.prefill_chunk_batch(slots, &mut self.bufs);
+                return;
+            }
+        };
+        let chunk = b.div_ceil(self.workers.min(b));
+        let tasks: Vec<Mutex<Option<&mut [PrefillSlot]>>> =
+            slots.chunks_mut(chunk).map(|part| Mutex::new(Some(part))).collect();
+        pool.run_jobs(tasks.len(), &|i, bufs| {
+            let part = tasks[i].lock().unwrap().take().expect("prefill chunk claimed twice");
+            model.prefill_chunk_batch(part, bufs);
+        });
+    }
+
+    /// Run the deferred compression of every sealed (request, layer) pair
+    /// the decode step produced — one pool job per layer, in parallel
+    /// across requests and layers. The caller passes the layers in fixed
+    /// engine order (request serial × layer index); each flush touches only
+    /// its own layer, so execution order cannot change results, and the
+    /// engine calls this at one deterministic commit point before byte
+    /// accounting. Component timings from each job fold back in job order.
+    pub fn run_flushes(&mut self, layers: &mut [&mut dyn LayerKv]) {
+        let n = layers.len();
+        if n == 0 {
             return;
         }
-        let chunk = b.div_ceil(workers);
-        std::thread::scope(|s| {
-            for part in slots.chunks_mut(chunk) {
-                s.spawn(move || {
-                    let mut bufs = DecodeBufs::new(model.config());
-                    model.prefill_chunk_batch(part, &mut bufs);
-                });
+        let pool = match &self.pool {
+            Some(pool) if n >= MIN_FLUSH_FANOUT => pool,
+            _ => {
+                for l in layers.iter_mut() {
+                    l.run_flush();
+                }
+                return;
             }
+        };
+        self.timers.clear();
+        self.timers.resize_with(n, PhaseTimer::new);
+        let tasks: Vec<Mutex<Option<(&mut dyn LayerKv, &mut PhaseTimer)>>> = layers
+            .iter_mut()
+            .zip(self.timers.iter_mut())
+            .map(|(l, t)| Mutex::new(Some((&mut **l, t))))
+            .collect();
+        pool.run_jobs(tasks.len(), &|i, _bufs| {
+            let (layer, timer) =
+                tasks[i].lock().unwrap().take().expect("flush job claimed twice");
+            layer.run_flush();
+            *timer = crate::gear::take_phase_timings();
         });
+        for t in &self.timers {
+            crate::gear::merge_phase_timings(t);
+        }
     }
 }

@@ -28,6 +28,17 @@ pub struct EngineMetrics {
     pub phases: PhaseTimer,
     /// Largest number of simultaneously-active requests observed.
     pub max_concurrency: usize,
+    /// Per-sweep decode step latency (executor decode + flush commit point
+    /// + sampling/settle), one sample per sweep that decoded at least one
+    /// request. Summarize with [`Self::step_latency_pct`].
+    pub step_latencies: Vec<Duration>,
+    /// Deferred segment-compression jobs run at flush commit points (one
+    /// per sealed request-layer).
+    pub flush_jobs: usize,
+    /// Wall time decode sweeps spent blocked on flush commit points — the
+    /// residual compression stall after the pool's overlap; inline-append
+    /// compression would instead serialize this inside the decode step.
+    pub flush_stall: Duration,
 }
 
 impl EngineMetrics {
@@ -41,6 +52,29 @@ impl EngineMetrics {
     pub fn decode_throughput(&self) -> f64 {
         let secs = self.wall.saturating_sub(self.prefill).as_secs_f64();
         self.generated_tokens as f64 / secs.max(1e-9)
+    }
+
+    /// Step-latency percentile over the recorded decode sweeps
+    /// (nearest-rank on the sorted samples; `q` in `[0, 1]`). Zero when no
+    /// sweep decoded.
+    pub fn step_latency_pct(&self, q: f64) -> Duration {
+        if self.step_latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut v = self.step_latencies.clone();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        v[idx]
+    }
+
+    /// Median per-sweep decode step latency.
+    pub fn step_p50(&self) -> Duration {
+        self.step_latency_pct(0.50)
+    }
+
+    /// Tail (p99) per-sweep decode step latency.
+    pub fn step_p99(&self) -> Duration {
+        self.step_latency_pct(0.99)
     }
 
     /// Fig 3a rows: (component, seconds, fraction of total wall).
@@ -70,6 +104,21 @@ mod tests {
             ..Default::default()
         };
         assert!((m.throughput() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_latency_percentiles() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.step_p50(), Duration::ZERO);
+        assert_eq!(m.step_p99(), Duration::ZERO);
+        // Unsorted on purpose: percentiles sort a copy.
+        for ms in [40u64, 10, 30, 20, 50] {
+            m.step_latencies.push(Duration::from_millis(ms));
+        }
+        assert_eq!(m.step_p50(), Duration::from_millis(30));
+        assert_eq!(m.step_p99(), Duration::from_millis(50));
+        assert_eq!(m.step_latency_pct(0.0), Duration::from_millis(10));
+        assert_eq!(m.step_latency_pct(1.0), Duration::from_millis(50));
     }
 
     #[test]

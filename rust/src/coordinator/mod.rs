@@ -10,20 +10,31 @@
 //!   enters the active set in `ReqPhase::Prefill` and its prompt is
 //!   processed in fixed-size chunks across sweeps. Deterministic and
 //!   sequential by construction.
-//! * [`executor`] — the execution half, two entry points per sweep: one
+//! * [`executor`] — the execution half, built on a **persistent worker
+//!   pool** spawned once per engine (`GEAR_POOL_THREADS`, default host
+//!   parallelism); workers park on a condvar between sweeps and pin their
+//!   scratch (`DecodeBufs`, attention + per-segment kernel buffers, pooled
+//!   hidden states) for their lifetime. Three entry points per sweep: one
 //!   layer-major batched round of prefill chunks
-//!   ([`executor::BatchExecutor::run_prefill`]) and one layer-major batched
-//!   decode step ([`executor::BatchExecutor::run`]) for the whole active
-//!   set, chunked across scoped worker threads with a fixed-order
-//!   reduction. Bit-identical to sequential execution;
+//!   ([`executor::BatchExecutor::run_prefill`]), one layer-major batched
+//!   decode step ([`executor::BatchExecutor::run_into`]) for the whole
+//!   active set, and the deferred segment flushes the decode step sealed
+//!   ([`executor::BatchExecutor::run_flushes`]) — each dispatched as
+//!   contiguous chunk descriptors with a fixed-order reduction.
+//!   Bit-identical to sequential execution for every pool size;
 //!   [`executor::ExecMode`] selects between them.
 //! * [`engine`] — the composition: **emit → reserve → prefill chunks →
-//!   decode batch → commit** sweeps over a byte-budgeted cache pool. The
-//!   reserve phase pre-books each request's worst-case byte growth for the
-//!   sweep (exact per-method step bounds from `gear::size`, plus the
-//!   in-flight chunk bytes of active prefills), so real cache bytes never
-//!   overshoot the budget mid-sweep; the commit phase folds unused headroom
-//!   back.
+//!   decode batch → flush → commit** sweeps over a byte-budgeted cache
+//!   pool. The reserve phase pre-books each request's worst-case byte
+//!   growth for the sweep (exact per-method step bounds from `gear::size`,
+//!   plus the in-flight chunk bytes of active prefills), so real cache
+//!   bytes never overshoot the budget mid-sweep. Decode appends only
+//!   *seal* full streaming buffers; the flush phase compresses every
+//!   sealed (request, layer) pair on the pool at one deterministic commit
+//!   point before byte accounting — compression overlaps across the pool
+//!   instead of stalling one worker's layer loop, with reservations, peak
+//!   bytes, and token streams unchanged. The commit phase folds unused
+//!   headroom back.
 //! * [`request`] — generation requests, results, lifecycle states.
 //! * [`metrics`] — latency/throughput counters + the GEAR component time
 //!   breakdown (Fig 3a), including work done on executor workers.
@@ -34,8 +45,9 @@
 //!
 //! Later PRs extend the execution plane without touching policy:
 //! shard-per-layer execution replaces the chunk split inside
-//! [`executor::BatchExecutor`], and a persistent worker pool replaces the
-//! per-sweep scoped threads.
+//! [`executor::BatchExecutor`], and flushes could overlap the *next*
+//! sweep's prefill round (today they only overlap each other at the
+//! commit point).
 
 pub mod device_model;
 pub mod engine;

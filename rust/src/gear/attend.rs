@@ -12,7 +12,8 @@
 //! down-projection `Bᵀq` each live in the scratch and are computed once per
 //! segment per call — the batch executor hands every worker one scratch, so
 //! no allocation happens in the sweep hot loop. The legacy `*_into` entry
-//! points allocate a throwaway scratch for callers that don't batch.
+//! points (tests, analysis tools, benches) share one lazily-initialized
+//! per-thread scratch instead of allocating a throwaway per call.
 //!
 //! Layout convention: multi-head scores/probabilities are stored row-major
 //! per token: `s[t * n_heads + h]`.
@@ -43,14 +44,25 @@ fn prep(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
     &mut buf[..n]
 }
 
+std::thread_local! {
+    /// Shared scratch for the legacy non-`_scratch` entry points: one
+    /// lazily-initialized per-thread instance (buffers grow to the largest
+    /// segment seen) instead of a throwaway allocation per call. The hot
+    /// path never touches this — executor workers pass their pinned
+    /// scratch to the `_scratch` forms directly.
+    static LEGACY_SCRATCH: std::cell::RefCell<SegScratch> =
+        std::cell::RefCell::new(SegScratch::default());
+}
+
 impl CompressedMatrix {
     /// Accumulate attention scores of query `q` (d-dim, heads concatenated)
     /// against every stored token: `out[t*H + h] += scale · q_h · K[t]_h`.
     ///
     /// `out` must hold `rows * n_heads` values (pre-zeroed by the caller).
     pub fn scores_into(&self, q: &[f32], n_heads: usize, scale: f32, out: &mut [f32]) {
-        let mut scratch = SegScratch::default();
-        self.scores_into_scratch(q, n_heads, scale, &mut scratch, out);
+        LEGACY_SCRATCH.with(|s| {
+            self.scores_into_scratch(q, n_heads, scale, &mut s.borrow_mut(), out)
+        });
     }
 
     /// Scratch-reusing form of [`Self::scores_into`] — the batched decode
@@ -137,8 +149,9 @@ impl CompressedMatrix {
     /// Accumulate the attention-weighted value sum:
     /// `out[h*dh + c] += Σ_t p[t*H + h] · V[t]_{h,c}`.
     pub fn weighted_sum_into(&self, probs: &[f32], n_heads: usize, out: &mut [f32]) {
-        let mut scratch = SegScratch::default();
-        self.weighted_sum_into_scratch(probs, n_heads, &mut scratch, out);
+        LEGACY_SCRATCH.with(|s| {
+            self.weighted_sum_into_scratch(probs, n_heads, &mut s.borrow_mut(), out)
+        });
     }
 
     /// Scratch-reusing form of [`Self::weighted_sum_into`].

@@ -7,6 +7,15 @@
 //! appended tokens are compressed as one chunk at rank `r_g` (the paper uses
 //! r_p = 4, r_g = 2). Attention runs fused against every segment (see
 //! `gear::attend`) and dense against the buffer.
+//!
+//! Two flush cadences share one implementation: [`LayerKv::append`]
+//! compresses inline the moment the buffer fills (standalone decode loops,
+//! tests), while [`LayerKv::append_deferred`] only *seals* the full buffer
+//! and leaves the compression to [`LayerKv::run_flush`] — the engine runs
+//! those flushes in parallel on the executor pool at a fixed commit point
+//! after the decode step, keeping Algorithm 2's quant/outlier/low-rank
+//! work off the decode critical path. Either way the same rows compress
+//! into the same segment, so segment layout and bytes are identical.
 
 use crate::gear::compose::{compress, CompressedMatrix, GearConfig, Method};
 use crate::gear::size::SizeBreakdown;
@@ -34,6 +43,9 @@ pub struct GearLayerKv {
     buf_n: usize,
     /// Total tokens across segments (excluding buffer).
     seg_tokens: usize,
+    /// Buffer reached capacity under [`LayerKv::append_deferred`] and
+    /// awaits its commit-point flush (see `run_flush`).
+    sealed: bool,
 }
 
 impl GearLayerKv {
@@ -59,6 +71,7 @@ impl GearLayerKv {
             buf_v: Vec::new(),
             buf_n: 0,
             seg_tokens: 0,
+            sealed: false,
         }
     }
 
@@ -86,8 +99,9 @@ impl GearLayerKv {
     }
 
     /// Force-compress whatever is in the buffer (used by tests/analysis;
-    /// the engine lets the cadence do it).
+    /// the engine lets the cadence do it). Clears any deferred-flush seal.
     pub fn flush_buffer(&mut self) {
+        self.sealed = false;
         if self.buf_n == 0 {
             return;
         }
@@ -114,12 +128,32 @@ impl LayerKv for GearLayerKv {
     }
 
     fn append(&mut self, k: &[f32], v: &[f32]) {
+        // Inline-flush semantics: seal-and-flush in one call, so the
+        // standalone cadence (and its tests) are unchanged.
+        self.append_deferred(k, v);
+        self.run_flush();
+    }
+
+    fn append_deferred(&mut self, k: &[f32], v: &[f32]) {
+        // Self-heal: a seal left over from a caller that skipped the
+        // commit point compresses now, before the new row lands.
+        self.run_flush();
         assert_eq!(k.len(), self.d);
         assert_eq!(v.len(), self.d);
         self.buf_k.extend(k.iter().map(|&x| to_f16_precision(x)));
         self.buf_v.extend(v.iter().map(|&x| to_f16_precision(x)));
         self.buf_n += 1;
         if self.buf_n >= self.buffer_cap {
+            self.sealed = true;
+        }
+    }
+
+    fn flush_pending(&self) -> bool {
+        self.sealed
+    }
+
+    fn run_flush(&mut self) {
+        if self.sealed {
             self.flush_buffer();
         }
     }
@@ -201,19 +235,27 @@ impl LayerKv for GearLayerKv {
     fn step_growth_bound(&self) -> usize {
         // The appended token lands in the FP16 buffer (a K and a V row).
         let append = 4 * self.d;
-        if self.buf_n + 1 < self.buffer_cap {
-            return append;
-        }
-        // The append fills the buffer and triggers a flush: the whole
-        // buffer becomes one compressed segment. The analytic size model is
-        // exact for every method (`gear::size` pins predict == measured),
-        // but we stay conservative and do not credit back the freed buffer
-        // rows — the bound only has to never under-estimate.
         let m = self.method_with_rank(self.decode_rank);
-        let seg = crate::gear::size::predict(m, true, self.buffer_cap, self.d, self.n_heads)
-            .total()
-            + crate::gear::size::predict(m, false, self.buffer_cap, self.d, self.n_heads).total();
-        append + seg
+        let seg_cost = |rows: usize| {
+            crate::gear::size::predict(m, true, rows, self.d, self.n_heads).total()
+                + crate::gear::size::predict(m, false, rows, self.d, self.n_heads).total()
+        };
+        let mut bound = append;
+        // A deferred seal still pending from the previous sweep flushes
+        // before or with this step (commit point or append self-heal).
+        if self.sealed {
+            bound += seg_cost(self.buf_n);
+        }
+        // Will this append fill (and this sweep flush) the buffer? After a
+        // pending flush the buffer restarts empty. The analytic size model
+        // is exact for every method (`gear::size` pins predict ==
+        // measured), but we stay conservative and do not credit back the
+        // freed buffer rows — the bound only has to never under-estimate.
+        let buf_after = if self.sealed { 0 } else { self.buf_n };
+        if buf_after + 1 >= self.buffer_cap {
+            bound += seg_cost(self.buffer_cap);
+        }
+        bound
     }
 
     fn breakdown(&self) -> SizeBreakdown {
@@ -371,6 +413,113 @@ mod tests {
                 assert!(
                     c.nbytes() <= before + bound,
                     "step {step} {method:?}: {} > {before} + {bound}",
+                    c.nbytes()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deferred_append_seals_without_compressing() {
+        let mut c = GearLayerKv::new(16, 2, Method::gear_default(4), 4, 4, 2);
+        let mut rng = Rng::new(96);
+        let (k, v) = fill(&mut rng, 1, 16);
+        for i in 1..=4 {
+            assert!(!c.flush_pending());
+            c.append_deferred(k.row(0), v.row(0));
+            assert_eq!(c.len(), i);
+        }
+        // Buffer full: sealed, not compressed — bytes are still all FP16.
+        assert!(c.flush_pending());
+        assert_eq!(c.n_segments(), 0);
+        assert_eq!(c.buffered_tokens(), 4);
+        assert_eq!(c.nbytes(), 2 * 4 * 16 * 2);
+        c.run_flush();
+        assert!(!c.flush_pending());
+        assert_eq!(c.n_segments(), 1);
+        assert_eq!(c.buffered_tokens(), 0);
+        assert_eq!(c.len(), 4);
+        // Idempotent when nothing is pending.
+        let bytes = c.nbytes();
+        c.run_flush();
+        assert_eq!(c.nbytes(), bytes);
+    }
+
+    #[test]
+    fn deferred_and_inline_cadence_produce_identical_bytes() {
+        // Same rows through both cadences -> same segments, same bytes:
+        // the engine's deferred path changes *when* compression runs, not
+        // what it produces.
+        let mut rng = Rng::new(97);
+        let rows: Vec<(Tensor, Tensor)> = (0..9).map(|_| fill(&mut rng, 1, 16)).collect();
+        let run = |deferred: bool| {
+            let mut c = GearLayerKv::new(16, 2, Method::gear_default(4), 4, 4, 2);
+            for (k, v) in &rows {
+                if deferred {
+                    c.append_deferred(k.row(0), v.row(0));
+                    c.run_flush(); // the engine's commit point
+                } else {
+                    c.append(k.row(0), v.row(0));
+                }
+            }
+            (c.n_segments(), c.buffered_tokens(), c.nbytes(), c.breakdown().total())
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn sealed_buffer_self_heals_on_next_append() {
+        // A caller that never runs the commit point (standalone decode
+        // loop via append_deferred) must not grow the buffer past its
+        // capacity: the pending flush runs at the next append.
+        let mut c = GearLayerKv::new(16, 2, Method::gear_default(4), 4, 4, 2);
+        let mut rng = Rng::new(98);
+        let (k, v) = fill(&mut rng, 1, 16);
+        for _ in 0..4 {
+            c.append_deferred(k.row(0), v.row(0));
+        }
+        assert!(c.flush_pending());
+        c.append_deferred(k.row(0), v.row(0));
+        assert_eq!(c.n_segments(), 1);
+        assert_eq!(c.buffered_tokens(), 1);
+        assert_eq!(c.len(), 5);
+    }
+
+    #[test]
+    fn step_growth_bound_covers_deferred_sweeps() {
+        // The engine reserves the bound before the decode step, then runs
+        // append_deferred + commit-point flush; growth across that whole
+        // sweep must stay within the bound — including with a stale seal
+        // pending (standalone callers) and with cap-1 buffers that seal
+        // every append.
+        let mut rng = Rng::new(99);
+        for (method, buffer, decode_rank) in [
+            (Method::gear_default(2), 4, 2),
+            (Method::gear_l_default(4), 2, 4),
+            (Method::gear_default(4), 1, 2),
+        ] {
+            let mut c = GearLayerKv::new(32, 4, method, buffer, 4, decode_rank);
+            let (k, v) = fill(&mut rng, 1, 32);
+            // Engine cadence: reserve -> append -> flush at commit.
+            for step in 0..13 {
+                let before = c.nbytes();
+                let bound = c.step_growth_bound();
+                c.append_deferred(k.row(0), v.row(0));
+                c.run_flush();
+                assert!(
+                    c.nbytes() <= before + bound,
+                    "engine cadence step {step} {method:?}: {} > {before} + {bound}",
+                    c.nbytes()
+                );
+            }
+            // No-commit cadence: the seal heals inside the next append.
+            for step in 0..13 {
+                let before = c.nbytes();
+                let bound = c.step_growth_bound();
+                c.append_deferred(k.row(0), v.row(0));
+                assert!(
+                    c.nbytes() <= before + bound,
+                    "self-heal cadence step {step} {method:?}: {} > {before} + {bound}",
                     c.nbytes()
                 );
             }

@@ -42,6 +42,30 @@ pub trait LayerKv: Send {
     /// Append one decoded token's k and v vectors (d each).
     fn append(&mut self, k: &[f32], v: &[f32]);
 
+    /// Append like [`Self::append`], but *defer* any compression the
+    /// append would trigger: a streaming buffer that reaches capacity is
+    /// sealed and reported through [`Self::flush_pending`] instead of
+    /// compressing inline. The engine's decode sweep appends through this
+    /// so every sealed segment can compress in parallel on the executor
+    /// pool at one deterministic commit point (before byte accounting). A
+    /// sealed buffer left behind by a caller that never runs the commit
+    /// point is flushed at the next append — self-healing — so standalone
+    /// decode loops stay correct. Caches with no deferred work (FP16
+    /// dense, H₂O) treat this exactly as [`Self::append`].
+    fn append_deferred(&mut self, k: &[f32], v: &[f32]) {
+        self.append(k, v);
+    }
+
+    /// Whether a sealed buffer is waiting for [`Self::run_flush`].
+    fn flush_pending(&self) -> bool {
+        false
+    }
+
+    /// Run any deferred compression sealed by [`Self::append_deferred`]
+    /// (no-op when nothing is pending). Touches only this layer, so the
+    /// executor may run distinct layers' flushes concurrently.
+    fn run_flush(&mut self) {}
+
     /// Number of tokens currently represented (dropped tokens excluded).
     fn len(&self) -> usize;
 

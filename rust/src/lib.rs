@@ -19,11 +19,13 @@
 //!   (`Model::decode_batch`) with bit-identical results.
 //! * [`coordinator`] — the serving engine, split into two planes: a
 //!   deterministic FCFS *scheduler* (admission, budget, preemption) and a
-//!   parallel *batch executor* with two layer-major entry points per
-//!   sweep — a round of prefill chunks and a decode step for the whole
-//!   active set — so long prompts never stall the batch. The split is the
-//!   scaling seam: multi-device sharding extends the executor without
-//!   touching policy.
+//!   *batch executor* running a persistent worker pool with three
+//!   layer-major entry points per sweep — a round of prefill chunks, a
+//!   decode step for the whole active set, and the deferred segment
+//!   flushes the decode step sealed — so long prompts never stall the
+//!   batch and compression stays off the decode critical path. The split
+//!   is the scaling seam: multi-device sharding extends the executor
+//!   without touching policy.
 //! * [`runtime`] — PJRT (XLA) executable loading for the AOT-compiled JAX
 //!   graphs in `artifacts/` (Python never runs at serve time). Gated
 //!   behind the `xla` cargo feature (needs the vendored `xla` crate).

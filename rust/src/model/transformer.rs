@@ -17,10 +17,19 @@
 //! a single call, traversing the weights **layer-major** (layer `l` for
 //! every request before layer `l+1`) so each block's matrices stay hot in
 //! cache across the batch, with all intermediate buffers in a reusable
-//! [`DecodeBufs`]. Per request it performs *exactly* the same floating-point
-//! operations in the same order as [`Model::decode_step`] — both funnel
-//! through the same `layer_forward` — so batched decoding is bit-identical
-//! to the one-request-at-a-time path (the engine's golden test pins this).
+//! [`DecodeBufs`] — including the per-slot hidden-state pool, so a steady
+//! decode step allocates nothing ([`Model::decode_batch_into`] also writes
+//! logits into caller-pooled vectors). Per request it performs *exactly*
+//! the same floating-point operations in the same order as
+//! [`Model::decode_step`] — both funnel through the same `layer_forward` —
+//! so batched decoding is bit-identical to the one-request-at-a-time path
+//! (the engine's golden test pins this).
+//!
+//! Decode appends go through [`LayerKv::append_deferred`]: a streaming
+//! buffer that reaches capacity is sealed for the engine's commit-point
+//! flush (run in parallel on the executor pool) instead of compressing
+//! inline in the layer loop. Standalone decode loops are unaffected — a
+//! sealed buffer self-heals at the next append.
 
 use crate::kvcache::{AttendScratch, LayerKv, RequestCache};
 use crate::tensor::ops::{self, dot, gelu, layernorm, matmul, softmax_inplace};
@@ -90,6 +99,21 @@ impl Model {
             }
         }
         x
+    }
+
+    /// Embed a single `token` at `pos` into `out` (`d_model` long) without
+    /// allocating — the decode path's per-slot hidden states are pooled in
+    /// [`DecodeBufs`]. Value-identical to `embed(&[token], pos)`.
+    fn embed_token_into(&self, token: u32, pos: usize, out: &mut [f32]) {
+        let c = self.config();
+        let t = token as usize;
+        assert!(t < c.vocab, "token id {t} out of vocab");
+        assert!(pos < c.max_seq, "position {pos} exceeds max_seq {}", c.max_seq);
+        let emb = self.weights.emb.row(t);
+        let pe = self.weights.pos.row(pos);
+        for (o, (e, p)) in out.iter_mut().zip(emb.iter().zip(pe)) {
+            *o = e + p;
+        }
     }
 
     /// Prefill the prompt, populating `cache`, and return last-position
@@ -271,7 +295,8 @@ impl Model {
         cache: &mut RequestCache,
         bufs: &mut DecodeBufs,
     ) -> Vec<f32> {
-        let mut x = self.embed(&[token], pos).into_data();
+        let mut x = vec![0.0f32; self.config().d_model];
+        self.embed_token_into(token, pos, &mut x);
         for l in 0..self.weights.blocks.len() {
             self.layer_forward(l, &mut x, cache.layers[l].as_mut(), bufs);
         }
@@ -284,29 +309,60 @@ impl Model {
     /// before layer `l+1`, so each block's (transposed) weight matrices are
     /// streamed once per step for the whole batch instead of once per
     /// request. Logits are returned in slot order. Allocates scratch; the
-    /// executor uses [`Self::decode_batch_with`] with a per-worker buffer.
+    /// executor uses [`Self::decode_batch_into`] with per-worker pinned
+    /// buffers and pooled outputs.
     pub fn decode_batch(&self, steps: &mut [DecodeSlot]) -> Vec<Vec<f32>> {
         let mut bufs = DecodeBufs::new(self.config());
         self.decode_batch_with(steps, &mut bufs)
     }
 
     /// Batched decode step with caller-owned scratch. Per request this is
-    /// op-for-op identical to [`Self::decode_step_with`].
+    /// op-for-op identical to [`Self::decode_step_with`]. Allocates the
+    /// logits vectors; the executor pool uses [`Self::decode_batch_into`]
+    /// with pooled outputs.
     pub fn decode_batch_with(
         &self,
         steps: &mut [DecodeSlot],
         bufs: &mut DecodeBufs,
     ) -> Vec<Vec<f32>> {
-        let mut xs: Vec<Vec<f32>> = steps
-            .iter()
-            .map(|s| self.embed(&[s.token], s.pos).into_data())
-            .collect();
+        let mut out: Vec<Vec<f32>> = (0..steps.len()).map(|_| Vec::new()).collect();
+        self.decode_batch_into(steps, bufs, &mut out);
+        out
+    }
+
+    /// Batched decode step writing logits into caller-pooled vectors: each
+    /// `out[i]` is resized to the vocab and overwritten in place, so a
+    /// caller that reuses `out` (and `bufs`, whose per-slot hidden-state
+    /// pool this fills) across sweeps performs no per-sweep allocation
+    /// beyond first-use growth. `out` must have exactly one slot per step.
+    pub fn decode_batch_into(
+        &self,
+        steps: &mut [DecodeSlot],
+        bufs: &mut DecodeBufs,
+        out: &mut [Vec<f32>],
+    ) {
+        let b = steps.len();
+        assert_eq!(out.len(), b, "one logits slot per decode slot");
+        let d = self.config().d_model;
+        if bufs.hidden.len() < b {
+            bufs.hidden.resize_with(b, Vec::new);
+        }
+        // Take the pool out of `bufs` so the layer loop can borrow `bufs`
+        // mutably alongside the per-slot hidden states.
+        let mut hidden = std::mem::take(&mut bufs.hidden);
+        for (x, s) in hidden.iter_mut().zip(steps.iter()) {
+            x.resize(d, 0.0);
+            self.embed_token_into(s.token, s.pos, x);
+        }
         for l in 0..self.weights.blocks.len() {
-            for (x, slot) in xs.iter_mut().zip(steps.iter_mut()) {
+            for (x, slot) in hidden.iter_mut().zip(steps.iter_mut()) {
                 self.layer_forward(l, x, slot.cache.layers[l].as_mut(), bufs);
             }
         }
-        xs.iter().map(|x| self.finish_logits(x, bufs)).collect()
+        for (x, o) in hidden.iter().zip(out.iter_mut()) {
+            self.finish_logits_into(x, bufs, o);
+        }
+        bufs.hidden = hidden;
     }
 
     /// One transformer block over a single request's hidden state `x`
@@ -333,7 +389,9 @@ impl Model {
         gemv_t(&bt.wk_t, &bufs.norm, ks);
         gemv_t(&bt.wv_t, &bufs.norm, vs);
 
-        layer.append(ks, vs);
+        // Deferred-flush append: a buffer this fills is sealed for the
+        // engine's commit-point flush instead of compressing inline here.
+        layer.append_deferred(ks, vs);
         layer.attend_scratch(qs, nh, &mut bufs.attend, &mut bufs.ctx);
 
         // x += ctx @ Wo
@@ -355,8 +413,17 @@ impl Model {
 
     /// Final LayerNorm + LM head over a finished hidden state.
     fn finish_logits(&self, x: &[f32], bufs: &mut DecodeBufs) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.finish_logits_into(x, bufs, &mut out);
+        out
+    }
+
+    /// [`Self::finish_logits`] into a caller-pooled vector (resized to the
+    /// vocab, fully overwritten).
+    fn finish_logits_into(&self, x: &[f32], bufs: &mut DecodeBufs, out: &mut Vec<f32>) {
         layernorm(x, &self.weights.lnf_g, &self.weights.lnf_b, 1e-5, &mut bufs.norm);
-        self.lm_head(&bufs.norm)
+        out.resize(self.config().vocab, 0.0);
+        gemv_t(&self.head_t, &bufs.norm, out);
     }
 
     fn lm_head(&self, x: &[f32]) -> Vec<f32> {
@@ -452,9 +519,11 @@ impl PrefillState {
 }
 
 /// Reusable scratch for decode steps: every intermediate the per-layer
-/// forward needs, plus the cache-attention scratch. One per executor
-/// worker; contents are fully overwritten before use, so sharing one
-/// instance across requests cannot change results.
+/// forward needs, the cache-attention scratch, and the per-slot
+/// hidden-state pool for batched steps. One per executor pool worker,
+/// pinned for the worker's lifetime; contents are fully overwritten before
+/// use, so sharing one instance across requests and sweeps cannot change
+/// results.
 #[derive(Debug, Clone)]
 pub struct DecodeBufs {
     norm: Vec<f32>,
@@ -464,6 +533,9 @@ pub struct DecodeBufs {
     h1: Vec<f32>,
     h2: Vec<f32>,
     attend: AttendScratch,
+    /// Per-slot hidden states for [`Model::decode_batch_into`]; grows to
+    /// the largest batch seen and is reused across sweeps.
+    hidden: Vec<Vec<f32>>,
 }
 
 impl DecodeBufs {
@@ -477,6 +549,7 @@ impl DecodeBufs {
             h1: vec![0.0; c.mlp_dim()],
             h2: vec![0.0; d],
             attend: AttendScratch::default(),
+            hidden: Vec::new(),
         }
     }
 }

@@ -1,0 +1,58 @@
+//! Pool lifecycle: engines own their worker pools. This lives in its own
+//! test binary (one test) because [`live_pool_workers`] is process-global —
+//! engines created by concurrently-running tests in the same binary would
+//! make the count flaky.
+
+use gear_serve::coordinator::engine::{Engine, EngineConfig};
+use gear_serve::coordinator::executor::live_pool_workers;
+use gear_serve::coordinator::request::GenRequest;
+use gear_serve::coordinator::ExecMode;
+use gear_serve::kvcache::CacheSpec;
+use gear_serve::model::config::ModelConfig;
+use gear_serve::model::{Model, ModelWeights};
+
+fn tiny_model() -> Model {
+    let cfg = ModelConfig { vocab: 13, d_model: 64, n_layers: 2, n_heads: 2, max_seq: 160 };
+    Model::new(ModelWeights::random(cfg, 11))
+}
+
+/// A `Sequential` engine spawns no threads; a `Batched` engine spawns
+/// exactly its configured pool, keeps the same workers alive across runs
+/// (persistent pool — no per-sweep spawning), and joins all of them on
+/// drop. `WorkerPool::drop` joins synchronously and each worker decrements
+/// the live count before exiting, so no polling is needed.
+#[test]
+fn engine_owns_and_joins_its_pool() {
+    let before = live_pool_workers();
+
+    let seq = Engine::new(
+        tiny_model(),
+        EngineConfig::new(CacheSpec::gear(4)).with_exec(ExecMode::Sequential),
+    );
+    assert_eq!(live_pool_workers(), before, "Sequential mode must not spawn pool threads");
+    drop(seq);
+
+    let mut e = Engine::new(
+        tiny_model(),
+        EngineConfig::new(CacheSpec::gear(4))
+            .with_exec(ExecMode::Batched)
+            .with_max_batch(16)
+            .with_pool_threads(3),
+    );
+    assert_eq!(live_pool_workers(), before + 3, "pool spawns once, at engine construction");
+
+    // Two full generation waves through the same engine: the pool is
+    // reused, not respawned — the live count never moves.
+    for wave in 0..2u64 {
+        let prompt: Vec<u32> = (0..20).map(|t| (t % 10) as u32 + 3).collect();
+        for i in 0..12u64 {
+            e.submit(GenRequest::greedy(wave * 100 + i, prompt.clone(), 16));
+        }
+        let results = e.run_to_completion();
+        assert_eq!(results.len(), 12);
+        assert_eq!(live_pool_workers(), before + 3, "wave {wave} changed the worker count");
+    }
+
+    drop(e);
+    assert_eq!(live_pool_workers(), before, "engine drop must join every pool worker");
+}
