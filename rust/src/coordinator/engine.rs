@@ -9,53 +9,77 @@
 //!   segment flushes the decode step seals, each dispatched as contiguous
 //!   chunk descriptors across a persistent worker pool.
 //!
-//! A sweep runs **emit → reserve → prefill chunks → decode batch → flush →
-//! commit**:
+//! A sweep runs **emit → reserve → prefill chunks → decode batch →
+//! join/submit flushes → commit** (`docs/ARCHITECTURE.md` draws the full
+//! picture, including which phase may observe which cache state):
 //! 1. **Emit** (policy, sequential): each decoding request's previously
 //!    sampled token is emitted; stop/length/context finishes retire.
 //! 2. **Reserve** (policy, sequential, fixed order): per request, the
 //!    sweep's worst-case byte growth is reserved *before* any model math —
 //!    `cache.step_growth_bound()` for decoders (exact per-method flush
-//!    accounting from `gear::size`), the next chunk's FP16-accounted
-//!    in-flight KV for prefillers. On exhaustion the youngest request is
-//!    preempted (recompute preemption) and the reservation retries, so real
-//!    cache bytes can no longer overshoot the budget mid-sweep.
+//!    accounting from `gear::size`, covering both a pending seal and the
+//!    pending install of a flush submitted last sweep), the next chunk's
+//!    FP16-accounted in-flight KV for prefillers. On exhaustion the
+//!    youngest request is preempted (recompute preemption) and the
+//!    reservation retries, so real cache bytes can no longer overshoot the
+//!    budget mid-sweep. Reserve never waits on a flush: the bound accounts
+//!    for in-flight jobs without observing their results.
 //! 3. **Prefill** (execute): every request still in
 //!    [`super::scheduler::ReqPhase::Prefill`] advances one chunk
 //!    (`prefill_chunk` tokens) in a single [`BatchExecutor::run_prefill`]
-//!    call. A request whose final chunk completed commits: the whole
-//!    prompt's exact K/V compresses through the one-shot `ingest_prefill`
-//!    path (bit-identical to whole-prompt prefill), its first token is
-//!    sampled, and it joins the decode set *next* sweep.
+//!    call — concurrently, on the same pool, with any flush jobs submitted
+//!    at the previous sweep's commit (the overlap this engine is after). A
+//!    request whose final chunk completed commits: the whole prompt's
+//!    exact K/V compresses through the one-shot `ingest_prefill` path
+//!    (bit-identical to whole-prompt prefill), its first token is sampled,
+//!    and it joins the decode set *next* sweep.
 //! 4. **Decode** (execute): the surviving decoders advance one token in a
 //!    single [`BatchExecutor::run_into`] call, writing into the engine's
-//!    pooled logits vectors. Streaming buffers the step fills are *sealed*,
-//!    not compressed inline ([`LayerKv::append_deferred`]).
-//! 5. **Flush** (execute, deterministic commit point): every sealed
-//!    (request, layer) pair — collected in fixed request-serial × layer
-//!    order — compresses via [`BatchExecutor::run_flushes`], in parallel
-//!    across requests and layers, before any byte accounting runs.
+//!    pooled logits vectors. Attention reads any still-detached buffer
+//!    rows as dense FP16 — their content is timing-independent — and
+//!    streaming buffers the step fills are *sealed*, not compressed inline
+//!    ([`crate::kvcache::LayerKv::append_deferred`]).
+//! 5. **Join + submit** (the split flush commit point, fixed
+//!    request-serial × layer order): flush jobs submitted at these
+//!    requests' *previous* commit are joined — still-queued work is stolen
+//!    inline, finished work just installs — because byte accounting below
+//!    is the first observer of their results. Then every buffer this
+//!    step sealed is detached ([`crate::kvcache::LayerKv::detach_flush`])
+//!    and submitted to the pool without blocking; those jobs overlap the
+//!    *next* sweep and join one commit from now.
 //! 6. **Commit** (policy, sequential, fixed order): per request — sample
 //!    the next token and fold the sweep's transient headroom back into the
 //!    steady reservation (with a preempt-and-retry backstop should a cache
 //!    ever outgrow its bound).
 //!
-//! Policy phases are sequential and order-fixed, and the execute phases are
+//! ## Determinism contract
+//!
+//! Policy phases are sequential and order-fixed; the execute phases are
 //! bit-identical between [`ExecMode::Sequential`] and [`ExecMode::Batched`]
-//! (each request's forward touches only its own state), so the two modes
-//! produce identical token streams, finish reasons, and peak cache bytes —
-//! `tests/batched_vs_sequential.rs` pins this. Chunked prefill is likewise
+//! (each request's forward touches only its own state, reductions are
+//! fixed-order); and the flush join points are fixed by *data dependence*
+//! — the sealed request's next commit — never by job completion timing.
+//! `Sequential` follows the identical submit/join protocol (the join
+//! steals and runs the job inline), so both modes observe identical cache
+//! state at every observation point: the two planes produce identical
+//! token streams, finish reasons, preemption schedules, and peak cache
+//! bytes for every pool size — `tests/batched_vs_sequential.rs` and
+//! `tests/pool_golden.rs` pin this, including a flush held in flight
+//! across a preemption of its own request. Chunked prefill is likewise
 //! bit-identical to whole-prompt prefill for every chunk size
 //! (`tests/prefill_chunked.rs`).
 //!
-//! Budget semantics: `peak_cache_bytes` tracks reservations, which now
-//! *lead* real bytes (phase 2) instead of trailing them — the transient
-//! overshoot window of the previous engine (up to one step's growth × the
-//! active set) is closed.
+//! Budget semantics: `peak_cache_bytes` tracks reservations, which *lead*
+//! real bytes (phase 2) instead of trailing them. Byte accounting observes
+//! caches only at commit points (settle), where outstanding flushes have
+//! just been joined; detached-but-unjoined rows are counted at their
+//! still-resident FP16 size, and the job's private snapshot (one sealed
+//! buffer per in-flight (request, layer)) is the only transient the budget
+//! does not see.
 
 use std::time::Instant;
 
-use crate::kvcache::{CacheSpec, LayerKv};
+use crate::kvcache::CacheSpec;
 use crate::model::{Model, PrefillSlot};
 
 use super::executor::{BatchExecutor, ExecMode};
@@ -313,10 +337,11 @@ impl Engine {
     }
 
     /// One batched decode step for the given (still-present) requests, then
-    /// the deterministic flush commit point, then the sequential fixed-order
-    /// commit: sample the next token and settle the byte reservation.
-    /// Requests are re-found by admission serial (caller-chosen `req.id`s
-    /// need not be unique; serials are).
+    /// the split commit point — **join** the flushes these requests
+    /// submitted a sweep ago, **submit** the seals this step produced —
+    /// then the sequential fixed-order commit: sample the next token and
+    /// settle the byte reservation. Requests are re-found by admission
+    /// serial (caller-chosen `req.id`s need not be unique; serials are).
     fn decode_phase(&mut self, serials: &[u64]) {
         let t_step = Instant::now();
         let mut logits = std::mem::take(&mut self.logits_buf);
@@ -335,31 +360,22 @@ impl Engine {
             present
         };
 
-        // Flush commit point: every streaming buffer the decode step sealed
-        // compresses here — in parallel across requests and layers on the
-        // executor pool — before sampling and before `settle_reservation`
-        // reads any `nbytes()`. Pending layers are collected in fixed
-        // request-serial × layer order, and each flush touches only its own
-        // layer, so pool size cannot change bytes, peaks, or token streams.
-        {
-            let t_flush = Instant::now();
-            let mut pending: Vec<&mut dyn LayerKv> = Vec::new();
-            for a in self.active.iter_mut() {
-                if !present.contains(&a.serial) {
-                    continue;
-                }
-                for layer in a.cache.layers.iter_mut() {
-                    if layer.flush_pending() {
-                        pending.push(layer.as_mut());
-                    }
-                }
-            }
-            if !pending.is_empty() {
-                self.metrics.flush_jobs += pending.len();
-                self.executor.run_flushes(&mut pending);
-                self.metrics.flush_stall += t_flush.elapsed();
-            }
-        }
+        // Join half of the commit point: flush jobs submitted at these
+        // requests' *previous* commit have overlapped a full sweep of
+        // engine work (this sweep's prefill round and the decode step
+        // above, which read the detached rows as dense buffer); now byte
+        // accounting is about to observe the caches, so the compressed
+        // segments must land. Joins run in fixed request-serial × layer
+        // order and each job is a pure function of its sealed rows, so
+        // pool size and timing cannot change bytes, peaks, or tokens.
+        self.join_flushes(&present);
+
+        // Submit half: detach every streaming buffer this decode step
+        // sealed and queue its compression on the pool — without blocking.
+        // The jobs run in the pool's idle gaps (strictly lower priority
+        // than decode/prefill dispatches) and are joined at these
+        // requests' next commit, right here, one sweep from now.
+        self.submit_flushes(&present);
 
         for (lg, &serial) in logits.iter().zip(&present) {
             let Some(i) = self.active.iter().position(|a| a.serial == serial) else { continue };
@@ -372,6 +388,48 @@ impl Engine {
         }
         self.logits_buf = logits;
         self.metrics.step_latencies.push(t_step.elapsed());
+    }
+
+    /// Join every outstanding flush of the given requests, in fixed
+    /// request-serial × layer order, installing the compressed segments in
+    /// place of the detached buffer rows. Still-queued jobs are stolen and
+    /// run inline (always, in `ExecMode::Sequential` — making it the
+    /// blocking baseline); finished jobs cost only the bookkeeping. Worker
+    /// component timings fold back into the engine accumulator inside
+    /// [`BatchExecutor::join_flush`], at this deterministic point.
+    fn join_flushes(&mut self, present: &[u64]) {
+        for &serial in present {
+            let Some(i) = self.active.iter().position(|a| a.serial == serial) else { continue };
+            if self.active[i].pending_flushes.is_empty() {
+                continue;
+            }
+            let tickets = std::mem::take(&mut self.active[i].pending_flushes);
+            for (layer_idx, ticket) in tickets {
+                let (result, stalled, hidden) = self.executor.join_flush(ticket);
+                self.active[i].cache.layers[layer_idx].install_flush(result);
+                self.metrics.flush_stall += stalled;
+                self.metrics.flush_overlap_won += hidden;
+            }
+        }
+    }
+
+    /// Detach every sealed (request, layer) pair among the given requests —
+    /// in fixed request-serial × layer order, the same order the matching
+    /// joins will run — and submit the compression jobs to the executor.
+    /// Joining before submitting (see [`Self::decode_phase`]) guarantees at
+    /// most one job per layer is ever in flight.
+    fn submit_flushes(&mut self, present: &[u64]) {
+        for &serial in present {
+            let Some(i) = self.active.iter().position(|a| a.serial == serial) else { continue };
+            for layer_idx in 0..self.active[i].cache.layers.len() {
+                let Some(work) = self.active[i].cache.layers[layer_idx].detach_flush() else {
+                    continue;
+                };
+                let ticket = self.executor.submit_flush(work);
+                self.active[i].pending_flushes.push((layer_idx, ticket));
+                self.metrics.flush_jobs += 1;
+            }
+        }
     }
 
     /// Fold a request's transient sweep headroom back into its steady

@@ -1,6 +1,6 @@
 //! The execution plane: one batched decode step — and one batched round of
-//! prefill chunks — over the whole active set, plus the deferred-flush
-//! compression jobs the decode step seals.
+//! prefill chunks — over the whole active set, plus the asynchronous
+//! flush-compression jobs the decode step seals.
 //!
 //! The executor owns no policy. It receives the active requests in engine
 //! order, runs [`Model::decode_batch_into`] (decode) or
@@ -28,30 +28,49 @@
 //! results: decode and prefill are **bit-identical** to the sequential
 //! reference for every pool size (`tests/pool_golden.rs` pins this).
 //!
-//! ## Deferred segment flush
+//! ## Asynchronous segment flush (submit/join)
 //!
-//! Decode sweeps append through [`LayerKv::append_deferred`]: a buffer that
-//! reaches capacity is *sealed*, not compressed inline. After the decode
-//! step, the engine collects every sealed (request, layer) pair — in fixed
-//! request-serial × layer order — and hands them to
-//! [`BatchExecutor::run_flushes`],
-//! which runs the quant/outlier/low-rank compression as one pool job per
-//! layer, in parallel across requests and layers, at a single deterministic
-//! commit point before byte accounting. The compression work that used to
-//! serialize inside one worker's layer loop now overlaps across the pool,
-//! and the decode critical path never stalls on a flush.
+//! Decode sweeps append through
+//! [`crate::kvcache::LayerKv::append_deferred`]: a buffer that reaches
+//! capacity is *sealed*, not compressed inline. At its commit point the
+//! engine detaches every sealed (request, layer) pair — in fixed
+//! request-serial × layer order — as an owned [`FlushWork`] snapshot and
+//! **submits** it ([`BatchExecutor::submit_flush`]) without blocking: the
+//! job sits on the pool's flush queue and idle workers pick it up while
+//! the engine moves on to the next sweep's emit, reserve, prefill round,
+//! and decode step. The engine **joins** each job
+//! ([`BatchExecutor::join_flush`]) only at the first point that must
+//! observe its result — byte accounting at the sealed request's next
+//! commit — so the compression latency hides behind a full sweep of
+//! engine work instead of stalling it.
+//!
+//! Determinism is preserved because the join point is fixed by data
+//! dependence, not timing: [`ExecMode::Sequential`] follows the *same*
+//! submit/join protocol and simply runs the job inline at the join (the
+//! same steal path a `Batched` engine uses when the pool has not started
+//! the job yet), so every observation point — attention inputs, `nbytes`
+//! at commits, reservations, peaks — sees identical values in both modes
+//! and at every pool size (`tests/pool_golden.rs` pins this).
+//!
+//! **Job priority:** workers always prefer the sync batch (decode and
+//! prefill chunk descriptors) over queued flush jobs, so flushes can never
+//! starve the critical path; they fill the pool's idle gaps. A panic
+//! inside a flush job is captured in its slot and re-raised on the engine
+//! thread at the join.
 //!
 //! GEAR component timings accumulate in worker-thread thread-locals; each
-//! job drains its own at completion and the executor folds them back into
-//! the engine thread's accumulator in job order, so the Fig 3a breakdown
-//! still covers off-thread work.
+//! job drains its own at completion and the engine folds them back at the
+//! deterministic join (or records them directly when it steals the job),
+//! so the Fig 3a breakdown still covers off-thread work.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use crate::kvcache::LayerKv;
+use crate::kvcache::{FlushResult, FlushWork};
 use crate::model::config::ModelConfig;
 use crate::model::transformer::{DecodeBufs, DecodeSlot, PrefillSlot};
 use crate::model::Model;
@@ -82,10 +101,71 @@ const MIN_FANOUT: usize = 8;
 /// concurrent prefills.
 const MIN_PREFILL_FANOUT: usize = 2;
 
-/// Below this many sealed layers the flush runs inline: a single segment's
-/// compression is comparable to the dispatch wakeup, so fanning out one job
-/// buys nothing.
-const MIN_FLUSH_FANOUT: usize = 2;
+/// Lifecycle of one submitted flush job, guarded by its slot's mutex. The
+/// transitions are claim-based: whoever swaps `Queued` out (an idle worker,
+/// or the engine stealing at the join) owns the work; everyone else
+/// observes `Running`/`Done` and acts accordingly.
+enum FlushState {
+    /// Submitted, not yet started. Holds the work so the engine can steal
+    /// it at the join if no worker got to it first.
+    Queued(FlushWork),
+    /// A worker claimed the work and is compressing.
+    Running,
+    /// Finished: the result, the job's drained component timings, and its
+    /// compression wall time (for the overlap-won metric).
+    Done { result: FlushResult, timings: PhaseTimer, work_time: Duration },
+    /// Result consumed by [`BatchExecutor::join_flush`] (or the work was
+    /// stolen by it); terminal.
+    Taken,
+    /// The job panicked on a worker; re-raised on the engine at the join.
+    Panicked(Box<dyn std::any::Any + Send>),
+}
+
+/// Shared slot for one flush job: the pool worker writes the result, the
+/// engine waits on `cv` at the join.
+struct FlushSlot {
+    state: Mutex<FlushState>,
+    cv: Condvar,
+}
+
+/// Handle to one submitted flush job, returned by
+/// [`BatchExecutor::submit_flush`] and consumed by
+/// [`BatchExecutor::join_flush`]. Dropping the ticket without joining
+/// abandons the result (the engine does this when the sealed request is
+/// preempted or finishes before its next commit — the job's output can no
+/// longer matter, and a worker that still runs it writes into the slot
+/// harmlessly).
+pub struct FlushTicket {
+    slot: Arc<FlushSlot>,
+}
+
+/// Run a queued flush job on a pool worker: claim the work (skipping if the
+/// engine already stole it), compress, publish the result, and wake any
+/// joiner. Runs outside the pool-control lock so sync dispatches and other
+/// flushes proceed concurrently.
+fn service_flush(slot: &FlushSlot) {
+    let work = {
+        let mut st = slot.state.lock().unwrap();
+        match std::mem::replace(&mut *st, FlushState::Running) {
+            FlushState::Queued(work) => work,
+            other => {
+                // Already stolen/served; put the observed state back.
+                *st = other;
+                return;
+            }
+        }
+    };
+    let t0 = Instant::now();
+    let res = catch_unwind(AssertUnwindSafe(|| work.compress()));
+    let timings = crate::gear::take_phase_timings();
+    let work_time = t0.elapsed();
+    let mut st = slot.state.lock().unwrap();
+    *st = match res {
+        Ok(result) => FlushState::Done { result, timings, work_time },
+        Err(p) => FlushState::Panicked(p),
+    };
+    slot.cv.notify_all();
+}
 
 /// Live pool-worker threads across the process (observability; the
 /// lifecycle test pins that dropping an [`super::engine::Engine`] joins its
@@ -131,6 +211,13 @@ struct PoolCtrl {
     shutdown: bool,
     /// First panic payload captured from a job, re-raised on the dispatcher.
     panic: Option<Box<dyn std::any::Any + Send>>,
+    /// Submitted flush jobs awaiting a worker, oldest first. Strictly lower
+    /// priority than the sync batch: a worker only pops from here when no
+    /// sync job index is claimable, so flushes fill idle gaps and can never
+    /// starve decode or prefill dispatches. (Jobs still queued at the join
+    /// are stolen and run inline by the engine; jobs still queued at
+    /// shutdown are dropped — their tickets are gone too.)
+    flushes: VecDeque<Arc<FlushSlot>>,
 }
 
 struct PoolShared {
@@ -174,6 +261,7 @@ impl WorkerPool {
                 done: 0,
                 shutdown: false,
                 panic: None,
+                flushes: VecDeque::new(),
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
@@ -260,33 +348,51 @@ fn worker_main(shared: Arc<PoolShared>, cfg: ModelConfig) {
     // this thread ever runs. Buffers inside grow to high-water marks and
     // are fully overwritten before use, so reuse cannot change results.
     let mut bufs = DecodeBufs::new(&cfg);
+    // Work a worker can pick up: an index of the current sync batch, or a
+    // queued asynchronous flush job.
+    enum Work {
+        Sync(JobRef, usize),
+        Flush(Arc<FlushSlot>),
+    }
     loop {
-        let (job, idx) = {
+        let work = {
             let mut g = shared.ctrl.lock().unwrap();
             loop {
                 if g.shutdown {
                     return;
                 }
-                match g.job {
-                    Some(job) if g.next < g.n_jobs => {
+                // Sync batch first — flush jobs must never delay a decode
+                // or prefill dispatch that has claimable chunks.
+                if let Some(job) = g.job {
+                    if g.next < g.n_jobs {
                         let idx = g.next;
                         g.next += 1;
-                        break (job, idx);
+                        break Work::Sync(job, idx);
                     }
-                    _ => g = shared.work_cv.wait(g).unwrap(),
                 }
+                if let Some(slot) = g.flushes.pop_front() {
+                    break Work::Flush(slot);
+                }
+                g = shared.work_cv.wait(g).unwrap();
             }
         };
-        let res = catch_unwind(AssertUnwindSafe(|| (job.0)(idx, &mut bufs)));
-        let mut g = shared.ctrl.lock().unwrap();
-        if let Err(p) = res {
-            if g.panic.is_none() {
-                g.panic = Some(p);
+        match work {
+            Work::Sync(job, idx) => {
+                let res = catch_unwind(AssertUnwindSafe(|| (job.0)(idx, &mut bufs)));
+                let mut g = shared.ctrl.lock().unwrap();
+                if let Err(p) = res {
+                    if g.panic.is_none() {
+                        g.panic = Some(p);
+                    }
+                }
+                g.done += 1;
+                if g.done >= g.n_jobs {
+                    shared.done_cv.notify_one();
+                }
             }
-        }
-        g.done += 1;
-        if g.done >= g.n_jobs {
-            shared.done_cv.notify_one();
+            // Flush jobs publish into their own slot (panics included) and
+            // never touch the sync batch counters.
+            Work::Flush(slot) => service_flush(&slot),
         }
     }
 }
@@ -300,8 +406,8 @@ struct DecodeChunk<'a, 'b> {
     timer: &'a mut PhaseTimer,
 }
 
-/// Executes batched decode steps, prefill rounds, and deferred segment
-/// flushes for the engine.
+/// Executes batched decode steps, prefill rounds, and asynchronous flush
+/// jobs (submit/join) for the engine.
 pub struct BatchExecutor {
     mode: ExecMode,
     /// Pool size (1 for `Sequential`, which never dispatches).
@@ -431,42 +537,61 @@ impl BatchExecutor {
         });
     }
 
-    /// Run the deferred compression of every sealed (request, layer) pair
-    /// the decode step produced — one pool job per layer, in parallel
-    /// across requests and layers. The caller passes the layers in fixed
-    /// engine order (request serial × layer index); each flush touches only
-    /// its own layer, so execution order cannot change results, and the
-    /// engine calls this at one deterministic commit point before byte
-    /// accounting. Component timings from each job fold back in job order.
-    pub fn run_flushes(&mut self, layers: &mut [&mut dyn LayerKv]) {
-        let n = layers.len();
-        if n == 0 {
-            return;
-        }
-        let pool = match &self.pool {
-            Some(pool) if n >= MIN_FLUSH_FANOUT => pool,
-            _ => {
-                for l in layers.iter_mut() {
-                    l.run_flush();
-                }
-                return;
-            }
-        };
-        self.timers.clear();
-        self.timers.resize_with(n, PhaseTimer::new);
-        let tasks: Vec<Mutex<Option<(&mut dyn LayerKv, &mut PhaseTimer)>>> = layers
-            .iter_mut()
-            .zip(self.timers.iter_mut())
-            .map(|(l, t)| Mutex::new(Some((&mut **l, t))))
-            .collect();
-        pool.run_jobs(tasks.len(), &|i, _bufs| {
-            let (layer, timer) =
-                tasks[i].lock().unwrap().take().expect("flush job claimed twice");
-            layer.run_flush();
-            *timer = crate::gear::take_phase_timings();
+    /// Submit one detached flush job for asynchronous compression and
+    /// return its ticket. Never blocks: in `Batched` mode the job joins the
+    /// pool's flush queue, where idle workers pick it up between (and with
+    /// strictly lower priority than) sync dispatches; in `Sequential` mode
+    /// the job simply waits in its slot for [`Self::join_flush`] to run it
+    /// inline — the same protocol, so both modes observe identical state at
+    /// every point.
+    pub fn submit_flush(&mut self, work: FlushWork) -> FlushTicket {
+        let slot = Arc::new(FlushSlot {
+            state: Mutex::new(FlushState::Queued(work)),
+            cv: Condvar::new(),
         });
-        for t in &self.timers {
-            crate::gear::merge_phase_timings(t);
+        if let Some(pool) = &self.pool {
+            let mut g = pool.shared.ctrl.lock().unwrap();
+            g.flushes.push_back(Arc::clone(&slot));
+            drop(g);
+            pool.shared.work_cv.notify_one();
+        }
+        FlushTicket { slot }
+    }
+
+    /// Join one submitted flush job, blocking until its result is
+    /// available: still-queued work is *stolen* and compressed inline on
+    /// the calling thread (always the case in `Sequential` mode), running
+    /// work is waited on, finished work returns immediately. Worker-side
+    /// component timings fold into the calling thread's accumulator here —
+    /// at the engine's deterministic join order — and a worker-side panic
+    /// re-raises here. Returns `(result, stalled, hidden)`: wall time this
+    /// call blocked, and compression wall time that completed off the
+    /// caller's critical path (the overlap win).
+    pub fn join_flush(&mut self, ticket: FlushTicket) -> (FlushResult, Duration, Duration) {
+        let t0 = Instant::now();
+        let mut st = ticket.slot.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, FlushState::Taken) {
+                FlushState::Queued(work) => {
+                    // Steal: no worker started it. Compress inline; the
+                    // component timings land directly in this thread's
+                    // accumulator, exactly like the old blocking flush.
+                    drop(st);
+                    let result = work.compress();
+                    return (result, t0.elapsed(), Duration::ZERO);
+                }
+                FlushState::Running => {
+                    *st = FlushState::Running;
+                    st = ticket.slot.cv.wait(st).unwrap();
+                }
+                FlushState::Done { result, timings, work_time } => {
+                    crate::gear::merge_phase_timings(&timings);
+                    let stalled = t0.elapsed();
+                    return (result, stalled, work_time.saturating_sub(stalled));
+                }
+                FlushState::Taken => unreachable!("flush ticket joined twice"),
+                FlushState::Panicked(p) => resume_unwind(p),
+            }
         }
     }
 }

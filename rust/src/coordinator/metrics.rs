@@ -32,13 +32,22 @@ pub struct EngineMetrics {
     /// + sampling/settle), one sample per sweep that decoded at least one
     /// request. Summarize with [`Self::step_latency_pct`].
     pub step_latencies: Vec<Duration>,
-    /// Deferred segment-compression jobs run at flush commit points (one
-    /// per sealed request-layer).
+    /// Asynchronous segment-compression jobs submitted at commit points
+    /// (one per sealed request-layer). Deterministic: both exec modes
+    /// submit the identical job sequence.
     pub flush_jobs: usize,
-    /// Wall time decode sweeps spent blocked on flush commit points — the
-    /// residual compression stall after the pool's overlap; inline-append
-    /// compression would instead serialize this inside the decode step.
+    /// Wall time the engine spent *blocked* at flush join points — waiting
+    /// for a running job, or compressing a still-queued job inline (always
+    /// the case in `ExecMode::Sequential`, which is therefore the blocking
+    /// baseline this stall is compared against). This is the residual
+    /// compression stall left after the submit/join overlap.
     pub flush_stall: Duration,
+    /// Compression wall time that completed off the engine's critical path:
+    /// for each joined job, its compression time minus whatever the join
+    /// still had to wait. Zero in `ExecMode::Sequential`; with a pool and
+    /// enough idle gaps this approaches the total compression time — the
+    /// overlap win `bench_throughput --compare` reports.
+    pub flush_overlap_won: Duration,
 }
 
 impl EngineMetrics {

@@ -18,23 +18,26 @@
 //!   layer-major batched round of prefill chunks
 //!   ([`executor::BatchExecutor::run_prefill`]), one layer-major batched
 //!   decode step ([`executor::BatchExecutor::run_into`]) for the whole
-//!   active set, and the deferred segment flushes the decode step sealed
-//!   ([`executor::BatchExecutor::run_flushes`]) — each dispatched as
-//!   contiguous chunk descriptors with a fixed-order reduction.
+//!   active set — each dispatched as contiguous chunk descriptors with a
+//!   fixed-order reduction — plus an asynchronous flush lane: sealed
+//!   segment-compression jobs submitted at commit
+//!   ([`executor::BatchExecutor::submit_flush`]) run on idle workers and
+//!   are joined one sweep later ([`executor::BatchExecutor::join_flush`]).
 //!   Bit-identical to sequential execution for every pool size;
 //!   [`executor::ExecMode`] selects between them.
 //! * [`engine`] — the composition: **emit → reserve → prefill chunks →
-//!   decode batch → flush → commit** sweeps over a byte-budgeted cache
-//!   pool. The reserve phase pre-books each request's worst-case byte
-//!   growth for the sweep (exact per-method step bounds from `gear::size`,
-//!   plus the in-flight chunk bytes of active prefills), so real cache
-//!   bytes never overshoot the budget mid-sweep. Decode appends only
-//!   *seal* full streaming buffers; the flush phase compresses every
-//!   sealed (request, layer) pair on the pool at one deterministic commit
-//!   point before byte accounting — compression overlaps across the pool
-//!   instead of stalling one worker's layer loop, with reservations, peak
-//!   bytes, and token streams unchanged. The commit phase folds unused
-//!   headroom back.
+//!   decode batch → join/submit flushes → commit** sweeps over a
+//!   byte-budgeted cache pool. The reserve phase pre-books each request's
+//!   worst-case byte growth for the sweep (exact per-method step bounds
+//!   from `gear::size`, plus the in-flight chunk bytes of active
+//!   prefills), so real cache bytes never overshoot the budget mid-sweep.
+//!   Decode appends only *seal* full streaming buffers; at commit the
+//!   engine joins the flushes it submitted one sweep earlier (the first
+//!   point byte accounting observes their results), then detaches and
+//!   submits every newly sealed (request, layer) pair — those jobs
+//!   compress concurrently with the *next* sweep's prefill and decode
+//!   rounds, with reservations, peak bytes, and token streams unchanged.
+//!   The commit phase folds unused headroom back.
 //! * [`request`] — generation requests, results, lifecycle states.
 //! * [`metrics`] — latency/throughput counters + the GEAR component time
 //!   breakdown (Fig 3a), including work done on executor workers.
@@ -43,11 +46,11 @@
 //!   bandwidth model reproduces Fig 3b/3c).
 //! * [`server`] — a minimal TCP line-protocol front-end.
 //!
-//! Later PRs extend the execution plane without touching policy:
-//! shard-per-layer execution replaces the chunk split inside
-//! [`executor::BatchExecutor`], and flushes could overlap the *next*
-//! sweep's prefill round (today they only overlap each other at the
-//! commit point).
+//! The full concurrency contract — which phase may observe which cache
+//! state, and why the schedule is bit-identical across exec modes and pool
+//! sizes — is documented in `docs/ARCHITECTURE.md`. Later PRs extend the
+//! execution plane without touching policy: shard-per-layer execution
+//! replaces the chunk split inside [`executor::BatchExecutor`].
 
 pub mod device_model;
 pub mod engine;

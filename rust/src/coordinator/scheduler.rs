@@ -16,6 +16,12 @@
 //!
 //! Everything is deterministic: FCFS order, per-request seeded samplers,
 //! and fixed iteration order in the engine's reserve and commit phases.
+//! Policy never observes anything timing-dependent — budget decisions read
+//! cache bytes only at the engine's commit points, where any asynchronous
+//! flush the request submitted has already been joined — so the schedule
+//! (admissions, preemptions, OOMs) is bit-identical across
+//! [`super::executor::ExecMode`]s and pool sizes. See
+//! `docs/ARCHITECTURE.md` for the full concurrency contract.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -26,6 +32,7 @@ use crate::model::{Model, PrefillState};
 use crate::util::rng::Rng;
 
 use super::engine::EngineConfig;
+use super::executor::FlushTicket;
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, GenRequest, GenResult};
 
@@ -68,6 +75,14 @@ pub struct ActiveRequest {
     pub rng: Rng,
     pub enqueued_at: Instant,
     pub started_at: Instant,
+    /// Flush jobs detached at this request's last commit and still
+    /// compressing asynchronously: `(layer index, ticket)`, in layer order.
+    /// Joined — in this fixed order — at the request's next commit, the
+    /// first point byte accounting must observe the results. Dropped (jobs
+    /// abandoned) when the request is preempted or finishes first: a
+    /// preempted request restarts from an empty cache, so the segments can
+    /// no longer matter.
+    pub pending_flushes: Vec<(usize, FlushTicket)>,
 }
 
 impl ActiveRequest {
@@ -201,6 +216,7 @@ impl Scheduler {
                 rng,
                 enqueued_at: enq,
                 started_at: Instant::now(),
+                pending_flushes: Vec::new(),
             });
             metrics.max_concurrency = metrics.max_concurrency.max(active.len());
         }

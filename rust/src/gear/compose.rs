@@ -137,6 +137,35 @@ pub struct CompressedMatrix {
 }
 
 /// Compress `x` (tokens × channels) of the given KV kind.
+///
+/// For the full GEAR method this realizes the paper's Eq. (4),
+/// `X ≈ D̂ + L + S`: outliers `S` are filtered first, the remainder is
+/// quantized into `D̂`, and a head-wise low-rank `L` is fitted to the
+/// residual `R = X − D̂ − S`. Reconstruction is literally the sum of the
+/// three stored terms:
+///
+/// ```
+/// use gear_serve::gear::compose::{compress, GearConfig};
+/// use gear_serve::gear::{KvKind, Method};
+/// use gear_serve::tensor::Tensor;
+/// use gear_serve::util::rng::Rng;
+///
+/// let x = Tensor::randn(&[256, 64], &mut Rng::new(9), 1.0);
+/// // GEAR 2-bit: KIVI backbone, s = 2% outliers, rank-4 residual.
+/// let c = compress(&x, KvKind::Key, &GearConfig::new(Method::gear_default(2), 4));
+/// assert!(c.quant.is_some() && c.sparse.is_some() && c.lowrank.is_some());
+///
+/// // Eq. (4): reconstruct() is the component sum D̂ + L + S, bit for bit.
+/// let mut manual = c.quant.as_ref().unwrap().dequantize();
+/// c.lowrank.as_ref().unwrap().add_into(manual.data_mut());
+/// c.sparse.as_ref().unwrap().add_into(manual.data_mut());
+/// assert_eq!(manual.data(), c.reconstruct().data());
+///
+/// // Real stored bytes are the component sum too. At this toy width
+/// // (d = 64) the rank-4 factors dominate, so the ratio is ~0.48; at
+/// // LLaMA widths the same recipe lands near the backbone's 2-bit size.
+/// assert!(c.kv_size_frac() < 0.5);
+/// ```
 pub fn compress(x: &Tensor, kind: KvKind, cfg: &GearConfig) -> CompressedMatrix {
     let (rows, cols) = (x.rows(), x.cols());
     let mut rng = Rng::new(cfg.seed ^ (rows as u64) << 32 ^ cols as u64);

@@ -120,6 +120,30 @@ pub fn orthonormalize_columns(m: &mut [f32], rows: usize, r: usize) -> bool {
 /// `x` is row-major n×d. `iters` is the loop count `L` (the paper uses a
 /// small constant; 2–4 suffices given the fast spectrum decay of
 /// quantization residuals — see Fig 2b).
+///
+/// This fits the residual term `L = A Bᵀ` of Eq. (4)'s `X ≈ D̂ + L + S`;
+/// in the full recipe it runs on `R = X − D̂ − S` (per head, via
+/// [`HeadwiseLowRank`]). On an exactly low-rank input it recovers the
+/// matrix to working precision:
+///
+/// ```
+/// use gear_serve::gear::lowrank::power_iter_lowrank;
+/// use gear_serve::tensor::ops::{fro_dist, fro_norm, matmul_into};
+/// use gear_serve::util::rng::Rng;
+///
+/// // An exactly rank-2 matrix: X = U Vᵀ.
+/// let (n, d, k) = (24, 16, 2);
+/// let mut rng = Rng::new(3);
+/// let (mut u, mut v) = (vec![0.0f32; n * k], vec![0.0f32; k * d]);
+/// rng.fill_normal(&mut u, 0.0, 1.0);
+/// rng.fill_normal(&mut v, 0.0, 1.0);
+/// let mut x = vec![0.0f32; n * d];
+/// matmul_into(&u, &v, n, k, d, &mut x);
+///
+/// let lr = power_iter_lowrank(&x, n, d, k, 4, &mut rng);
+/// let rel = fro_dist(&x, lr.to_dense().data()) / fro_norm(&x);
+/// assert!(rel < 5e-3, "rank-2 recovery rel err {rel}");
+/// ```
 pub fn power_iter_lowrank(
     x: &[f32],
     n: usize,

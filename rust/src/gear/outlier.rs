@@ -94,6 +94,37 @@ pub fn k_per_side(len: usize, s: f64) -> usize {
 /// Returns `(S, X − S)`: the sparse outlier matrix and the dense remainder
 /// with extracted positions zeroed (so quantization sees small-magnitude
 /// entries only).
+///
+/// This is the sparse term `S = Filter_s(X)` of Eq. (4)'s
+/// `X ≈ D̂ + L + S`: the entries quantization handles worst — the extreme
+/// magnitudes that would stretch every group's range — kept exactly (at
+/// FP16) instead:
+///
+/// ```
+/// use gear_serve::gear::outlier::filter_outliers;
+/// use gear_serve::gear::quant::Axis;
+/// use gear_serve::tensor::Tensor;
+/// use gear_serve::util::rng::Rng;
+///
+/// // Plant one huge positive and one huge negative entry per token row.
+/// let mut x = Tensor::randn(&[8, 64], &mut Rng::new(23), 0.1);
+/// for i in 0..8 {
+///     x.row_mut(i)[3] = 100.0;
+///     x.row_mut(i)[40] = -100.0;
+/// }
+///
+/// let (s, remainder) = filter_outliers(&x, 0.04, Axis::Row); // k = 1/side
+/// assert_eq!(s.nnz(), 8 * 2); // exactly the planted extremes
+/// // The dense remainder X − S is what the backbone quantizes: with the
+/// // extremes gone its per-group range collapses.
+/// assert!(remainder.data().iter().all(|v| v.abs() < 1.0));
+/// // X is recovered exactly, up to FP16 rounding of the outlier values.
+/// let mut recon = remainder.clone();
+/// s.add_into(recon.data_mut());
+/// for (a, b) in x.data().iter().zip(recon.data()) {
+///     assert!((a - b).abs() <= a.abs() * 5e-4 + 1e-6);
+/// }
+/// ```
 pub fn filter_outliers(x: &Tensor, s: f64, axis: Axis) -> (SparseCoo, Tensor) {
     let (rows, cols) = (x.rows(), x.cols());
     let mut remainder = x.clone();

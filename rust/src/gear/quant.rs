@@ -105,6 +105,30 @@ impl QuantizedMatrix {
     /// Quantize `x` at `bits` precision under `scheme`.
     ///
     /// Supported bit widths: 2, 4, 8 (powers of two that tile a u32 word).
+    ///
+    /// This is the backbone term `D̂ = Quant_b(X)` of the paper's Eq. (4)
+    /// decomposition `X ≈ D̂ + L + S`: a uniform asymmetric quantizer whose
+    /// worst-case per-entry error is half a quantization step, leaving a
+    /// small-magnitude residual for the low-rank term to capture.
+    ///
+    /// ```
+    /// use gear_serve::gear::quant::{QuantScheme, QuantizedMatrix};
+    /// use gear_serve::tensor::Tensor;
+    /// use gear_serve::util::rng::Rng;
+    ///
+    /// let x = Tensor::randn(&[32, 64], &mut Rng::new(7), 1.0);
+    /// let q = QuantizedMatrix::quantize(&x, 4, QuantScheme::per_token_group(16));
+    ///
+    /// // Stored size is real: bit-packed codes + FP16 scale/zero pairs.
+    /// assert!(q.nbytes() < q.fp16_bytes() / 2);
+    /// // Every entry of the dequantized backbone D̂ lies within half a
+    /// // quantization step of the original (+ FP16 rounding slack).
+    /// let d_hat = q.dequantize();
+    /// let bound = q.max_step() * 0.5 + 1e-2;
+    /// for (a, b) in x.data().iter().zip(d_hat.data()) {
+    ///     assert!((a - b).abs() <= bound);
+    /// }
+    /// ```
     pub fn quantize(x: &Tensor, bits: u8, scheme: QuantScheme) -> QuantizedMatrix {
         assert!(
             matches!(bits, 2 | 4 | 8),

@@ -8,14 +8,34 @@
 //! r_p = 4, r_g = 2). Attention runs fused against every segment (see
 //! `gear::attend`) and dense against the buffer.
 //!
-//! Two flush cadences share one implementation: [`LayerKv::append`]
-//! compresses inline the moment the buffer fills (standalone decode loops,
-//! tests), while [`LayerKv::append_deferred`] only *seals* the full buffer
-//! and leaves the compression to [`LayerKv::run_flush`] — the engine runs
-//! those flushes in parallel on the executor pool at a fixed commit point
-//! after the decode step, keeping Algorithm 2's quant/outlier/low-rank
-//! work off the decode critical path. Either way the same rows compress
-//! into the same segment, so segment layout and bytes are identical.
+//! ## Flush cadences and the determinism contract
+//!
+//! Three flush cadences share one compression path, and all three produce
+//! identical segments from identical rows (the compression is a pure
+//! function of the rows, the method, and a seed derived from both):
+//!
+//! * **Inline** — [`LayerKv::append`] compresses the moment the buffer
+//!   fills (standalone decode loops, tests, analysis tools).
+//! * **Deferred-synchronous** — [`LayerKv::append_deferred`] only *seals*
+//!   the full buffer; [`LayerKv::run_flush`] compresses it later on the
+//!   calling thread. A seal left behind by a caller that never flushes
+//!   self-heals at the next append.
+//! * **Detached** (the engine's cadence) — [`LayerKv::detach_flush`] hands
+//!   the sealed rows out as an owned [`super::FlushWork`] snapshot and
+//!   marks them `in_flight`. The rows *stay in the buffer*: `len()`,
+//!   `nbytes()`, and attention keep observing them as dense FP16 rows, so
+//!   nothing the next sweep reads depends on when the job actually runs.
+//!   [`LayerKv::install_flush`] later swaps the rows for the compressed
+//!   segments at the engine's commit point — the single place byte
+//!   accounting observes the cache — and [`LayerKv::step_growth_bound`]
+//!   accounts for that pending install (plus any still-pending seal), so
+//!   the engine's reservations cover the swap before it happens.
+//!
+//! While a detached job is in flight the layer refuses inline flushes
+//! (segments are oldest-first; compressing newer rows before the in-flight
+//! ones land would corrupt that order). The engine upholds the protocol by
+//! joining a request's outstanding jobs at its next commit *before*
+//! detaching new seals, so at most one job per layer is ever in flight.
 
 use crate::gear::compose::{compress, CompressedMatrix, GearConfig, Method};
 use crate::gear::size::SizeBreakdown;
@@ -25,7 +45,7 @@ use crate::tensor::Tensor;
 use crate::util::f16::to_f16_precision;
 
 use super::dense::softmax_heads;
-use super::{AttendScratch, LayerKv};
+use super::{AttendScratch, FlushResult, FlushWork, LayerKv};
 
 pub struct GearLayerKv {
     d: usize,
@@ -44,8 +64,14 @@ pub struct GearLayerKv {
     /// Total tokens across segments (excluding buffer).
     seg_tokens: usize,
     /// Buffer reached capacity under [`LayerKv::append_deferred`] and
-    /// awaits its commit-point flush (see `run_flush`).
+    /// awaits its flush (inline via `run_flush`, or detached via
+    /// `detach_flush`).
     sealed: bool,
+    /// The first `in_flight` buffer tokens were detached as a
+    /// [`FlushWork`] snapshot that is compressing asynchronously. They
+    /// remain readable here (attention, `len`, `nbytes`) until
+    /// [`LayerKv::install_flush`] replaces them with the segment.
+    in_flight: usize,
 }
 
 impl GearLayerKv {
@@ -72,6 +98,7 @@ impl GearLayerKv {
             buf_n: 0,
             seg_tokens: 0,
             sealed: false,
+            in_flight: 0,
         }
     }
 
@@ -89,6 +116,7 @@ impl GearLayerKv {
     }
 
     fn compress_chunk(&mut self, k: Tensor, v: Tensor, rank: usize) {
+        debug_assert_eq!(self.in_flight, 0, "segment order: install the in-flight flush first");
         let m = self.method_with_rank(rank);
         let cfg = GearConfig::new(m, self.n_heads);
         let ck = compress(&k, KvKind::Key, &cfg);
@@ -100,7 +128,13 @@ impl GearLayerKv {
 
     /// Force-compress whatever is in the buffer (used by tests/analysis;
     /// the engine lets the cadence do it). Clears any deferred-flush seal.
+    /// Refused while a detached flush is in flight: its rows sit at the
+    /// front of the buffer and must become the *next* segment.
     pub fn flush_buffer(&mut self) {
+        assert_eq!(
+            self.in_flight, 0,
+            "cannot inline-flush while a detached flush is in flight; install it first"
+        );
         self.sealed = false;
         if self.buf_n == 0 {
             return;
@@ -117,6 +151,12 @@ impl GearLayerKv {
 
     pub fn buffered_tokens(&self) -> usize {
         self.buf_n
+    }
+
+    /// Buffer tokens currently detached into an in-flight [`FlushWork`]
+    /// (still readable here; they leave at `install_flush`).
+    pub fn in_flight_tokens(&self) -> usize {
+        self.in_flight
     }
 }
 
@@ -143,7 +183,9 @@ impl LayerKv for GearLayerKv {
         self.buf_k.extend(k.iter().map(|&x| to_f16_precision(x)));
         self.buf_v.extend(v.iter().map(|&x| to_f16_precision(x)));
         self.buf_n += 1;
-        if self.buf_n >= self.buffer_cap {
+        // In-flight rows are already spoken for by a detached job; only the
+        // rows behind them count toward the next seal.
+        if self.buf_n - self.in_flight >= self.buffer_cap {
             self.sealed = true;
         }
     }
@@ -156,6 +198,39 @@ impl LayerKv for GearLayerKv {
         if self.sealed {
             self.flush_buffer();
         }
+    }
+
+    fn detach_flush(&mut self) -> Option<FlushWork> {
+        if !self.sealed {
+            return None;
+        }
+        // The engine joins a request's outstanding flush before detaching a
+        // new seal, so the whole buffer is the sealed region here.
+        assert_eq!(self.in_flight, 0, "previous detached flush not yet installed");
+        self.sealed = false;
+        self.in_flight = self.buf_n;
+        Some(FlushWork {
+            k: Tensor::new(&[self.buf_n, self.d], self.buf_k.clone()),
+            v: Tensor::new(&[self.buf_n, self.d], self.buf_v.clone()),
+            method: self.method_with_rank(self.decode_rank),
+            n_heads: self.n_heads,
+        })
+    }
+
+    fn install_flush(&mut self, result: FlushResult) {
+        let rows = result.k.rows;
+        assert_eq!(rows, self.in_flight, "install does not match the in-flight detach");
+        debug_assert_eq!(result.v.rows, rows);
+        // The detached rows sit at the front of the buffer (they are the
+        // oldest); the segment takes their place at the end of the segment
+        // list, preserving oldest-first order ahead of the remaining rows.
+        self.buf_k.drain(..rows * self.d);
+        self.buf_v.drain(..rows * self.d);
+        self.buf_n -= rows;
+        self.in_flight = 0;
+        self.seg_tokens += rows;
+        self.seg_k.push(result.k);
+        self.seg_v.push(result.v);
     }
 
     fn len(&self) -> usize {
@@ -241,17 +316,28 @@ impl LayerKv for GearLayerKv {
                 + crate::gear::size::predict(m, false, rows, self.d, self.n_heads).total()
         };
         let mut bound = append;
+        // An in-flight detached flush installs its segment at this
+        // request's next commit — inside the sweep this bound reserves for.
+        // The install also *removes* the detached FP16 rows from the
+        // buffer, but we stay conservative and do not credit that back.
+        if self.in_flight > 0 {
+            bound += seg_cost(self.in_flight);
+        }
         // A deferred seal still pending from the previous sweep flushes
-        // before or with this step (commit point or append self-heal).
+        // before or with this step (inline commit or append self-heal;
+        // under the engine's detached cadence it is only *submitted* this
+        // sweep and its install is covered by the next sweep's bound —
+        // counting it now merely over-reserves, which is safe).
         if self.sealed {
-            bound += seg_cost(self.buf_n);
+            bound += seg_cost(self.buf_n - self.in_flight);
         }
         // Will this append fill (and this sweep flush) the buffer? After a
-        // pending flush the buffer restarts empty. The analytic size model
-        // is exact for every method (`gear::size` pins predict ==
-        // measured), but we stay conservative and do not credit back the
-        // freed buffer rows — the bound only has to never under-estimate.
-        let buf_after = if self.sealed { 0 } else { self.buf_n };
+        // pending flush the buffer restarts empty; in-flight rows no longer
+        // count toward the cap. The analytic size model is exact for every
+        // method (`gear::size` pins predict == measured), but we stay
+        // conservative and do not credit back the freed buffer rows — the
+        // bound only has to never under-estimate.
+        let buf_after = if self.sealed { 0 } else { self.buf_n - self.in_flight };
         if buf_after + 1 >= self.buffer_cap {
             bound += seg_cost(self.buffer_cap);
         }
@@ -483,6 +569,114 @@ mod tests {
         assert_eq!(c.n_segments(), 1);
         assert_eq!(c.buffered_tokens(), 1);
         assert_eq!(c.len(), 5);
+    }
+
+    #[test]
+    fn detached_flush_matches_inline_cadence() {
+        // The engine's detached flush (detach → compress off-layer →
+        // install) must produce bit-identical segments and bytes to the
+        // inline cadence: compression is a pure function of the sealed
+        // rows, the method, and the shape-derived seed.
+        let mut rng = Rng::new(100);
+        let rows: Vec<(Tensor, Tensor)> = (0..9).map(|_| fill(&mut rng, 1, 16)).collect();
+        let run = |detached: bool| {
+            let mut c = GearLayerKv::new(16, 2, Method::gear_default(4), 4, 4, 2);
+            let mut in_flight: Option<FlushResult> = None;
+            for (k, v) in &rows {
+                c.append_deferred(k.row(0), v.row(0));
+                // Commit point: land the previous sweep's job before
+                // detaching the new seal — the engine's join-then-submit
+                // order.
+                if detached {
+                    if let Some(r) = in_flight.take() {
+                        c.install_flush(r);
+                    }
+                    if let Some(w) = c.detach_flush() {
+                        in_flight = Some(w.compress());
+                    }
+                } else {
+                    c.run_flush();
+                }
+            }
+            if let Some(r) = in_flight.take() {
+                c.install_flush(r);
+            }
+            (c.n_segments(), c.buffered_tokens(), c.nbytes(), c.breakdown().total())
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn detached_rows_stay_readable_until_install() {
+        let mut rng = Rng::new(101);
+        let (d, h) = (32, 4);
+        let rows: Vec<(Tensor, Tensor)> = (0..4).map(|_| fill(&mut rng, 1, d)).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+
+        let mut inline = GearLayerKv::new(d, h, Method::gear_default(4), 4, 4, 2);
+        let mut eng = GearLayerKv::new(d, h, Method::gear_default(4), 4, 4, 2);
+        for (k, v) in &rows {
+            inline.append(k.row(0), v.row(0));
+            eng.append_deferred(k.row(0), v.row(0));
+        }
+        // Buffer full: flushed inline on one cadence, detached on the other.
+        let w = eng.detach_flush().unwrap();
+        assert_eq!(w.rows(), 4);
+        assert_eq!(eng.in_flight_tokens(), 4);
+        // While the job is in flight the rows stay fully readable: token
+        // count and bytes unchanged (still dense FP16), attention answers.
+        assert_eq!(eng.len(), 4);
+        assert_eq!(eng.nbytes(), 2 * 4 * d * 2);
+        let mut o = vec![0.0f32; d];
+        eng.attend(&q, h, &mut o);
+        assert!(o.iter().all(|x| x.is_finite()));
+        // Install: state becomes bit-identical to the inline cadence.
+        eng.install_flush(w.compress());
+        assert_eq!(eng.in_flight_tokens(), 0);
+        assert_eq!(eng.n_segments(), 1);
+        assert_eq!(eng.buffered_tokens(), 0);
+        assert_eq!(eng.len(), 4);
+        assert_eq!(eng.nbytes(), inline.nbytes());
+        let mut o1 = vec![0.0f32; d];
+        let mut o2 = vec![0.0f32; d];
+        inline.attend(&q, h, &mut o1);
+        eng.attend(&q, h, &mut o2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn step_growth_bound_covers_detached_cadence() {
+        // The engine reserves the bound, appends, then at commit installs
+        // the previous sweep's detached job and detaches the new seal.
+        // Growth across that whole window must stay within the bound —
+        // including cap-1 buffers where an install and a fresh detach meet
+        // at every commit.
+        let mut rng = Rng::new(102);
+        for (method, buffer, decode_rank) in [
+            (Method::gear_default(2), 4, 2),
+            (Method::gear_l_default(4), 2, 4),
+            (Method::gear_default(4), 1, 2),
+        ] {
+            let mut c = GearLayerKv::new(32, 4, method, buffer, 4, decode_rank);
+            let (k, v) = fill(&mut rng, 1, 32);
+            let mut in_flight: Option<FlushResult> = None;
+            for step in 0..13 {
+                let before = c.nbytes();
+                let bound = c.step_growth_bound();
+                c.append_deferred(k.row(0), v.row(0));
+                if let Some(r) = in_flight.take() {
+                    c.install_flush(r);
+                }
+                if let Some(w) = c.detach_flush() {
+                    in_flight = Some(w.compress());
+                }
+                assert!(
+                    c.nbytes() <= before + bound,
+                    "detached cadence step {step} {method:?}: {} > {before} + {bound}",
+                    c.nbytes()
+                );
+            }
+        }
     }
 
     #[test]

@@ -15,8 +15,9 @@ pub mod dense;
 pub mod gear_cache;
 
 use crate::gear::attend::SegScratch;
+use crate::gear::compose::{compress, CompressedMatrix, GearConfig};
 use crate::gear::size::SizeBreakdown;
-use crate::gear::Method;
+use crate::gear::{KvKind, Method};
 use crate::tensor::Tensor;
 
 /// Reusable attention scratch: every `Vec` the attend hot path needs, owned
@@ -29,6 +30,52 @@ pub struct AttendScratch {
     pub scores: Vec<f32>,
     /// Per-segment kernel scratch (dequant row, `Bᵀq` projection, plan).
     pub seg: SegScratch,
+}
+
+/// An owned, self-contained compression job detached from a sealed
+/// streaming buffer by [`LayerKv::detach_flush`].
+///
+/// The job carries a *snapshot* of the sealed rows: the layer keeps its own
+/// copy readable (attention and byte accounting are unaffected while the
+/// job is in flight), and [`FlushWork::compress`] is a pure function of this
+/// data — same rows, same method, same deterministic seed, same segments —
+/// so *where* and *when* it runs cannot change the result. That is what
+/// lets the engine run it on a pool worker concurrently with the next
+/// sweep's prefill and decode, or steal it inline at the join point in
+/// `ExecMode::Sequential`, and still be bit-identical between the two.
+pub struct FlushWork {
+    /// Sealed K rows (rows × d), FP16-rounded exactly as buffered.
+    pub k: Tensor,
+    /// Sealed V rows (rows × d).
+    pub v: Tensor,
+    /// Compression method with the decode rank already applied.
+    pub method: Method,
+    pub n_heads: usize,
+}
+
+impl FlushWork {
+    /// Number of sealed token rows this job will compress.
+    pub fn rows(&self) -> usize {
+        self.k.rows()
+    }
+
+    /// Run the GEAR compression (quant backbone + low-rank residual +
+    /// sparse outliers, per [`Method`]). Pure and deterministic: the RNG
+    /// inside is seeded from the config and matrix shape only.
+    pub fn compress(self) -> FlushResult {
+        let cfg = GearConfig::new(self.method, self.n_heads);
+        FlushResult {
+            k: compress(&self.k, KvKind::Key, &cfg),
+            v: compress(&self.v, KvKind::Value, &cfg),
+        }
+    }
+}
+
+/// The compressed segments produced by [`FlushWork::compress`], handed back
+/// to the owning layer via [`LayerKv::install_flush`].
+pub struct FlushResult {
+    pub k: CompressedMatrix,
+    pub v: CompressedMatrix,
 }
 
 /// Per-layer KV cache: stores K/V rows and answers fused attention queries.
@@ -45,10 +92,12 @@ pub trait LayerKv: Send {
     /// Append like [`Self::append`], but *defer* any compression the
     /// append would trigger: a streaming buffer that reaches capacity is
     /// sealed and reported through [`Self::flush_pending`] instead of
-    /// compressing inline. The engine's decode sweep appends through this
-    /// so every sealed segment can compress in parallel on the executor
-    /// pool at one deterministic commit point (before byte accounting). A
-    /// sealed buffer left behind by a caller that never runs the commit
+    /// compressing inline. The engine's decode sweep appends through this,
+    /// then detaches every seal as an asynchronous job at its commit point
+    /// ([`Self::detach_flush`]) so the compression overlaps the next
+    /// sweep's prefill and decode on the executor pool, joining only when
+    /// byte accounting must observe the result ([`Self::install_flush`]).
+    /// A sealed buffer left behind by a caller that never runs a commit
     /// point is flushed at the next append — self-healing — so standalone
     /// decode loops stay correct. Caches with no deferred work (FP16
     /// dense, H₂O) treat this exactly as [`Self::append`].
@@ -62,9 +111,34 @@ pub trait LayerKv: Send {
     }
 
     /// Run any deferred compression sealed by [`Self::append_deferred`]
-    /// (no-op when nothing is pending). Touches only this layer, so the
-    /// executor may run distinct layers' flushes concurrently.
+    /// inline, on the calling thread (no-op when nothing is pending). This
+    /// is the *synchronous* flush used by standalone decode loops and the
+    /// self-heal path; the engine instead detaches the work
+    /// ([`Self::detach_flush`]) so it can overlap the next sweep.
     fn run_flush(&mut self) {}
+
+    /// Detach the sealed buffer as an owned [`FlushWork`] job, or `None`
+    /// when nothing is sealed (including caches with no deferred work).
+    ///
+    /// The detached rows *stay readable in the layer* — `len`, `nbytes`,
+    /// and attention are unaffected while the job is in flight — but they
+    /// are marked in-flight: the layer refuses inline flushes until the
+    /// job's result comes back through [`Self::install_flush`], because a
+    /// segment compressed out of order would corrupt the oldest-first
+    /// segment layout. At most one job per layer may be in flight; the
+    /// engine guarantees this by joining a request's outstanding flushes at
+    /// its next commit, before detaching new seals.
+    fn detach_flush(&mut self) -> Option<FlushWork> {
+        None
+    }
+
+    /// Install the compressed segments a detached [`FlushWork`] produced:
+    /// the in-flight rows leave the FP16 buffer and the segments take their
+    /// place. Only meaningful after [`Self::detach_flush`] returned a job.
+    fn install_flush(&mut self, result: FlushResult) {
+        let _ = result;
+        unreachable!("this cache has no deferred flush work to install");
+    }
 
     /// Number of tokens currently represented (dropped tokens excluded).
     fn len(&self) -> usize;

@@ -111,6 +111,49 @@ fn preemption_under_pool_bit_identical() {
     }
 }
 
+/// The async-flush torture case: a one-token streaming buffer seals every
+/// decode step, so a compression job is outstanding across *every* sweep
+/// boundary — submitted at one commit, overlapping the next sweep's
+/// prefill/decode, joined at the next commit. Under a tight budget the
+/// sealed requests also get preempted with those flushes still in flight
+/// (tickets dropped, results abandoned) and later re-admitted from scratch.
+/// Token streams, preemption schedule, peak bytes, *and* the submitted job
+/// count must still be bit-identical to the blocking sequential reference
+/// at every pool size: join points are fixed by data dependence, not by
+/// when a worker happens to finish.
+#[test]
+fn flush_outstanding_across_sweeps_bit_identical() {
+    let spec = CacheSpec::Compressed {
+        method: gear_serve::gear::Method::GearL {
+            bits: 2,
+            backbone: gear_serve::gear::compose::Backbone::Kivi(16),
+            r: 4,
+        },
+        buffer: 1, // seal on every decode step
+        prefill_rank: 4,
+        decode_rank: 4,
+    };
+    let budget = 64 << 10;
+
+    let mut seq = make_engine(spec, budget, ExecMode::Sequential, None);
+    let reference = run_wave(&mut seq, 0, 12);
+    let ref_flush_jobs = seq.metrics.flush_jobs;
+    assert!(reference.requests_preempted > 0, "scenario failed to trigger preemption");
+    assert!(reference.results.iter().all(|(_, _, f, _)| *f != FinishReason::OutOfMemory));
+    assert!(reference.peak_cache_bytes <= budget);
+    assert!(ref_flush_jobs > 0, "one-token buffers produced no flush jobs");
+
+    for pool in [1, 2, host_parallelism()] {
+        let mut e = make_engine(spec, budget, ExecMode::Batched, Some(pool));
+        let got = run_wave(&mut e, 0, 12);
+        assert_eq!(reference, got, "pool {pool}");
+        assert_eq!(
+            e.metrics.flush_jobs, ref_flush_jobs,
+            "pool {pool}: flush submission schedule diverged from sequential"
+        );
+    }
+}
+
 /// One engine, many waves: the pool's pinned per-worker scratch and the
 /// engine's pooled logits vectors are reused across
 /// `run_to_completion` calls, and every wave still matches a fresh
