@@ -13,7 +13,7 @@
 
 use gear_serve::coordinator::device_model::DeviceModel;
 use gear_serve::coordinator::engine::{Engine, EngineConfig};
-use gear_serve::coordinator::executor::default_pool_threads;
+use gear_serve::coordinator::executor::{default_pipeline_stages, default_pool_threads};
 use gear_serve::coordinator::request::GenRequest;
 use gear_serve::coordinator::ExecMode;
 use gear_serve::gear::size::predict_cache_frac;
@@ -155,9 +155,9 @@ fn real_engine() {
     println!();
 }
 
-/// Sequential vs batched decode plane, and chunked vs whole-prompt prefill,
-/// on real engine runs: CPU wall-clock tokens/s across
-/// `max_batch ∈ {1, 4, 16}`, plus a machine-readable
+/// Sequential vs batched vs layer-pipelined decode plane, and chunked vs
+/// whole-prompt prefill, on real engine runs: CPU wall-clock tokens/s
+/// across `max_batch ∈ {1, 4, 16}`, plus a machine-readable
 /// `BENCH_throughput.json` so the perf trajectory accumulates across PRs.
 /// `smoke` shrinks the workload so CI can run the comparison per push.
 fn compare_exec_planes(smoke: bool) {
@@ -169,6 +169,10 @@ fn compare_exec_planes(smoke: bool) {
     };
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let pool = default_pool_threads();
+    // What a Pipelined engine resolves to with no explicit override
+    // (GEAR_PIPELINE_STAGES / one stage per worker, clamped to n_layers at
+    // dispatch) — recorded in the JSON so rows are interpretable offline.
+    let stages_default = default_pipeline_stages(pool);
     // Decode-heavy workload (short prompt, long generation) and a
     // decode-only metric: prefill work is identical in both modes and would
     // otherwise dilute the comparison.
@@ -177,28 +181,34 @@ fn compare_exec_planes(smoke: bool) {
     let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| (i % 46) + 3).collect();
 
     let mut t = Table::new(&format!(
-        "Decode plane: sequential vs pooled sweep ({pool}-thread pool, {host}-way host, \
-         decode-phase tok/s)"
+        "Decode plane: sequential vs pooled vs pipelined sweep ({pool}-thread pool, \
+         {host}-way host, decode-phase tok/s)"
     ))
     .header(&[
         "spec",
         "max_batch",
         "seq tok/s",
         "pool tok/s",
-        "speedup",
+        "pool x",
+        "pipe tok/s",
+        "pipe x",
         "p50 ms",
         "p99 ms",
         "flush ms",
         "overlap ms",
+        "bubble ms",
     ]);
     let mut decode_rows: Vec<String> = Vec::new();
 
     for (name, spec) in [("fp16", CacheSpec::Fp16), ("gear-4", CacheSpec::gear(4))] {
         for batch in [1usize, 4, 16] {
-            let mut tput = [0.0f64; 2];
+            let mut tput = [0.0f64; 3];
             let mut pooled = None;
+            let mut piped = None;
             let mut seq_flush_ms = 0.0f64;
-            for (slot, exec) in [ExecMode::Sequential, ExecMode::Batched].into_iter().enumerate()
+            for (slot, exec) in [ExecMode::Sequential, ExecMode::Batched, ExecMode::Pipelined]
+                .into_iter()
+                .enumerate()
             {
                 let mut e = Engine::new(
                     Model::new(weights.clone()),
@@ -209,48 +219,75 @@ fn compare_exec_planes(smoke: bool) {
                 }
                 let _ = e.run_to_completion();
                 tput[slot] = e.metrics.decode_throughput();
-                if exec == ExecMode::Sequential {
+                match exec {
                     // The blocking baseline: Sequential joins compress
                     // inline, so its stall is the full compression cost.
-                    seq_flush_ms = e.metrics.flush_stall.as_secs_f64() * 1e3;
-                } else {
-                    pooled = Some(e.metrics.clone());
+                    ExecMode::Sequential => {
+                        seq_flush_ms = e.metrics.flush_stall.as_secs_f64() * 1e3;
+                    }
+                    ExecMode::Batched => pooled = Some(e.metrics.clone()),
+                    ExecMode::Pipelined => piped = Some(e.metrics.clone()),
                 }
             }
             let m = pooled.expect("batched leg always runs");
+            let pm = piped.expect("pipelined leg always runs");
             let speedup = tput[1] / tput[0].max(1e-9);
+            let pipe_speedup = tput[2] / tput[0].max(1e-9);
             let (p50, p99) = (m.step_p50().as_secs_f64() * 1e3, m.step_p99().as_secs_f64() * 1e3);
             let flush_ms = m.flush_stall.as_secs_f64() * 1e3;
             let overlap_ms = m.flush_overlap_won.as_secs_f64() * 1e3;
+            // Per-stage hand-off bubble (ms, stage order) over the whole
+            // pipelined run; empty when the sweeps fell back to the inline
+            // path (one effective stage).
+            let stages = pm.stage_busy.len().max(1);
+            let bubbles: Vec<String> = pm
+                .stage_bubble
+                .iter()
+                .map(|d| format!("{:.4}", d.as_secs_f64() * 1e3))
+                .collect();
+            let bubble_total_ms: f64 =
+                pm.stage_bubble.iter().map(|d| d.as_secs_f64() * 1e3).sum();
             t.row(vec![
                 name.into(),
                 batch.to_string(),
                 sig(tput[0]),
                 sig(tput[1]),
                 format!("{speedup:.2}x"),
+                sig(tput[2]),
+                format!("{pipe_speedup:.2}x"),
                 format!("{p50:.3}"),
                 format!("{p99:.3}"),
                 format!("{flush_ms:.3}"),
                 format!("{overlap_ms:.3}"),
+                format!("{bubble_total_ms:.3}"),
             ]);
             decode_rows.push(format!(
                 "{{\"spec\": \"{name}\", \"max_batch\": {batch}, \
                  \"seq_decode_tok_s\": {:.3}, \"batched_decode_tok_s\": {:.3}, \
-                 \"speedup\": {speedup:.4}, \"step_p50_ms\": {p50:.4}, \
+                 \"speedup\": {speedup:.4}, \"pipelined_decode_tok_s\": {:.3}, \
+                 \"pipeline_speedup\": {pipe_speedup:.4}, \"pipeline_stages\": {stages}, \
+                 \"stage_bubble_ms\": [{}], \"step_p50_ms\": {p50:.4}, \
                  \"step_p99_ms\": {p99:.4}, \"flush_jobs\": {}, \
                  \"flush_stall_ms\": {flush_ms:.4}, \
                  \"seq_flush_stall_ms\": {seq_flush_ms:.4}, \
                  \"flush_overlap_won_ms\": {overlap_ms:.4}}}",
-                tput[0], tput[1], m.flush_jobs
+                tput[0],
+                tput[1],
+                tput[2],
+                bubbles.join(", "),
+                m.flush_jobs
             ));
         }
     }
     t.print();
     println!(
-        "expected shape: ~1x at batch 1 (inline path), > 1x at batch >= 8 on multi-core; \
-         flush ms is the residual join stall after overlapping with the next sweep \
-         (seq_flush_stall_ms in the JSON is the blocking baseline it beat; overlap ms \
-         is compression wall time hidden off the critical path)\n"
+        "expected shape: pool ~1x at batch 1 (inline path), > 1x at batch >= 8 on \
+         multi-core; pipe > 1x already at batch 1 (layer stages overlap within one \
+         request) with the win bounded by the deepest stage; flush ms is the residual \
+         join stall after overlapping with the next sweep (seq_flush_stall_ms in the \
+         JSON is the blocking baseline it beat; overlap ms is compression wall time \
+         hidden off the critical path; bubble ms sums each stage's upstream hand-off \
+         wait — per-stage values are in the JSON)\n"
     );
 
     // Chunked vs whole-prompt prefill on a prompt-heavy workload: total
@@ -304,11 +341,14 @@ fn compare_exec_planes(smoke: bool) {
     let json = format!(
         "{{\n  \"bench\": \"throughput_compare\",\n  \"provenance\": \"measured\",\n  \
          \"schema\": {{\n    \"decode_plane_row\": [\"spec\", \"max_batch\", \
-         \"seq_decode_tok_s\", \"batched_decode_tok_s\", \"speedup\", \"step_p50_ms\", \
+         \"seq_decode_tok_s\", \"batched_decode_tok_s\", \"speedup\", \
+         \"pipelined_decode_tok_s\", \"pipeline_speedup\", \"pipeline_stages\", \
+         \"stage_bubble_ms\", \"step_p50_ms\", \
          \"step_p99_ms\", \"flush_jobs\", \"flush_stall_ms\", \"seq_flush_stall_ms\", \
          \"flush_overlap_won_ms\"],\n    \"chunked_prefill_row\": [\"spec\", \"max_batch\", \
          \"whole_prefill_tok_s\", \"chunked_prefill_tok_s\", \"ratio\"]\n  }},\n  \
          \"mode\": \"{}\",\n  \"host_parallelism\": {host},\n  \"pool_threads\": {pool},\n  \
+         \"pipeline_stages_default\": {stages_default},\n  \
          \"decode_workload\": {{\"prompt_len\": {prompt_len}, \
          \"max_new_tokens\": {max_new}, \"requests\": {n_reqs}}},\n  \
          \"prefill_workload\": {{\"prompt_len\": {long_len}, \

@@ -55,18 +55,21 @@
 //! ## Determinism contract
 //!
 //! Policy phases are sequential and order-fixed; the execute phases are
-//! bit-identical between [`ExecMode::Sequential`] and [`ExecMode::Batched`]
+//! bit-identical across [`ExecMode::Sequential`], [`ExecMode::Batched`]
 //! (each request's forward touches only its own state, reductions are
-//! fixed-order); and the flush join points are fixed by *data dependence*
-//! — the sealed request's next commit — never by job completion timing.
-//! `Sequential` follows the identical submit/join protocol (the join
-//! steals and runs the job inline), so both modes observe identical cache
-//! state at every observation point: the two planes produce identical
-//! token streams, finish reasons, preemption schedules, and peak cache
-//! bytes for every pool size — `tests/batched_vs_sequential.rs` and
-//! `tests/pool_golden.rs` pin this, including a flush held in flight
-//! across a preemption of its own request. Chunked prefill is likewise
-//! bit-identical to whole-prompt prefill for every chunk size
+//! fixed-order), and [`ExecMode::Pipelined`] (stage boundaries only
+//! partition each request's per-layer loop; the hand-off order is fixed by
+//! batch position); and the flush join points are fixed by *data
+//! dependence* — the sealed request's next commit — never by job
+//! completion timing. `Sequential` follows the identical submit/join
+//! protocol (the join steals and runs the job inline), so every mode
+//! observes identical cache state at every observation point: the three
+//! planes produce identical token streams, finish reasons, preemption
+//! schedules, and peak cache bytes for every pool size and stage count —
+//! `tests/batched_vs_sequential.rs` and `tests/pool_golden.rs` pin this,
+//! including a flush held in flight across a preemption of its own request
+//! and preemption mid-pipeline. Chunked prefill is likewise bit-identical
+//! to whole-prompt prefill for every chunk size
 //! (`tests/prefill_chunked.rs`).
 //!
 //! Budget semantics: `peak_cache_bytes` tracks reservations, which *lead*
@@ -105,11 +108,18 @@ pub struct EngineConfig {
     /// sweeps, so an arriving long prompt never stalls the active batch.
     /// The token stream is bit-identical for every value.
     pub prefill_chunk: usize,
-    /// Worker-pool size for [`ExecMode::Batched`]. `None` (the default)
+    /// Worker-pool size for the pooled exec modes. `None` (the default)
     /// resolves through [`super::executor::default_pool_threads`]
     /// (`GEAR_POOL_THREADS`, else host parallelism). The token stream is
     /// bit-identical for every value (`tests/pool_golden.rs`).
     pub pool_threads: Option<usize>,
+    /// Stage count for [`ExecMode::Pipelined`]: the model's layers are
+    /// partitioned into this many contiguous pipeline stages (clamped to
+    /// the layer count). `None` (the default) resolves through
+    /// [`super::executor::default_pipeline_stages`]
+    /// (`GEAR_PIPELINE_STAGES`, else one stage per pool worker). The token
+    /// stream is bit-identical for every value (`tests/pool_golden.rs`).
+    pub pipeline_stages: Option<usize>,
 }
 
 impl EngineConfig {
@@ -122,6 +132,7 @@ impl EngineConfig {
             exec: ExecMode::Batched,
             prefill_chunk: 128,
             pool_threads: None,
+            pipeline_stages: None,
         }
     }
 
@@ -149,6 +160,13 @@ impl EngineConfig {
         self.pool_threads = Some(threads.max(1));
         self
     }
+
+    /// Pin the [`ExecMode::Pipelined`] stage count (see
+    /// [`Self::pipeline_stages`]).
+    pub fn with_pipeline_stages(mut self, stages: usize) -> Self {
+        self.pipeline_stages = Some(stages.max(1));
+        self
+    }
 }
 
 /// Synchronous serving engine: scheduler (policy) + batch executor
@@ -167,7 +185,7 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(model: Model, cfg: EngineConfig) -> Engine {
-        let executor = BatchExecutor::new(&model, cfg.exec, cfg.pool_threads);
+        let executor = BatchExecutor::new(&model, cfg.exec, cfg.pool_threads, cfg.pipeline_stages);
         Engine {
             scheduler: Scheduler::new(cfg),
             executor,
@@ -359,6 +377,9 @@ impl Engine {
             self.executor.run_into(&self.model, &mut refs, &mut logits);
             present
         };
+        // Pipelined sweeps report per-stage busy/bubble; fold them into
+        // the run totals (no-op for the other planes).
+        self.metrics.record_stage_times(self.executor.stage_times());
 
         // Join half of the commit point: flush jobs submitted at these
         // requests' *previous* commit have overlapped a full sweep of
@@ -425,7 +446,7 @@ impl Engine {
                 let Some(work) = self.active[i].cache.layers[layer_idx].detach_flush() else {
                     continue;
                 };
-                let ticket = self.executor.submit_flush(work);
+                let ticket = self.executor.submit_flush(work, layer_idx);
                 self.active[i].pending_flushes.push((layer_idx, ticket));
                 self.metrics.flush_jobs += 1;
             }
@@ -600,6 +621,33 @@ mod tests {
             res.into_iter().map(|r| (r.id, r.output, r.finish)).collect::<Vec<_>>()
         };
         assert_eq!(run(ExecMode::Sequential), run(ExecMode::Batched));
+    }
+
+    #[test]
+    fn pipelined_mode_matches_sequential_mode() {
+        // The pipeline plane has no minimum fan-out: even a single request
+        // splits across layer stages — and must still match the reference
+        // token-for-token.
+        let run = |exec: ExecMode, n_reqs: u64| {
+            let cfg =
+                ModelConfig { vocab: 13, d_model: 32, n_layers: 2, n_heads: 4, max_seq: 96 };
+            let model = Model::new(ModelWeights::random(cfg, 7));
+            let mut e = Engine::new(
+                model,
+                EngineConfig::new(CacheSpec::gear(4))
+                    .with_exec(exec)
+                    .with_pipeline_stages(2),
+            );
+            for i in 0..n_reqs {
+                e.submit(GenRequest::greedy(i, vec![1, 2, 3 + (i % 7) as u32], 12));
+            }
+            let mut res = e.run_to_completion();
+            res.sort_by_key(|r| r.id);
+            res.into_iter().map(|r| (r.id, r.output, r.finish)).collect::<Vec<_>>()
+        };
+        for n in [1u64, 9] {
+            assert_eq!(run(ExecMode::Sequential, n), run(ExecMode::Pipelined, n), "n_reqs {n}");
+        }
     }
 
     #[test]

@@ -28,6 +28,39 @@
 //! results: decode and prefill are **bit-identical** to the sequential
 //! reference for every pool size (`tests/pool_golden.rs` pins this).
 //!
+//! ## Layer-sharded pipeline plane ([`ExecMode::Pipelined`])
+//!
+//! The batch plane splits *requests* across workers, so below
+//! [`MIN_FANOUT`] requests it degenerates to the inline path and a single
+//! stream gets zero speedup. The pipeline plane splits *layers* instead:
+//! the model's blocks are partitioned into contiguous **stages** (one per
+//! pool worker by default; `GEAR_PIPELINE_STAGES` /
+//! [`super::engine::EngineConfig::with_pipeline_stages`] override, clamped
+//! to the layer count), and each request's hidden state streams
+//! stage-to-stage through a bounded one-slot hand-off. Stage `s` runs
+//! request `i`'s layers while stage `s+1` runs request `i-1`'s — so decode
+//! parallelizes even at batch = 1, where the batch plane cannot.
+//!
+//! The hand-off is a per-stage progress counter under one mutex + condvar
+//! ([`PipeCtrl`]): stage `s` touches request `i`'s hidden slot only after
+//! observing `done[s-1] > i` and never again after publishing
+//! `done[s] = i + 1` — the mutex provides the happens-before edge, the
+//! protocol provides exclusivity, and the fixed batch order makes the
+//! schedule deterministic. Per request the stages execute exactly the
+//! per-layer float ops of the sequential plane, in the same order
+//! ([`Model::decode_layer_range`] loops the same `layer_forward`), so the
+//! pipeline is **bit-identical** to `Sequential` for every stage count
+//! (`tests/pool_golden.rs` pins stages {1, 2, n_layers}, preemption
+//! included). Prefill rounds in `Pipelined` mode reuse the batch plane's
+//! request-parallel path unchanged.
+//!
+//! Flush locality: each submitted flush job is tagged with its layer, and
+//! a pipeline stage that finishes its pass drains queued flushes for *its
+//! own* layer range (yielding whenever sync work is claimable) — the
+//! segments a stage sealed get compressed on the worker that owns those
+//! layers, filling the pipeline's drain bubble. Per-stage busy/bubble
+//! times are reported through [`BatchExecutor::stage_times`].
+//!
 //! ## Asynchronous segment flush (submit/join)
 //!
 //! Decode sweeps append through
@@ -70,7 +103,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::kvcache::{FlushResult, FlushWork};
+use crate::kvcache::{FlushResult, FlushWork, LayerKv};
 use crate::model::config::ModelConfig;
 use crate::model::transformer::{DecodeBufs, DecodeSlot, PrefillSlot};
 use crate::model::Model;
@@ -84,8 +117,13 @@ pub enum ExecMode {
     /// Whole batch on the engine thread (the reference semantics). No pool
     /// threads are spawned.
     Sequential,
-    /// Batch chunked across the persistent worker pool.
+    /// Batch chunked across the persistent worker pool (request-parallel).
     Batched,
+    /// Layers sharded into contiguous stages across the pool; each
+    /// request's hidden state streams stage-to-stage (layer-parallel), so
+    /// decode parallelizes even at batch 1. Bit-identical to `Sequential`
+    /// for every stage count.
+    Pipelined,
 }
 
 /// Batches smaller than this run inline (still layer-major, just on the
@@ -126,6 +164,11 @@ enum FlushState {
 struct FlushSlot {
     state: Mutex<FlushState>,
     cv: Condvar,
+    /// The model layer whose sealed rows this job compresses. Pure
+    /// bookkeeping for the pipeline plane's locality drain — the stage that
+    /// owns this layer prefers to run the job itself; results are identical
+    /// whoever runs it.
+    layer: usize,
 }
 
 /// Handle to one submitted flush job, returned by
@@ -186,6 +229,129 @@ pub fn default_pool_threads() -> usize {
     match std::env::var("GEAR_POOL_THREADS") {
         Ok(s) => s.trim().parse::<usize>().ok().filter(|&n| n >= 1).unwrap_or_else(avail),
         Err(_) => avail(),
+    }
+}
+
+/// Resolve the stage count for [`ExecMode::Pipelined`]: the
+/// `GEAR_PIPELINE_STAGES` environment variable when set to a positive
+/// integer, otherwise one stage per pool worker. The effective count is
+/// further clamped to the model's layer count at dispatch time (a stage
+/// must own at least one layer); the token stream is bit-identical for
+/// every value.
+pub fn default_pipeline_stages(workers: usize) -> usize {
+    match std::env::var("GEAR_PIPELINE_STAGES") {
+        Ok(s) => s.trim().parse::<usize>().ok().filter(|&n| n >= 1).unwrap_or(workers),
+        Err(_) => workers,
+    }
+    .max(1)
+}
+
+/// Partition `n_layers` into `stages` contiguous near-equal ranges
+/// (`stages <= n_layers`); the first `n_layers % stages` stages take one
+/// extra layer. Fixed by the configuration, never by timing.
+fn stage_ranges(n_layers: usize, stages: usize) -> Vec<(usize, usize)> {
+    debug_assert!(stages >= 1 && stages <= n_layers);
+    let (base, extra) = (n_layers / stages, n_layers % stages);
+    let mut ranges = Vec::with_capacity(stages);
+    let mut start = 0;
+    for s in 0..stages {
+        let len = base + usize::from(s < extra);
+        ranges.push((start, start + len));
+        start += len;
+    }
+    ranges
+}
+
+/// The pipeline hand-off: one progress counter per stage under a single
+/// mutex. `done[s]` is the number of requests stage `s` has fully
+/// processed; stage `s` may touch request `i`'s hidden slot only in the
+/// window between observing `done[s-1] > i` and publishing
+/// `done[s] = i + 1`. The mutex acquire/release pair gives the
+/// happens-before edge that makes the slot hand-off sound; the counters
+/// make it exclusive.
+struct PipeCtrl {
+    done: Mutex<Vec<usize>>,
+    cv: Condvar,
+}
+
+impl PipeCtrl {
+    fn new(stages: usize) -> PipeCtrl {
+        PipeCtrl { done: Mutex::new(vec![0; stages]), cv: Condvar::new() }
+    }
+
+    /// Block until `upstream` has published request `i`; returns the time
+    /// spent waiting (this stage's hand-off bubble).
+    fn wait_upstream(&self, upstream: usize, i: usize) -> Duration {
+        let t0 = Instant::now();
+        let mut g = self.done.lock().unwrap();
+        while g[upstream] <= i {
+            g = self.cv.wait(g).unwrap();
+        }
+        t0.elapsed()
+    }
+
+    /// Publish that `stage` finished request `i`, handing the hidden slot
+    /// to the downstream stage.
+    fn publish(&self, stage: usize, i: usize) {
+        let mut g = self.done.lock().unwrap();
+        debug_assert_eq!(g[stage], i, "pipeline stage published out of order");
+        g[stage] = i + 1;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Force `stage`'s counter to `total`. Called from the poison guard on
+    /// unwind so a panicking stage can never strand downstream waiters:
+    /// they terminate on garbage hidden states whose results are discarded
+    /// when `run_jobs` re-raises the panic on the dispatcher. No-op on the
+    /// normal path (the counter is already there).
+    fn force_complete(&self, stage: usize, total: usize) {
+        let mut g = self.done.lock().unwrap();
+        if g[stage] < total {
+            g[stage] = total;
+            drop(g);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Unwind guard for one pipeline stage; see [`PipeCtrl::force_complete`].
+struct StagePoisonGuard<'a> {
+    ctrl: &'a PipeCtrl,
+    stage: usize,
+    total: usize,
+}
+
+impl Drop for StagePoisonGuard<'_> {
+    fn drop(&mut self) {
+        self.ctrl.force_complete(self.stage, self.total);
+    }
+}
+
+/// Raw-pointer view of the executor's pooled per-request hidden states,
+/// shared by every pipeline stage. Exclusivity per slot comes from the
+/// [`PipeCtrl`] hand-off protocol, not from the type — hence the unsafe
+/// accessor.
+struct HiddenSlab {
+    ptr: *mut Vec<f32>,
+    len: usize,
+}
+
+// SAFETY: slots are plain `Vec<f32>` (Send); the hand-off protocol
+// guarantees no two threads access a slot concurrently, and every transfer
+// goes through the `PipeCtrl` mutex (acquire/release ordering).
+unsafe impl Send for HiddenSlab {}
+unsafe impl Sync for HiddenSlab {}
+
+impl HiddenSlab {
+    /// # Safety
+    /// The caller must hold the hand-off token for slot `i`: it observed
+    /// `done[s-1] > i` (or is stage 0) and has not yet published
+    /// `done[s] = i + 1`.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slot(&self, i: usize) -> &mut Vec<f32> {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
     }
 }
 
@@ -406,12 +572,32 @@ struct DecodeChunk<'a, 'b> {
     timer: &'a mut PhaseTimer,
 }
 
+/// One pipeline stage of a decode sweep, handed to a pool worker: a
+/// contiguous layer range, every request's cache slice for exactly those
+/// layers (batch order), and — for the last stage only — the logits slots.
+struct StageTask<'a> {
+    stage: usize,
+    /// Global `[start, end)` layer range this stage owns.
+    range: (usize, usize),
+    /// Per-request disjoint slices of `cache.layers[range]`, batch order.
+    layers: Vec<&'a mut [Box<dyn LayerKv>]>,
+    /// `Some` only on the last stage, which finishes each hidden state
+    /// into its logits slot.
+    outs: Option<&'a mut [Vec<f32>]>,
+    timer: &'a mut PhaseTimer,
+    /// `(busy, bubble)` output slot: compute time vs hand-off wait time.
+    times: &'a mut (Duration, Duration),
+}
+
 /// Executes batched decode steps, prefill rounds, and asynchronous flush
 /// jobs (submit/join) for the engine.
 pub struct BatchExecutor {
     mode: ExecMode,
     /// Pool size (1 for `Sequential`, which never dispatches).
     workers: usize,
+    /// Configured pipeline stage count (`Pipelined` only; clamped to the
+    /// layer count at dispatch).
+    stages: usize,
     /// The persistent pool; `None` in `Sequential` mode.
     pool: Option<WorkerPool>,
     /// Engine-thread scratch, used for inline (undispatched) execution.
@@ -419,27 +605,52 @@ pub struct BatchExecutor {
     /// Per-job timing slots, reused across dispatches; folded back into
     /// the engine thread's accumulator in job order after each batch.
     timers: Vec<PhaseTimer>,
+    /// Pooled per-request hidden states for the pipeline plane (the slab
+    /// behind [`HiddenSlab`]); grows to the largest batch seen.
+    pipe_hidden: Vec<Vec<f32>>,
+    /// Per-stage `(busy, bubble)` of the most recent pipelined dispatch;
+    /// the engine folds these into [`super::metrics::EngineMetrics`].
+    stage_times: Vec<(Duration, Duration)>,
 }
 
 impl BatchExecutor {
-    /// `threads` overrides the pool size for `Batched` mode; `None` falls
+    /// `threads` overrides the pool size for the pooled modes; `None` falls
     /// back to [`default_pool_threads`] (`GEAR_POOL_THREADS` / host
-    /// parallelism). `Sequential` spawns no threads.
-    pub fn new(model: &Model, mode: ExecMode, threads: Option<usize>) -> BatchExecutor {
+    /// parallelism). `stages` overrides the `Pipelined` stage count; `None`
+    /// falls back to [`default_pipeline_stages`] (`GEAR_PIPELINE_STAGES` /
+    /// one per worker). `Sequential` spawns no threads.
+    pub fn new(
+        model: &Model,
+        mode: ExecMode,
+        threads: Option<usize>,
+        stages: Option<usize>,
+    ) -> BatchExecutor {
         let workers = match mode {
             ExecMode::Sequential => 1,
-            ExecMode::Batched => threads.unwrap_or_else(default_pool_threads).max(1),
+            ExecMode::Batched | ExecMode::Pipelined => {
+                threads.unwrap_or_else(default_pool_threads).max(1)
+            }
         };
+        let stages = match mode {
+            ExecMode::Pipelined => stages.unwrap_or_else(|| default_pipeline_stages(workers)),
+            _ => 1,
+        }
+        .max(1);
         let pool = match mode {
             ExecMode::Sequential => None,
-            ExecMode::Batched => Some(WorkerPool::new(workers, *model.config())),
+            ExecMode::Batched | ExecMode::Pipelined => {
+                Some(WorkerPool::new(workers, *model.config()))
+            }
         };
         BatchExecutor {
             mode,
             workers,
+            stages,
             pool,
             bufs: DecodeBufs::new(model.config()),
             timers: Vec::new(),
+            pipe_hidden: Vec::new(),
+            stage_times: Vec::new(),
         }
     }
 
@@ -450,6 +661,18 @@ impl BatchExecutor {
     /// Pool size this executor dispatches across.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Configured pipeline stage count (1 unless `Pipelined`).
+    pub fn stages(&self) -> usize {
+        self.stages
+    }
+
+    /// Per-stage `(busy, bubble)` durations of the most recent pipelined
+    /// decode dispatch: compute time vs time spent waiting on the upstream
+    /// hand-off. Empty when the last sweep ran inline or non-pipelined.
+    pub fn stage_times(&self) -> &[(Duration, Duration)] {
+        &self.stage_times
     }
 
     /// Advance every request in `batch` one decode step; logits land in
@@ -465,7 +688,12 @@ impl BatchExecutor {
     ) {
         let b = batch.len();
         out.resize_with(b, Vec::new);
+        self.stage_times.clear();
         if b == 0 {
+            return;
+        }
+        if self.mode == ExecMode::Pipelined {
+            self.run_pipelined(model, batch, out);
             return;
         }
         let pool = match &self.pool {
@@ -508,6 +736,149 @@ impl BatchExecutor {
         }
     }
 
+    /// One pipelined decode sweep: layers partitioned into contiguous
+    /// stages, each request's hidden state streamed stage-to-stage through
+    /// [`PipeCtrl`]. Stage `s` runs request `i` while stage `s+1` runs
+    /// request `i-1`, so even a single request parallelizes — there is no
+    /// minimum fan-out gate on this plane. With one effective stage (or no
+    /// pool) the sweep runs inline, which is the sequential plane's math
+    /// verbatim.
+    fn run_pipelined(
+        &mut self,
+        model: &Model,
+        batch: &mut [&mut ActiveRequest],
+        out: &mut [Vec<f32>],
+    ) {
+        let b = batch.len();
+        let c = *model.config();
+        let stages = self.stages.min(c.n_layers).max(1);
+        let pool = match &self.pool {
+            Some(pool) if stages > 1 => pool,
+            _ => {
+                let mut slots: Vec<DecodeSlot> = batch
+                    .iter_mut()
+                    .map(|a| DecodeSlot { token: a.next_token, pos: a.pos, cache: &mut a.cache })
+                    .collect();
+                model.decode_batch_into(&mut slots, &mut self.bufs, out);
+                return;
+            }
+        };
+
+        let ranges = stage_ranges(c.n_layers, stages);
+        // Stage 0's embed inputs, snapshotted so the stage closures only
+        // share the requests' cache slices mutably.
+        let steps: Vec<(u32, usize)> = batch.iter().map(|a| (a.next_token, a.pos)).collect();
+
+        // The hidden slab is sized on the dispatcher so no stage ever
+        // reallocates a slot another stage holds a pointer into.
+        if self.pipe_hidden.len() < b {
+            self.pipe_hidden.resize_with(b, Vec::new);
+        }
+        for x in self.pipe_hidden.iter_mut().take(b) {
+            x.resize(c.d_model, 0.0);
+        }
+        let slab = HiddenSlab { ptr: self.pipe_hidden.as_mut_ptr(), len: b };
+
+        // Split every request's cache layers into one disjoint slice per
+        // stage, gathered stage-major: stage `s` of request `i` and stage
+        // `s'` of request `i'` can never alias.
+        let mut stage_layers: Vec<Vec<&mut [Box<dyn LayerKv>]>> =
+            (0..stages).map(|_| Vec::with_capacity(b)).collect();
+        for a in batch.iter_mut() {
+            let mut rest: &mut [Box<dyn LayerKv>] = &mut a.cache.layers;
+            for (si, &(start, end)) in ranges.iter().enumerate() {
+                let (head, tail) = rest.split_at_mut(end - start);
+                stage_layers[si].push(head);
+                rest = tail;
+            }
+        }
+
+        self.timers.clear();
+        self.timers.resize_with(stages, PhaseTimer::new);
+        self.stage_times.resize(stages, (Duration::ZERO, Duration::ZERO));
+
+        let ctrl = PipeCtrl::new(stages);
+        let mut outs = Some(&mut out[..b]);
+        let tasks: Vec<Mutex<Option<StageTask>>> = stage_layers
+            .into_iter()
+            .zip(self.timers.iter_mut())
+            .zip(self.stage_times.iter_mut())
+            .enumerate()
+            .map(|(s, ((layers, timer), times))| {
+                Mutex::new(Some(StageTask {
+                    stage: s,
+                    range: ranges[s],
+                    layers,
+                    outs: if s + 1 == stages { outs.take() } else { None },
+                    timer,
+                    times,
+                }))
+            })
+            .collect();
+
+        let shared = &pool.shared;
+        pool.run_jobs(stages, &|s, bufs| {
+            let StageTask { stage, range, mut layers, mut outs, timer, times } =
+                tasks[s].lock().unwrap().take().expect("pipeline stage claimed twice");
+            // On unwind, mark this stage complete so downstream stages
+            // terminate instead of waiting forever; their garbage outputs
+            // are discarded when `run_jobs` re-raises the panic.
+            let _poison = StagePoisonGuard { ctrl: &ctrl, stage, total: b };
+            let t0 = Instant::now();
+            let mut waited = Duration::ZERO;
+            for i in 0..b {
+                if stage > 0 {
+                    waited += ctrl.wait_upstream(stage - 1, i);
+                }
+                // SAFETY: we hold slot `i`'s hand-off token — upstream
+                // published it (or we are stage 0) and we have not yet.
+                let x = unsafe { slab.slot(i) };
+                if stage == 0 {
+                    let (token, pos) = steps[i];
+                    model.embed_token_into(token, pos, x);
+                }
+                model.decode_layer_range(range.0, &mut *layers[i], x, bufs);
+                if let Some(outs) = outs.as_deref_mut() {
+                    model.finish_logits_into(x, bufs, &mut outs[i]);
+                }
+                ctrl.publish(stage, i);
+            }
+            *timer = crate::gear::take_phase_timings();
+            let wall = t0.elapsed();
+            *times = (wall.saturating_sub(waited), waited);
+            // Locality drain: while later stages are still draining the
+            // pipeline tail, compress any queued flush whose layer this
+            // stage owns — on the worker whose caches those are. Strictly
+            // lower priority than sync work: yield the moment a sync job
+            // index is claimable (e.g. a worker-starved stage of this very
+            // dispatch). The last stage skips the drain — it *is* the
+            // critical path. Flush jobs are pure and joined at fixed
+            // points, so who runs them cannot change any result.
+            if stage + 1 < stages {
+                loop {
+                    let slot = {
+                        let mut g = shared.ctrl.lock().unwrap();
+                        if g.job.is_some() && g.next < g.n_jobs {
+                            break;
+                        }
+                        let pos = g
+                            .flushes
+                            .iter()
+                            .position(|f| (range.0..range.1).contains(&f.layer));
+                        match pos {
+                            Some(p) => g.flushes.remove(p).expect("indexed flush slot"),
+                            None => break,
+                        }
+                    };
+                    service_flush(&slot);
+                }
+            }
+        });
+        for t in &self.timers {
+            crate::gear::merge_phase_timings(t);
+        }
+    }
+
     /// Advance every slot's prefill by one chunk. Results land in each
     /// slot's [`crate::model::PrefillState`], so there is nothing to
     /// reduce; slots are split into contiguous chunk descriptors exactly
@@ -538,16 +909,20 @@ impl BatchExecutor {
     }
 
     /// Submit one detached flush job for asynchronous compression and
-    /// return its ticket. Never blocks: in `Batched` mode the job joins the
-    /// pool's flush queue, where idle workers pick it up between (and with
-    /// strictly lower priority than) sync dispatches; in `Sequential` mode
-    /// the job simply waits in its slot for [`Self::join_flush`] to run it
-    /// inline — the same protocol, so both modes observe identical state at
-    /// every point.
-    pub fn submit_flush(&mut self, work: FlushWork) -> FlushTicket {
+    /// return its ticket. Never blocks: in the pooled modes the job joins
+    /// the pool's flush queue, where idle workers pick it up between (and
+    /// with strictly lower priority than) sync dispatches — in `Pipelined`
+    /// mode the stage that owns `layer` preferentially drains it; in
+    /// `Sequential` mode the job simply waits in its slot for
+    /// [`Self::join_flush`] to run it inline — the same protocol, so every
+    /// mode observes identical state at every point. `layer` is the model
+    /// layer whose sealed rows the job compresses (locality bookkeeping
+    /// only).
+    pub fn submit_flush(&mut self, work: FlushWork, layer: usize) -> FlushTicket {
         let slot = Arc::new(FlushSlot {
             state: Mutex::new(FlushState::Queued(work)),
             cv: Condvar::new(),
+            layer,
         });
         if let Some(pool) = &self.pool {
             let mut g = pool.shared.ctrl.lock().unwrap();

@@ -48,6 +48,13 @@ pub struct EngineMetrics {
     /// enough idle gaps this approaches the total compression time — the
     /// overlap win `bench_throughput --compare` reports.
     pub flush_overlap_won: Duration,
+    /// Per-pipeline-stage busy time accumulated across sweeps
+    /// (`ExecMode::Pipelined` only; empty otherwise). Index = stage.
+    pub stage_busy: Vec<Duration>,
+    /// Per-pipeline-stage bubble time: wall the stage spent waiting on its
+    /// upstream hand-off. `stage_bubble[0]` is always zero (stage 0 has no
+    /// upstream).
+    pub stage_bubble: Vec<Duration>,
 }
 
 impl EngineMetrics {
@@ -86,17 +93,65 @@ impl EngineMetrics {
         self.step_latency_pct(0.99)
     }
 
-    /// Fig 3a rows: (component, seconds, fraction of total wall).
+    /// Accumulate one sweep's per-stage `(busy, bubble)` pipeline timings.
+    /// No-op on an empty slice, so the non-pipelined planes cost nothing.
+    pub fn record_stage_times(&mut self, times: &[(Duration, Duration)]) {
+        if times.is_empty() {
+            return;
+        }
+        if self.stage_busy.len() < times.len() {
+            self.stage_busy.resize(times.len(), Duration::ZERO);
+            self.stage_bubble.resize(times.len(), Duration::ZERO);
+        }
+        for (s, &(busy, bubble)) in times.iter().enumerate() {
+            self.stage_busy[s] += busy;
+            self.stage_bubble[s] += bubble;
+        }
+    }
+
+    /// Per-stage occupancy `busy / (busy + bubble)` in `[0, 1]` — how much
+    /// of each pipeline stage's wall went to forward work rather than
+    /// waiting on the upstream hand-off. Empty unless the engine ran
+    /// `ExecMode::Pipelined`.
+    pub fn stage_occupancy(&self) -> Vec<f64> {
+        self.stage_busy
+            .iter()
+            .zip(&self.stage_bubble)
+            .map(|(&b, &w)| {
+                let total = (b + w).as_secs_f64();
+                if total <= 0.0 { 0.0 } else { b.as_secs_f64() / total }
+            })
+            .collect()
+    }
+
+    /// Fig 3a rows: (component, seconds, fraction).
+    ///
+    /// Component timings accumulate across *all* threads — since PR 4,
+    /// worker-side flush jobs run overlapped with the forward pass, so the
+    /// accounted component time can legitimately exceed wall time. Fractions
+    /// are therefore taken over `max(wall, accounted)`: they stay
+    /// non-negative and sum to exactly 1 in both regimes. The residual
+    /// "other (fwd)" row is clamped at zero, and any overlapped excess
+    /// (`accounted − wall`, the compression that ran off the critical path)
+    /// is reported as its own informational row with fraction 0 — it is a
+    /// re-count of time already inside the component rows, not an extra
+    /// share of the denominator.
     pub fn time_breakdown(&self) -> Vec<(String, f64, f64)> {
-        let total = self.wall.as_secs_f64().max(1e-12);
+        let wall = self.wall.as_secs_f64();
+        let accounted: f64 = ["quant", "lowrank", "sparse"]
+            .iter()
+            .map(|n| self.phases.get(n).as_secs_f64())
+            .sum();
+        let denom = wall.max(accounted).max(1e-12);
         let mut rows = Vec::new();
-        let mut accounted = 0.0;
         for name in ["quant", "lowrank", "sparse"] {
             let secs = self.phases.get(name).as_secs_f64();
-            accounted += secs;
-            rows.push((name.to_string(), secs, secs / total));
+            rows.push((name.to_string(), secs, secs / denom));
         }
-        rows.push(("other (fwd)".to_string(), total - accounted, (total - accounted) / total));
+        let other = (wall - accounted).max(0.0);
+        rows.push(("other (fwd)".to_string(), other, other / denom));
+        let overlapped = (accounted - wall).max(0.0);
+        rows.push(("overlapped (off critical path)".to_string(), overlapped, 0.0));
         rows
     }
 }
@@ -139,9 +194,55 @@ mod tests {
         m.phases.add("quant", Duration::from_millis(20));
         m.phases.add("lowrank", Duration::from_millis(10));
         let rows = m.time_breakdown();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         let total: f64 = rows.iter().map(|r| r.2).sum();
         assert!((total - 1.0).abs() < 1e-9);
         assert!((rows[3].2 - 0.7).abs() < 1e-9, "other = {}", rows[3].2);
+        assert_eq!(rows[4].1, 0.0, "no overlap when accounted < wall");
+    }
+
+    /// Overlapped flush jobs accumulate component time on worker threads,
+    /// so accounted can exceed wall. Fractions must stay non-negative and
+    /// sum to 1, with the excess surfaced as the overlap row.
+    #[test]
+    fn breakdown_overlap_exceeds_wall() {
+        let mut m = EngineMetrics {
+            wall: Duration::from_millis(100),
+            ..Default::default()
+        };
+        m.phases.add("quant", Duration::from_millis(80));
+        m.phases.add("lowrank", Duration::from_millis(50));
+        m.phases.add("sparse", Duration::from_millis(30));
+        let rows = m.time_breakdown();
+        assert_eq!(rows.len(), 5);
+        for (name, secs, frac) in &rows {
+            assert!(*secs >= 0.0, "{name} seconds negative: {secs}");
+            assert!(*frac >= 0.0, "{name} fraction negative: {frac}");
+        }
+        let total: f64 = rows.iter().map(|r| r.2).sum();
+        assert!((total - 1.0).abs() < 1e-9, "fractions sum to {total}");
+        assert_eq!(rows[3].1, 0.0, "other clamped at zero");
+        // 160 ms accounted − 100 ms wall = 60 ms ran off the critical path.
+        assert!((rows[4].1 - 0.060).abs() < 1e-9, "overlap = {}", rows[4].1);
+        // Component fractions are over the accounted total in this regime.
+        assert!((rows[0].2 - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_times_accumulate_and_occupancy() {
+        let mut m = EngineMetrics::default();
+        m.record_stage_times(&[]);
+        assert!(m.stage_busy.is_empty(), "empty slice is a no-op");
+        let sweep = [
+            (Duration::from_millis(30), Duration::ZERO),
+            (Duration::from_millis(10), Duration::from_millis(30)),
+        ];
+        m.record_stage_times(&sweep);
+        m.record_stage_times(&sweep);
+        assert_eq!(m.stage_busy, vec![Duration::from_millis(60), Duration::from_millis(20)]);
+        assert_eq!(m.stage_bubble, vec![Duration::ZERO, Duration::from_millis(60)]);
+        let occ = m.stage_occupancy();
+        assert!((occ[0] - 1.0).abs() < 1e-9);
+        assert!((occ[1] - 0.25).abs() < 1e-9);
     }
 }

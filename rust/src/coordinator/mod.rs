@@ -23,8 +23,16 @@
 //!   segment-compression jobs submitted at commit
 //!   ([`executor::BatchExecutor::submit_flush`]) run on idle workers and
 //!   are joined one sweep later ([`executor::BatchExecutor::join_flush`]).
-//!   Bit-identical to sequential execution for every pool size;
-//!   [`executor::ExecMode`] selects between them.
+//!   A third plane, [`executor::ExecMode::Pipelined`], shards the *layers*
+//!   instead of the batch: contiguous layer ranges become pipeline stages
+//!   (`GEAR_PIPELINE_STAGES`, default one per worker), each request's
+//!   hidden state streams stage-to-stage through a counter-guarded
+//!   hand-off, and stage `s` runs request `i` while stage `s+1` runs
+//!   request `i−1` — so decode parallelizes even at batch = 1, and each
+//!   stage services flush jobs for its own layers (cache locality the
+//!   batch split can't offer). Bit-identical to sequential execution for
+//!   every pool size and stage count; [`executor::ExecMode`] selects
+//!   between them.
 //! * [`engine`] — the composition: **emit → reserve → prefill chunks →
 //!   decode batch → join/submit flushes → commit** sweeps over a
 //!   byte-budgeted cache pool. The reserve phase pre-books each request's
@@ -47,10 +55,12 @@
 //! * [`server`] — a minimal TCP line-protocol front-end.
 //!
 //! The full concurrency contract — which phase may observe which cache
-//! state, and why the schedule is bit-identical across exec modes and pool
-//! sizes — is documented in `docs/ARCHITECTURE.md`. Later PRs extend the
-//! execution plane without touching policy: shard-per-layer execution
-//! replaces the chunk split inside [`executor::BatchExecutor`].
+//! state, and why the schedule is bit-identical across exec modes, pool
+//! sizes, and pipeline stage counts — is documented in
+//! `docs/ARCHITECTURE.md`. The execution plane has grown without ever
+//! touching policy: PR 1 cut the executor seam, PR 3 made the pool
+//! persistent, PR 4 detached the flush lane, and this PR added the
+//! layer-sharded pipeline plane behind the same `run_into` entry point.
 
 pub mod device_model;
 pub mod engine;

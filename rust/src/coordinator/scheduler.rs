@@ -172,13 +172,19 @@ impl Scheduler {
         metrics: &mut EngineMetrics,
     ) {
         while active.len() < self.cfg.max_batch {
-            let Some((req, enq, preemptions)) = self.waiting.front().cloned() else { break };
-            let est = self.estimate_bytes(model, req.prompt.len(), req.max_new_tokens);
+            // Estimate from a borrow of the queue head — the request (and
+            // its whole prompt vector) is popped only once admission or
+            // OOM-rejection is certain, so a failed attempt costs two
+            // scalar reads, not a `GenRequest` clone.
+            let Some((head, _, _)) = self.waiting.front() else { break };
+            let (prompt_len, max_new) = (head.prompt.len(), head.max_new_tokens);
+            let est = self.estimate_bytes(model, prompt_len, max_new);
             if !self.budget.try_reserve(est) {
                 // Can it ever fit? If nothing is active and it still fails,
                 // reject rather than deadlock.
                 if active.is_empty() {
-                    self.waiting.pop_front();
+                    let (req, enq, preemptions) =
+                        self.waiting.pop_front().expect("peeked head vanished");
                     metrics.requests_oom += 1;
                     finished.push(GenResult {
                         id: req.id,
@@ -193,7 +199,8 @@ impl Scheduler {
                 }
                 break;
             }
-            self.waiting.pop_front();
+            let (req, enq, preemptions) =
+                self.waiting.pop_front().expect("peeked head vanished");
 
             assert!(!req.prompt.is_empty(), "empty prompt");
             let c = model.config();
@@ -222,21 +229,24 @@ impl Scheduler {
         }
     }
 
-    /// Preempt the youngest active request (highest `started_at`): release
-    /// everything it holds (steady reservation + sweep headroom) and
-    /// requeue it at the front. A half-prefilled victim needs no unwinding:
-    /// its cache is still empty (prefill commits atomically) and the
-    /// in-flight state drops with it — recompute preemption restarts the
-    /// prefill from scratch on re-admission. If it was the *only* active
-    /// request it can never fit and finishes as `OutOfMemory` (avoids a
-    /// preempt/re-admit livelock).
+    /// Preempt the youngest active request — the one with the highest
+    /// admission `serial`, which is clock-independent: requests admitted in
+    /// the same `try_admit` pass can tie on a coarse monotonic `started_at`
+    /// clock, and a timing-dependent victim would break the bit-identical
+    /// schedule contract. Release everything the victim holds (steady
+    /// reservation + sweep headroom) and requeue it at the front. A
+    /// half-prefilled victim needs no unwinding: its cache is still empty
+    /// (prefill commits atomically) and the in-flight state drops with it —
+    /// recompute preemption restarts the prefill from scratch on
+    /// re-admission. If it was the *only* active request it can never fit
+    /// and finishes as `OutOfMemory` (avoids a preempt/re-admit livelock).
     pub fn preempt_youngest(
         &mut self,
         active: &mut Vec<ActiveRequest>,
         finished: &mut Vec<GenResult>,
         metrics: &mut EngineMetrics,
     ) {
-        if let Some(idx) = (0..active.len()).max_by_key(|&i| active[i].started_at) {
+        if let Some(idx) = (0..active.len()).max_by_key(|&i| active[i].serial) {
             let a = active.swap_remove(idx);
             self.budget.release(a.reserved + a.headroom);
             if active.is_empty() {
@@ -248,5 +258,88 @@ impl Scheduler {
             let (req, enq, preemptions) = (a.req, a.enqueued_at, a.preemptions + 1);
             self.requeue_front(req, enq, preemptions);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::{Model, ModelWeights};
+
+    fn tiny_model() -> Model {
+        let cfg = ModelConfig { vocab: 13, d_model: 32, n_layers: 2, n_heads: 4, max_seq: 64 };
+        Model::new(ModelWeights::random(cfg, 3))
+    }
+
+    /// Requests admitted in one `try_admit` pass can receive identical
+    /// `started_at` values from a coarse monotonic clock; the preemption
+    /// victim must therefore be chosen by admission serial, never by
+    /// wall-clock age.
+    #[test]
+    fn preempt_victim_keyed_on_serial_not_clock() {
+        let model = tiny_model();
+        let cfg = EngineConfig::new(CacheSpec::Fp16).with_max_batch(8);
+        let mut sched = Scheduler::new(cfg);
+        let (mut active, mut finished) = (Vec::new(), Vec::new());
+        let mut metrics = EngineMetrics::default();
+        for i in 0..4 {
+            sched.submit(GenRequest::greedy(i, vec![1, 2, 3], 4));
+        }
+        sched.try_admit(&model, &mut active, &mut finished, &mut metrics);
+        assert_eq!(active.len(), 4);
+        // Force the tie the clock can produce on its own: every candidate
+        // started at the same instant.
+        let t = active[0].started_at;
+        for a in active.iter_mut() {
+            a.started_at = t;
+        }
+        sched.preempt_youngest(&mut active, &mut finished, &mut metrics);
+        assert_eq!(active.len(), 3);
+        assert!(
+            active.iter().all(|a| a.serial != 3),
+            "victim must be the youngest admission (serial 3)"
+        );
+        assert_eq!(sched.waiting_len(), 1, "victim requeued at the front");
+        sched.preempt_youngest(&mut active, &mut finished, &mut metrics);
+        assert!(active.iter().all(|a| a.serial <= 1), "then serial 2");
+        assert_eq!(metrics.requests_preempted, 2);
+        assert!(finished.is_empty(), "preemption with survivors never OOM-finishes");
+    }
+
+    /// A failed admission attempt must leave the queue head untouched (no
+    /// pop, no reorder) so the request is retried verbatim once budget
+    /// frees up.
+    #[test]
+    fn failed_admission_keeps_queue_intact() {
+        let model = tiny_model();
+        // Tiny budget, but something active: admission fails without OOM.
+        let cfg = EngineConfig::new(CacheSpec::Fp16).with_budget(1).with_max_batch(8);
+        let mut sched = Scheduler::new(cfg);
+        let (mut active, mut finished) = (Vec::new(), Vec::new());
+        let mut metrics = EngineMetrics::default();
+        sched.submit(GenRequest::greedy(7, vec![1, 2, 3, 4], 4));
+        // Fake an occupant so the no-active OOM path is not taken.
+        active.push(ActiveRequest {
+            serial: 0,
+            req: GenRequest::greedy(0, vec![1], 1),
+            cache: RequestCache::new(&CacheSpec::Fp16, 2, 32, 4),
+            phase: ReqPhase::Decode,
+            reserved: 0,
+            headroom: 0,
+            output: Vec::new(),
+            next_token: 0,
+            pos: 0,
+            preemptions: 0,
+            rng: Rng::new(0),
+            enqueued_at: Instant::now(),
+            started_at: Instant::now(),
+            pending_flushes: Vec::new(),
+        });
+        sched.try_admit(&model, &mut active, &mut finished, &mut metrics);
+        assert_eq!(active.len(), 1, "nothing admitted under an exhausted budget");
+        assert_eq!(sched.waiting_len(), 1, "the head request still waits, unchanged");
+        assert_eq!(metrics.requests_oom, 0);
+        assert!(finished.is_empty());
     }
 }

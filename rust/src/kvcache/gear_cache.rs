@@ -36,6 +36,12 @@
 //! ones land would corrupt that order). The engine upholds the protocol by
 //! joining a request's outstanding jobs at its next commit *before*
 //! detaching new seals, so at most one job per layer is ever in flight.
+//!
+//! *Who* runs a detached job is invisible to this module: the work is a
+//! pure function of the snapshot, so any worker may service it. Under the
+//! engine's pipelined plane each flush is tagged with its layer index and
+//! preferentially drained by the pipeline stage that owns that layer —
+//! pure locality routing; the install/commit protocol above is unchanged.
 
 use crate::gear::compose::{compress, CompressedMatrix, GearConfig, Method};
 use crate::gear::size::SizeBreakdown;

@@ -29,12 +29,15 @@ impl Sampler {
     }
 }
 
-/// Index of the maximum logit (ties broken toward the lower id, so greedy
-/// decoding is fully deterministic).
+/// Index of the maximum logit under IEEE total order (ties broken toward
+/// the lower id, so greedy decoding is fully deterministic — even if a
+/// buggy forward pass produces NaNs, every process picks the same token
+/// rather than whichever index a `>` comparison happened to skip).
 pub fn argmax(logits: &[f32]) -> u32 {
+    debug_assert!(!logits.is_empty(), "argmax over empty logits");
     let mut best = 0usize;
     for (i, &v) in logits.iter().enumerate() {
-        if v > logits[best] {
+        if v.total_cmp(&logits[best]).is_gt() {
             best = i;
         }
     }
@@ -99,5 +102,37 @@ mod tests {
             let s = Sampler::TopK { k: 2, temperature: 1.0 }.sample(&logits, &mut rng);
             assert!(s <= 1, "sampled {s} outside top-2");
         }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "empty logits")]
+    fn argmax_empty_is_a_bug() {
+        argmax(&[]);
+    }
+
+    /// `top_k > vocab` degrades to plain temperature sampling over the full
+    /// support rather than panicking or truncating wrongly.
+    #[test]
+    fn top_k_larger_than_vocab_covers_support() {
+        let mut rng = Rng::new(4);
+        let logits = [1.0f32, 1.0, 1.0];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            let s = Sampler::TopK { k: 10, temperature: 1.0 }.sample(&logits, &mut rng);
+            seen[s as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "k > vocab must cover every token");
+    }
+
+    /// NaN logits get a fixed position in the IEEE total order (positive
+    /// NaN above every number), so even a poisoned forward pass yields the
+    /// same deterministic pick everywhere — never an index that depends on
+    /// how `>` comparisons short-circuited.
+    #[test]
+    fn argmax_nan_deterministic() {
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 1);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN, 0.0]), 0); // tie -> lower id
+        assert_eq!(argmax(&[-f32::NAN, 3.0, 1.0]), 1); // -NaN below numbers
     }
 }

@@ -25,6 +25,12 @@
 //! so batched decoding is bit-identical to the one-request-at-a-time path
 //! (the engine's golden test pins this).
 //!
+//! [`Model::decode_layer_range`] exposes the same per-layer loop over a
+//! contiguous layer range, for the executor's layer-sharded pipeline plane:
+//! stage boundaries only partition the loop, every layer still funnels
+//! through the shared `layer_forward`, so pipelined decode is bit-identical
+//! too.
+//!
 //! Decode appends go through [`LayerKv::append_deferred`]: a streaming
 //! buffer that reaches capacity is sealed for the engine's commit-point
 //! flush (run in parallel on the executor pool) instead of compressing
@@ -103,8 +109,10 @@ impl Model {
 
     /// Embed a single `token` at `pos` into `out` (`d_model` long) without
     /// allocating — the decode path's per-slot hidden states are pooled in
-    /// [`DecodeBufs`]. Value-identical to `embed(&[token], pos)`.
-    fn embed_token_into(&self, token: u32, pos: usize, out: &mut [f32]) {
+    /// [`DecodeBufs`]. Value-identical to `embed(&[token], pos)`. Exposed
+    /// crate-wide for the executor's pipeline plane, whose first stage
+    /// embeds on a pool worker.
+    pub(crate) fn embed_token_into(&self, token: u32, pos: usize, out: &mut [f32]) {
         let c = self.config();
         let t = token as usize;
         assert!(t < c.vocab, "token id {t} out of vocab");
@@ -365,6 +373,29 @@ impl Model {
         bufs.hidden = hidden;
     }
 
+    /// Advance one request's hidden state `x` through the contiguous layer
+    /// range starting at global layer `first_layer`, one cache layer per
+    /// model layer. This is the pipeline plane's per-stage entry point: a
+    /// full pass over `first_layer = 0` with all the cache's layers is
+    /// op-for-op the layer loop inside [`Self::decode_step_with`], so
+    /// splitting a decode step across stages cannot change a single float —
+    /// each layer still runs through the one shared `layer_forward`.
+    ///
+    /// `layers` must hold exactly the cache layers for model layers
+    /// `first_layer .. first_layer + layers.len()`.
+    pub fn decode_layer_range(
+        &self,
+        first_layer: usize,
+        layers: &mut [Box<dyn LayerKv>],
+        x: &mut [f32],
+        bufs: &mut DecodeBufs,
+    ) {
+        debug_assert!(first_layer + layers.len() <= self.weights.blocks.len());
+        for (off, layer) in layers.iter_mut().enumerate() {
+            self.layer_forward(first_layer + off, x, layer.as_mut(), bufs);
+        }
+    }
+
     /// One transformer block over a single request's hidden state `x`
     /// (d-long), reading/writing its KV cache layer. Shared by the
     /// sequential and batched decode paths — bit-identity between them
@@ -419,8 +450,9 @@ impl Model {
     }
 
     /// [`Self::finish_logits`] into a caller-pooled vector (resized to the
-    /// vocab, fully overwritten).
-    fn finish_logits_into(&self, x: &[f32], bufs: &mut DecodeBufs, out: &mut Vec<f32>) {
+    /// vocab, fully overwritten). Exposed crate-wide for the executor's
+    /// pipeline plane, whose last stage finishes logits on a pool worker.
+    pub(crate) fn finish_logits_into(&self, x: &[f32], bufs: &mut DecodeBufs, out: &mut Vec<f32>) {
         layernorm(x, &self.weights.lnf_g, &self.weights.lnf_b, 1e-5, &mut bufs.norm);
         out.resize(self.config().vocab, 0.0);
         gemv_t(&self.head_t, &bufs.norm, out);

@@ -1,9 +1,10 @@
-//! Golden equivalence tests for the persistent worker pool: every pool
-//! size must be *bit-identical* to the sequential reference — same token
-//! streams, same finish reasons, same preemption counts, same peak cache
-//! bytes — including through preemption, across many reuses of one pool,
-//! and with worker-side component timings folded back into the engine's
-//! breakdown.
+//! Golden equivalence tests for the parallel execution planes: every pool
+//! size of `ExecMode::Batched` *and* every stage count of
+//! `ExecMode::Pipelined` must be *bit-identical* to the sequential
+//! reference — same token streams, same finish reasons, same preemption
+//! counts, same peak cache bytes — including through preemption, across
+//! many reuses of one pool, and with worker-side component timings folded
+//! back into the engine's breakdown.
 
 use std::time::Duration;
 
@@ -34,6 +35,23 @@ fn make_engine(spec: CacheSpec, budget: usize, exec: ExecMode, pool: Option<usiz
     if let Some(p) = pool {
         cfg = cfg.with_pool_threads(p);
     }
+    Engine::new(tiny_model(), cfg)
+}
+
+/// Four layers so stage partitioning is non-trivial: stages {1, 2, 4} give
+/// layer ranges {[0,4)}, {[0,2) [2,4)}, and one layer per stage.
+fn deep_model() -> Model {
+    let cfg = ModelConfig { vocab: 13, d_model: 64, n_layers: 4, n_heads: 2, max_seq: 160 };
+    Model::new(ModelWeights::random(cfg, 11))
+}
+
+fn make_pipelined(spec: CacheSpec, budget: usize, stages: usize) -> Engine {
+    let cfg = EngineConfig::new(spec)
+        .with_budget(budget)
+        .with_max_batch(16)
+        .with_exec(ExecMode::Pipelined)
+        .with_pool_threads(4)
+        .with_pipeline_stages(stages);
     Engine::new(tiny_model(), cfg)
 }
 
@@ -194,4 +212,123 @@ fn worker_timings_fold_back() {
     assert!(e.metrics.flush_jobs > 0, "compressed decode run produced no deferred flushes");
     assert!(!e.metrics.step_latencies.is_empty(), "decode sweeps recorded no step latencies");
     assert!(e.metrics.step_p99() >= e.metrics.step_p50());
+}
+
+/// The pipeline plane at stage counts {1, 2, n_layers} reproduces the
+/// sequential reference exactly, for FP16 and both compressed specs. The
+/// tiny model has n_layers = 2, so stages = 2 is the one-layer-per-stage
+/// extreme; stages = 1 exercises the degenerate inline fallback.
+#[test]
+fn pipelined_stages_bit_identical() {
+    for spec in [CacheSpec::Fp16, CacheSpec::gear(4), CacheSpec::parse("kivi-2").unwrap()] {
+        let mut seq = make_engine(spec, usize::MAX, ExecMode::Sequential, None);
+        let reference = run_wave(&mut seq, 0, 12);
+        assert_eq!(reference.results.len(), 12);
+        for stages in [1, 2] {
+            let mut e = make_pipelined(spec, usize::MAX, stages);
+            let got = run_wave(&mut e, 0, 12);
+            assert_eq!(reference, got, "spec {} stages {stages}", spec.label());
+        }
+    }
+}
+
+/// Batch = 1 is the case the pipeline plane exists for — the batch plane's
+/// MIN_FANOUT gate runs it inline, the pipeline still spreads the layers
+/// across workers. A deeper 4-layer model pins the non-trivial partitions
+/// (stages 2 → two layers per stage) and the stage-count clamp (stages 8 →
+/// n_layers), and checks the per-stage timing plumbing fills one slot per
+/// stage.
+#[test]
+fn pipelined_batch_of_one_bit_identical() {
+    let spec = CacheSpec::gear(4);
+    let mk = |exec: ExecMode, stages: usize| {
+        let mut cfg = EngineConfig::new(spec).with_max_batch(16).with_exec(exec);
+        if exec == ExecMode::Pipelined {
+            cfg = cfg.with_pool_threads(4).with_pipeline_stages(stages);
+        }
+        Engine::new(deep_model(), cfg)
+    };
+    let mut seq = mk(ExecMode::Sequential, 1);
+    let reference = run_wave(&mut seq, 0, 1);
+    assert_eq!(reference.results.len(), 1);
+    for stages in [1, 2, 4, 8] {
+        let mut e = mk(ExecMode::Pipelined, stages);
+        let got = run_wave(&mut e, 0, 1);
+        assert_eq!(reference, got, "stages {stages}");
+        if stages >= 2 {
+            let expect = stages.min(4); // clamped to n_layers
+            assert_eq!(
+                e.metrics.stage_busy.len(),
+                expect,
+                "stages {stages}: stage timing slots"
+            );
+            let occ = e.metrics.stage_occupancy();
+            assert!(occ.iter().all(|&o| (0.0..=1.0).contains(&o)), "occupancy {occ:?}");
+        }
+    }
+}
+
+/// Preemption under pipelining: the same tight-budget scenario that pins
+/// the batch plane's preemption interleaving must also hold stage-for-stage
+/// — mid-pipeline preemption rolls back through the identical commit
+/// points, so the victim schedule and every survivor's tokens match the
+/// sequential reference bit-for-bit.
+#[test]
+fn preemption_under_pipeline_bit_identical() {
+    let spec = CacheSpec::Compressed {
+        method: gear_serve::gear::Method::GearL {
+            bits: 2,
+            backbone: gear_serve::gear::compose::Backbone::Kivi(16),
+            r: 4,
+        },
+        buffer: 2,
+        prefill_rank: 4,
+        decode_rank: 4,
+    };
+    let budget = 64 << 10;
+
+    let mut seq = make_engine(spec, budget, ExecMode::Sequential, None);
+    let reference = run_wave(&mut seq, 0, 12);
+    assert!(reference.requests_preempted > 0, "scenario failed to trigger preemption");
+
+    for stages in [1, 2] {
+        let mut e = make_pipelined(spec, budget, stages);
+        let got = run_wave(&mut e, 0, 12);
+        assert_eq!(reference, got, "stages {stages}");
+    }
+}
+
+/// The flush torture case on the pipeline plane: one-token buffers keep a
+/// compression job outstanding across every sweep, and non-final stages
+/// drain their own layers' jobs between passes. The submission schedule is
+/// fixed at commit points, so the job *count* — like everything else —
+/// must match the blocking sequential reference.
+#[test]
+fn pipelined_flush_locality_bit_identical() {
+    let spec = CacheSpec::Compressed {
+        method: gear_serve::gear::Method::GearL {
+            bits: 2,
+            backbone: gear_serve::gear::compose::Backbone::Kivi(16),
+            r: 4,
+        },
+        buffer: 1, // seal on every decode step
+        prefill_rank: 4,
+        decode_rank: 4,
+    };
+    let budget = 64 << 10;
+
+    let mut seq = make_engine(spec, budget, ExecMode::Sequential, None);
+    let reference = run_wave(&mut seq, 0, 12);
+    let ref_flush_jobs = seq.metrics.flush_jobs;
+    assert!(ref_flush_jobs > 0, "one-token buffers produced no flush jobs");
+
+    for stages in [1, 2] {
+        let mut e = make_pipelined(spec, budget, stages);
+        let got = run_wave(&mut e, 0, 12);
+        assert_eq!(reference, got, "stages {stages}");
+        assert_eq!(
+            e.metrics.flush_jobs, ref_flush_jobs,
+            "stages {stages}: flush submission schedule diverged from sequential"
+        );
+    }
 }
