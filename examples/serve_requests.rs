@@ -67,6 +67,39 @@ fn main() {
         println!();
     }
 
+    // A traced run: same engine, tracing on. Writes a Perfetto-loadable
+    // JSON (open at https://ui.perfetto.dev) plus the JSONL journal next
+    // to it, and folds the TraceSummary into the metrics — the same
+    // numbers the server's `metrics` verb reports as trace_* lines.
+    // `GEAR_TRACE=trace.json` does the same without touching code.
+    {
+        let trace_path = std::env::temp_dir().join("serve_requests_trace.json");
+        let cfg = EngineConfig::new(CacheSpec::gear(4)).with_trace(&trace_path);
+        let mut engine = Engine::new(Model::new(weights.clone()), cfg);
+        let set = tasks::generate_set(Task::KvRecall { pairs: 16 }, 8, 7);
+        for (i, inst) in set.iter().enumerate() {
+            engine.submit(
+                GenRequest::greedy(i as u64, tok.encode_with_bos(&inst.prompt), 56)
+                    .with_newline_stop(),
+            );
+        }
+        engine.run_to_completion();
+        if let Some(t) = engine.metrics.trace {
+            println!(
+                "traced run: {} events ({} logical), {} quality records, \
+                 {} B actual vs {} B predicted, max ‖X−X̂‖_F {:.4}",
+                t.events,
+                t.logical_events,
+                t.quality_records,
+                t.bytes_actual,
+                t.bytes_predicted,
+                t.max_err_fro
+            );
+            println!("trace written: {} (+ .jsonl journal)", trace_path.display());
+        }
+        println!();
+    }
+
     // One request through the XLA (AOT) backend to prove the full
     // three-layer path: JAX-authored -> HLO text -> PJRT in Rust.
     #[cfg(feature = "xla")]

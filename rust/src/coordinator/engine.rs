@@ -80,12 +80,14 @@
 //! buffer per in-flight (request, layer)) is the only transient the budget
 //! does not see.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::kvcache::CacheSpec;
 use crate::model::{Model, PrefillSlot};
+use crate::trace::{self, EventKind, FinishClass, Quality, SweepPhase, Tracer};
 
-use super::executor::{BatchExecutor, ExecMode};
+use super::executor::{BatchExecutor, ExecMode, FlushJoined};
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, GenRequest, GenResult};
 use super::scheduler::{ActiveRequest, ReqPhase, Scheduler};
@@ -120,6 +122,16 @@ pub struct EngineConfig {
     /// (`GEAR_PIPELINE_STAGES`, else one stage per pool worker). The token
     /// stream is bit-identical for every value (`tests/pool_golden.rs`).
     pub pipeline_stages: Option<usize>,
+    /// Trace export path: [`Tracer::export_files`] writes Perfetto JSON
+    /// here and the JSONL journal next to it after every
+    /// [`Engine::run_to_completion`]. `None` falls back to the
+    /// `GEAR_TRACE` environment variable at engine construction; tracing
+    /// stays fully disabled (no rings, no locks, one relaxed atomic load
+    /// on shared paths) when neither is set and `trace_capture` is off.
+    pub trace: Option<PathBuf>,
+    /// Capture trace events in memory without exporting files — the
+    /// golden tests read the logical stream via [`Engine::tracer`].
+    pub trace_capture: bool,
 }
 
 impl EngineConfig {
@@ -133,6 +145,8 @@ impl EngineConfig {
             prefill_chunk: 128,
             pool_threads: None,
             pipeline_stages: None,
+            trace: None,
+            trace_capture: false,
         }
     }
 
@@ -167,6 +181,21 @@ impl EngineConfig {
         self.pipeline_stages = Some(stages.max(1));
         self
     }
+
+    /// Enable tracing and export the run to `path` (Perfetto JSON; the
+    /// JSONL journal lands next to it with a `.jsonl` extension).
+    /// Equivalent to launching with `GEAR_TRACE=path`.
+    pub fn with_trace(mut self, path: impl Into<PathBuf>) -> Self {
+        self.trace = Some(path.into());
+        self
+    }
+
+    /// Enable in-memory trace capture without file export (see
+    /// [`Self::trace_capture`]).
+    pub fn with_trace_capture(mut self) -> Self {
+        self.trace_capture = true;
+        self
+    }
 }
 
 /// Synchronous serving engine: scheduler (policy) + batch executor
@@ -180,12 +209,22 @@ pub struct Engine {
     /// Pooled per-request logits vectors, reused across decode sweeps so a
     /// steady sweep performs no O(batch) allocation.
     logits_buf: Vec<Vec<f32>>,
+    /// The engine thread's trace collector; `None` leaves tracing fully
+    /// disabled (see [`crate::trace`] for the cost contract).
+    tracer: Option<Tracer>,
     pub metrics: EngineMetrics,
 }
 
 impl Engine {
     pub fn new(model: Model, cfg: EngineConfig) -> Engine {
-        let executor = BatchExecutor::new(&model, cfg.exec, cfg.pool_threads, cfg.pipeline_stages);
+        let trace_path = cfg.trace.clone().or_else(|| {
+            std::env::var_os("GEAR_TRACE").filter(|s| !s.is_empty()).map(PathBuf::from)
+        });
+        let tracer =
+            (cfg.trace_capture || trace_path.is_some()).then(|| Tracer::new(trace_path));
+        let mut executor =
+            BatchExecutor::new(&model, cfg.exec, cfg.pool_threads, cfg.pipeline_stages);
+        executor.set_trace(tracer.is_some());
         Engine {
             scheduler: Scheduler::new(cfg),
             executor,
@@ -193,6 +232,7 @@ impl Engine {
             active: Vec::new(),
             finished: Vec::new(),
             logits_buf: Vec::new(),
+            tracer,
             metrics: EngineMetrics::default(),
         }
     }
@@ -201,7 +241,18 @@ impl Engine {
         &self.model
     }
 
+    /// The engine's trace collector, when tracing is enabled
+    /// (`GEAR_TRACE`, [`EngineConfig::with_trace`], or
+    /// [`EngineConfig::with_trace_capture`]). The golden tests read the
+    /// deterministic logical stream through [`Tracer::logical`].
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
+    }
+
     pub fn submit(&mut self, req: GenRequest) {
+        if let Some(t) = &mut self.tracer {
+            t.emit(EventKind::Enqueue { req_id: req.id });
+        }
         self.scheduler.submit(req);
     }
 
@@ -247,7 +298,9 @@ impl Engine {
         }
 
         // Phase 2 — pre-reserve this sweep's worst-case byte growth.
+        let t_reserve = self.span_start();
         self.reserve_phase();
+        self.end_span(SweepPhase::Reserve, t_reserve);
 
         // Snapshot who decodes this sweep: requests whose prefill commits
         // in phase 3 join the decode set next sweep (their first token must
@@ -260,11 +313,26 @@ impl Engine {
             .collect();
 
         // Phase 3 — one round of prefill chunks.
+        let t_prefill = self.span_start();
         self.prefill_phase();
+        self.end_span(SweepPhase::Prefill, t_prefill);
 
         // Phase 4–6 — batched decode + flush commit point + commit.
         self.decode_phase(&decode_serials);
         produced
+    }
+
+    /// Start timestamp for an engine-thread [`EventKind::Phase`] span;
+    /// `None` (and therefore free) when tracing is off.
+    fn span_start(&self) -> Option<u64> {
+        self.tracer.as_ref().map(|_| trace::now_ns())
+    }
+
+    /// Close a phase span opened by [`Self::span_start`].
+    fn end_span(&mut self, phase: SweepPhase, start: Option<u64>) {
+        if let (Some(t), Some(s)) = (&mut self.tracer, start) {
+            t.emit_span(EventKind::Phase { phase }, s);
+        }
     }
 
     /// Reserve, per active request and *before* any model math, the bytes
@@ -288,10 +356,16 @@ impl Engine {
                 };
                 let held = a.reserved + a.headroom;
                 if need <= held {
+                    if let Some(t) = &mut self.tracer {
+                        t.emit(EventKind::Reserve { serial, bytes: need as u64 });
+                    }
                     break;
                 }
                 if self.scheduler.budget.try_reserve(need - held) {
                     self.active[i].headroom += need - held;
+                    if let Some(t) = &mut self.tracer {
+                        t.emit(EventKind::Reserve { serial, bytes: need as u64 });
+                    }
                     break;
                 }
                 // Budget exhausted: preempt the youngest and retry. Each
@@ -302,6 +376,7 @@ impl Engine {
                     &mut self.active,
                     &mut self.finished,
                     &mut self.metrics,
+                    &mut self.tracer,
                 );
             }
         }
@@ -326,6 +401,12 @@ impl Engine {
                     if end == req.prompt.len() {
                         completed.push(*serial);
                     }
+                    if let Some(t) = &mut self.tracer {
+                        t.emit(EventKind::PrefillChunk {
+                            serial: *serial,
+                            rows: (end - done) as u32,
+                        });
+                    }
                     slots.push(PrefillSlot { tokens: &req.prompt[done..end], state });
                 }
             }
@@ -335,20 +416,60 @@ impl Engine {
             self.executor.run_prefill(&self.model, &mut slots);
             slots.len()
         };
+        if let Some(t) = &mut self.tracer {
+            t.fold(self.executor.take_trace_events());
+        }
         self.metrics.prefill_chunks += n_chunks;
 
         for serial in completed {
             // A commit-time settle below can preempt other still-prefilling
             // requests; re-find each by serial and skip the evicted.
             let Some(i) = self.active.iter().position(|a| a.serial == serial) else { continue };
+            let traced = self.tracer.is_some();
+            if traced {
+                // Scope the quality probe to this attributable compression;
+                // anything already staged has lost its identity — count it
+                // dropped rather than mislabel it.
+                let stale = trace::take_staged_quality().len() as u64;
+                if let Some(t) = &mut self.tracer {
+                    t.note_quality_dropped(stale);
+                }
+                trace::set_quality_capture(true);
+            }
             let a = &mut self.active[i];
             let phase = std::mem::replace(&mut a.phase, ReqPhase::Decode);
             let ReqPhase::Prefill(state) = phase else { unreachable!() };
             debug_assert!(state.is_complete());
             let last_logits = self.model.commit_prefill(state, &mut a.cache);
+            if traced {
+                trace::set_quality_capture(false);
+            }
             a.next_token = a.req.sampler.sample(&last_logits, &mut a.rng);
             a.pos = a.req.prompt.len();
             self.metrics.prompt_tokens += a.pos;
+            if traced {
+                // `commit_prefill` compresses K then V per layer, layers in
+                // order, so record 2l is layer l's Key and 2l+1 its Value.
+                // Anything else (e.g. an FP16 cache stages nothing) is not
+                // attributable — drop, never guess.
+                let staged = trace::take_staged_quality();
+                let n_layers = self.model.config().n_layers;
+                if let Some(t) = &mut self.tracer {
+                    if staged.len() == 2 * n_layers {
+                        for (j, q) in staged.iter().enumerate() {
+                            t.emit(EventKind::Quality(Quality::from_staged(
+                                q,
+                                serial,
+                                (j / 2) as u32,
+                                true,
+                            )));
+                        }
+                    } else {
+                        t.note_quality_dropped(staged.len() as u64);
+                    }
+                    t.emit(EventKind::FirstToken { serial });
+                }
+            }
             self.settle_reservation(serial);
         }
         self.metrics.prefill += t0.elapsed();
@@ -362,6 +483,7 @@ impl Engine {
     /// serial (caller-chosen `req.id`s need not be unique; serials are).
     fn decode_phase(&mut self, serials: &[u64]) {
         let t_step = Instant::now();
+        let t_decode = self.span_start();
         let mut logits = std::mem::take(&mut self.logits_buf);
         let present: Vec<u64> = {
             let mut refs: Vec<&mut ActiveRequest> = self
@@ -374,9 +496,16 @@ impl Engine {
                 return;
             }
             let present = refs.iter().map(|a| a.serial).collect();
+            if let Some(t) = &mut self.tracer {
+                t.emit(EventKind::DecodeStep { n_seqs: refs.len() as u32 });
+            }
             self.executor.run_into(&self.model, &mut refs, &mut logits);
             present
         };
+        if let Some(t) = &mut self.tracer {
+            t.fold(self.executor.take_trace_events());
+        }
+        self.end_span(SweepPhase::Decode, t_decode);
         // Pipelined sweeps report per-stage busy/bubble; fold them into
         // the run totals (no-op for the other planes).
         self.metrics.record_stage_times(self.executor.stage_times());
@@ -389,6 +518,7 @@ impl Engine {
         // segments must land. Joins run in fixed request-serial × layer
         // order and each job is a pure function of its sealed rows, so
         // pool size and timing cannot change bytes, peaks, or tokens.
+        let t_flush = self.span_start();
         self.join_flushes(&present);
 
         // Submit half: detach every streaming buffer this decode step
@@ -397,6 +527,7 @@ impl Engine {
         // than decode/prefill dispatches) and are joined at these
         // requests' next commit, right here, one sweep from now.
         self.submit_flushes(&present);
+        self.end_span(SweepPhase::Flush, t_flush);
 
         for (lg, &serial) in logits.iter().zip(&present) {
             let Some(i) = self.active.iter().position(|a| a.serial == serial) else { continue };
@@ -426,10 +557,31 @@ impl Engine {
             }
             let tickets = std::mem::take(&mut self.active[i].pending_flushes);
             for (layer_idx, ticket) in tickets {
-                let (result, stalled, hidden) = self.executor.join_flush(ticket);
+                let FlushJoined { result, stalled, hidden, obs } =
+                    self.executor.join_flush(ticket);
                 self.active[i].cache.layers[layer_idx].install_flush(result);
                 self.metrics.flush_stall += stalled;
                 self.metrics.flush_overlap_won += hidden;
+                if let Some(t) = &mut self.tracer {
+                    t.emit(EventKind::FlushJoin { serial, layer: layer_idx as u32 });
+                    if let Some(obs) = obs {
+                        // The run span keeps its worker attribution; the
+                        // quality records gain their (serial, layer)
+                        // identity here, at the deterministic join — so
+                        // the logical stream is mode-independent even
+                        // though who compressed the segment is not.
+                        t.note_quality_dropped(obs.stale);
+                        t.fold(vec![obs.run]);
+                        for q in &obs.quality {
+                            t.emit(EventKind::Quality(Quality::from_staged(
+                                q,
+                                serial,
+                                layer_idx as u32,
+                                false,
+                            )));
+                        }
+                    }
+                }
             }
         }
     }
@@ -446,6 +598,11 @@ impl Engine {
                 let Some(work) = self.active[i].cache.layers[layer_idx].detach_flush() else {
                     continue;
                 };
+                if let Some(t) = &mut self.tracer {
+                    let (layer, rows) = (layer_idx as u32, work.rows() as u32);
+                    t.emit(EventKind::Seal { serial, layer, rows });
+                    t.emit(EventKind::FlushSubmit { serial, layer, rows });
+                }
                 let ticket = self.executor.submit_flush(work, layer_idx);
                 self.active[i].pending_flushes.push((layer_idx, ticket));
                 self.metrics.flush_jobs += 1;
@@ -484,6 +641,7 @@ impl Engine {
                 &mut self.active,
                 &mut self.finished,
                 &mut self.metrics,
+                &mut self.tracer,
             );
         }
     }
@@ -492,6 +650,18 @@ impl Engine {
         let a = self.active.swap_remove(idx);
         self.scheduler.budget.release(a.reserved + a.headroom);
         self.metrics.requests_finished += 1;
+        if let Some(t) = &mut self.tracer {
+            let reason = match finish {
+                FinishReason::Stop => FinishClass::Stop,
+                FinishReason::Length => FinishClass::Length,
+                FinishReason::OutOfMemory => FinishClass::Oom,
+            };
+            t.emit(EventKind::Finish {
+                serial: a.serial,
+                reason,
+                tokens: a.output.len() as u32,
+            });
+        }
         self.finished.push(a.into_result(finish));
     }
 
@@ -505,6 +675,7 @@ impl Engine {
             &mut self.active,
             &mut self.finished,
             &mut self.metrics,
+            &mut self.tracer,
         );
         if self.active.is_empty() {
             return 0;
@@ -528,6 +699,16 @@ impl Engine {
         self.metrics.peak_cache_bytes =
             self.metrics.peak_cache_bytes.max(self.scheduler.budget.peak());
         self.metrics.phases.merge(&crate::gear::take_phase_timings());
+        // Fold the trace into the metrics and (re-)export. The tracer
+        // accumulates across runs — enqueues can precede this call and a
+        // server engine loops here — so each export is a cumulative
+        // atomic rewrite, not an increment.
+        if let Some(t) = &mut self.tracer {
+            self.metrics.trace = Some(t.summary());
+            if let Err(e) = t.export_files() {
+                eprintln!("gear-serve: trace export failed: {e}");
+            }
+        }
         std::mem::take(&mut self.finished)
     }
 

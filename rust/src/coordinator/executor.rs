@@ -98,7 +98,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -107,6 +107,7 @@ use crate::kvcache::{FlushResult, FlushWork, LayerKv};
 use crate::model::config::ModelConfig;
 use crate::model::transformer::{DecodeBufs, DecodeSlot, PrefillSlot};
 use crate::model::Model;
+use crate::trace::{self, Event, EventKind, QualityStaged, Writer};
 use crate::util::timing::PhaseTimer;
 
 use super::scheduler::ActiveRequest;
@@ -149,9 +150,10 @@ enum FlushState {
     Queued(FlushWork),
     /// A worker claimed the work and is compressing.
     Running,
-    /// Finished: the result, the job's drained component timings, and its
-    /// compression wall time (for the overlap-won metric).
-    Done { result: FlushResult, timings: PhaseTimer, work_time: Duration },
+    /// Finished: the result, the job's drained component timings, its
+    /// compression wall time (for the overlap-won metric), and — on traced
+    /// runs — the flush-lane trace observation.
+    Done { result: FlushResult, timings: PhaseTimer, work_time: Duration, obs: Option<FlushObs> },
     /// Result consumed by [`BatchExecutor::join_flush`] (or the work was
     /// stolen by it); terminal.
     Taken,
@@ -182,11 +184,45 @@ pub struct FlushTicket {
     slot: Arc<FlushSlot>,
 }
 
+/// Trace observation of one flush-job run, carried through the job's slot
+/// from whichever thread compressed it to the engine's deterministic join
+/// (where the [`EventKind::FlushRun`] span and per-matrix
+/// [`EventKind::Quality`] records are folded into the journal).
+#[derive(Debug)]
+pub struct FlushObs {
+    /// The run span, attributed to the thread that compressed the job.
+    pub run: Event,
+    /// Staged quality records for the segment, K then V.
+    pub quality: Vec<QualityStaged>,
+    /// Stale records discarded before the run started. Always 0 in the
+    /// engine flow (quality capture is scoped to attributable
+    /// compressions); counted defensively so attribution bugs surface in
+    /// [`crate::trace::TraceSummary::quality_dropped`] instead of
+    /// mislabelling records.
+    pub stale: u64,
+}
+
+/// Everything [`BatchExecutor::join_flush`] returns for one joined job.
+pub struct FlushJoined {
+    /// The compressed segment.
+    pub result: FlushResult,
+    /// Wall time the join call itself blocked (engine-side stall).
+    pub stalled: Duration,
+    /// Compression wall time that completed off the engine's critical path
+    /// (the overlap win); zero when the engine stole and ran the job
+    /// inline.
+    pub hidden: Duration,
+    /// Trace observation of the run (traced runs only).
+    pub obs: Option<FlushObs>,
+}
+
 /// Run a queued flush job on a pool worker: claim the work (skipping if the
 /// engine already stole it), compress, publish the result, and wake any
 /// joiner. Runs outside the pool-control lock so sync dispatches and other
-/// flushes proceed concurrently.
-fn service_flush(slot: &FlushSlot) {
+/// flushes proceed concurrently. With `traced` set, the compression runs
+/// under a quality-capture scope and its span + staged quality ride the
+/// slot to the join.
+fn service_flush(slot: &FlushSlot, traced: bool) {
     let work = {
         let mut st = slot.state.lock().unwrap();
         match std::mem::replace(&mut *st, FlushState::Running) {
@@ -199,12 +235,30 @@ fn service_flush(slot: &FlushSlot) {
         }
     };
     let t0 = Instant::now();
+    let stale = if traced { trace::take_staged_quality().len() as u64 } else { 0 };
+    if traced {
+        trace::set_quality_capture(true);
+    }
+    let span_start = if traced { trace::now_ns() } else { 0 };
     let res = catch_unwind(AssertUnwindSafe(|| work.compress()));
+    if traced {
+        trace::set_quality_capture(false);
+    }
+    let obs = traced.then(|| FlushObs {
+        run: Event {
+            t_ns: span_start,
+            dur_ns: trace::now_ns().saturating_sub(span_start),
+            writer: trace::thread_writer(),
+            kind: EventKind::FlushRun { layer: slot.layer as u32 },
+        },
+        quality: trace::take_staged_quality(),
+        stale,
+    });
     let timings = crate::gear::take_phase_timings();
     let work_time = t0.elapsed();
     let mut st = slot.state.lock().unwrap();
     *st = match res {
-        Ok(result) => FlushState::Done { result, timings, work_time },
+        Ok(result) => FlushState::Done { result, timings, work_time, obs },
         Err(p) => FlushState::Panicked(p),
     };
     slot.cv.notify_all();
@@ -390,6 +444,11 @@ struct PoolShared {
     ctrl: Mutex<PoolCtrl>,
     work_cv: Condvar,
     done_cv: Condvar,
+    /// Whether this executor's current run is traced. Workers read it with
+    /// one relaxed load before servicing a queued flush — the only tracing
+    /// cost on an untraced worker's path (sync dispatches read the
+    /// executor-side bool instead, captured into each job closure).
+    trace_on: AtomicBool,
 }
 
 /// A fixed-size persistent worker pool. Threads are spawned once, park on a
@@ -431,6 +490,7 @@ impl WorkerPool {
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            trace_on: AtomicBool::new(false),
         });
         let handles = (0..threads.max(1))
             .map(|i| {
@@ -441,7 +501,7 @@ impl WorkerPool {
                 LIVE_WORKERS.fetch_add(1, Ordering::SeqCst);
                 std::thread::Builder::new()
                     .name(format!("gear-exec-{i}"))
-                    .spawn(move || worker_main(shared, cfg))
+                    .spawn(move || worker_main(shared, cfg, i))
                     .expect("spawn pool worker")
             })
             .collect();
@@ -497,7 +557,10 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_main(shared: Arc<PoolShared>, cfg: ModelConfig) {
+fn worker_main(shared: Arc<PoolShared>, cfg: ModelConfig, idx: usize) {
+    // Declare this thread's trace track once; allocates nothing — the
+    // thread-local event ring only materializes if a traced job emits.
+    trace::set_thread_writer(Writer::Worker(idx as u16));
     // The matching increment happens on the spawning thread (see
     // `WorkerPool::new`); the guard decrements on any exit path, and
     // `Drop for WorkerPool` joins the thread *after* that runs — so once
@@ -558,7 +621,10 @@ fn worker_main(shared: Arc<PoolShared>, cfg: ModelConfig) {
             }
             // Flush jobs publish into their own slot (panics included) and
             // never touch the sync batch counters.
-            Work::Flush(slot) => service_flush(&slot),
+            Work::Flush(slot) => {
+                let traced = shared.trace_on.load(Ordering::Relaxed);
+                service_flush(&slot, traced);
+            }
         }
     }
 }
@@ -570,6 +636,8 @@ struct DecodeChunk<'a, 'b> {
     reqs: &'a mut [&'b mut ActiveRequest],
     outs: &'a mut [Vec<f32>],
     timer: &'a mut PhaseTimer,
+    /// Slot for the worker's drained trace events (traced runs only).
+    trace: &'a mut Vec<Event>,
 }
 
 /// One pipeline stage of a decode sweep, handed to a pool worker: a
@@ -587,6 +655,8 @@ struct StageTask<'a> {
     timer: &'a mut PhaseTimer,
     /// `(busy, bubble)` output slot: compute time vs hand-off wait time.
     times: &'a mut (Duration, Duration),
+    /// Slot for the stage's drained trace events (traced runs only).
+    trace: &'a mut Vec<Event>,
 }
 
 /// Executes batched decode steps, prefill rounds, and asynchronous flush
@@ -611,6 +681,16 @@ pub struct BatchExecutor {
     /// Per-stage `(busy, bubble)` of the most recent pipelined dispatch;
     /// the engine folds these into [`super::metrics::EngineMetrics`].
     stage_times: Vec<(Duration, Duration)>,
+    /// Tracing enabled for dispatches from this executor. Cached as a
+    /// plain bool so the sync hot path does not even pay an atomic load;
+    /// mirrored into [`PoolShared::trace_on`] for the flush lane.
+    trace_on: bool,
+    /// Per-chunk / per-stage event slots, reused across dispatches and
+    /// folded into `pending_events` in chunk order after each batch.
+    chunk_trace: Vec<Vec<Event>>,
+    /// Worker/stage events folded from dispatches since the engine last
+    /// drained them via [`Self::take_trace_events`].
+    pending_events: Vec<Event>,
 }
 
 impl BatchExecutor {
@@ -651,7 +731,29 @@ impl BatchExecutor {
             timers: Vec::new(),
             pipe_hidden: Vec::new(),
             stage_times: Vec::new(),
+            trace_on: false,
+            chunk_trace: Vec::new(),
+            pending_events: Vec::new(),
         }
+    }
+
+    /// Enable or disable tracing for subsequent dispatches. Sets this
+    /// executor's cached flag (read once per dispatch, no atomics on the
+    /// sync path) and the pool's shared flag (one relaxed load per
+    /// serviced flush job).
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace_on = on;
+        if let Some(pool) = &self.pool {
+            pool.shared.trace_on.store(on, Ordering::Relaxed);
+        }
+    }
+
+    /// Drain worker/stage events folded from dispatches since the last
+    /// call. The engine folds these into its tracer at fixed points
+    /// (after each decode/prefill dispatch), keeping journal order
+    /// deterministic.
+    pub fn take_trace_events(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.pending_events)
     }
 
     pub fn mode(&self) -> ExecMode {
@@ -696,14 +798,24 @@ impl BatchExecutor {
             self.run_pipelined(model, batch, out);
             return;
         }
+        let traced = self.trace_on;
         let pool = match &self.pool {
             Some(pool) if b >= MIN_FANOUT => pool,
             _ => {
+                let span_start = if traced { trace::now_ns() } else { 0 };
                 let mut slots: Vec<DecodeSlot> = batch
                     .iter_mut()
                     .map(|a| DecodeSlot { token: a.next_token, pos: a.pos, cache: &mut a.cache })
                     .collect();
                 model.decode_batch_into(&mut slots, &mut self.bufs, out);
+                if traced {
+                    self.pending_events.push(Event {
+                        t_ns: span_start,
+                        dur_ns: trace::now_ns().saturating_sub(span_start),
+                        writer: Writer::Engine,
+                        kind: EventKind::Chunk { n_seqs: b as u32 },
+                    });
+                }
                 return;
             }
         };
@@ -715,24 +827,37 @@ impl BatchExecutor {
         let n_chunks = b.div_ceil(chunk);
         self.timers.clear();
         self.timers.resize_with(n_chunks, PhaseTimer::new);
+        self.chunk_trace.clear();
+        self.chunk_trace.resize_with(n_chunks, Vec::new);
         let tasks: Vec<Mutex<Option<DecodeChunk>>> = batch
             .chunks_mut(chunk)
             .zip(out.chunks_mut(chunk))
-            .zip(self.timers.iter_mut())
-            .map(|((reqs, outs), timer)| Mutex::new(Some(DecodeChunk { reqs, outs, timer })))
+            .zip(self.timers.iter_mut().zip(self.chunk_trace.iter_mut()))
+            .map(|((reqs, outs), (timer, trace))| {
+                Mutex::new(Some(DecodeChunk { reqs, outs, timer, trace }))
+            })
             .collect();
         pool.run_jobs(tasks.len(), &|i, bufs| {
-            let DecodeChunk { reqs, outs, timer } =
+            let DecodeChunk { reqs, outs, timer, trace: tr } =
                 tasks[i].lock().unwrap().take().expect("decode chunk claimed twice");
+            let span_start = if traced { trace::now_ns() } else { 0 };
+            let n_seqs = reqs.len() as u32;
             let mut slots: Vec<DecodeSlot> = reqs
                 .iter_mut()
                 .map(|a| DecodeSlot { token: a.next_token, pos: a.pos, cache: &mut a.cache })
                 .collect();
             model.decode_batch_into(&mut slots, bufs, outs);
             *timer = crate::gear::take_phase_timings();
+            if traced {
+                trace::emit_thread_span(None, EventKind::Chunk { n_seqs }, span_start);
+                *tr = trace::drain_thread();
+            }
         });
         for t in &self.timers {
             crate::gear::merge_phase_timings(t);
+        }
+        for t in &mut self.chunk_trace {
+            self.pending_events.append(t);
         }
     }
 
@@ -752,14 +877,24 @@ impl BatchExecutor {
         let b = batch.len();
         let c = *model.config();
         let stages = self.stages.min(c.n_layers).max(1);
+        let traced = self.trace_on;
         let pool = match &self.pool {
             Some(pool) if stages > 1 => pool,
             _ => {
+                let span_start = if traced { trace::now_ns() } else { 0 };
                 let mut slots: Vec<DecodeSlot> = batch
                     .iter_mut()
                     .map(|a| DecodeSlot { token: a.next_token, pos: a.pos, cache: &mut a.cache })
                     .collect();
                 model.decode_batch_into(&mut slots, &mut self.bufs, out);
+                if traced {
+                    self.pending_events.push(Event {
+                        t_ns: span_start,
+                        dur_ns: trace::now_ns().saturating_sub(span_start),
+                        writer: Writer::Engine,
+                        kind: EventKind::Chunk { n_seqs: b as u32 },
+                    });
+                }
                 return;
             }
         };
@@ -796,15 +931,17 @@ impl BatchExecutor {
         self.timers.clear();
         self.timers.resize_with(stages, PhaseTimer::new);
         self.stage_times.resize(stages, (Duration::ZERO, Duration::ZERO));
+        self.chunk_trace.clear();
+        self.chunk_trace.resize_with(stages, Vec::new);
 
         let ctrl = PipeCtrl::new(stages);
         let mut outs = Some(&mut out[..b]);
         let tasks: Vec<Mutex<Option<StageTask>>> = stage_layers
             .into_iter()
             .zip(self.timers.iter_mut())
-            .zip(self.stage_times.iter_mut())
+            .zip(self.stage_times.iter_mut().zip(self.chunk_trace.iter_mut()))
             .enumerate()
-            .map(|(s, ((layers, timer), times))| {
+            .map(|(s, ((layers, timer), (times, trace)))| {
                 Mutex::new(Some(StageTask {
                     stage: s,
                     range: ranges[s],
@@ -812,14 +949,16 @@ impl BatchExecutor {
                     outs: if s + 1 == stages { outs.take() } else { None },
                     timer,
                     times,
+                    trace,
                 }))
             })
             .collect();
 
         let shared = &pool.shared;
         pool.run_jobs(stages, &|s, bufs| {
-            let StageTask { stage, range, mut layers, mut outs, timer, times } =
+            let StageTask { stage, range, mut layers, mut outs, timer, times, trace: tr } =
                 tasks[s].lock().unwrap().take().expect("pipeline stage claimed twice");
+            let span_start = if traced { trace::now_ns() } else { 0 };
             // On unwind, mark this stage complete so downstream stages
             // terminate instead of waiting forever; their garbage outputs
             // are discarded when `run_jobs` re-raises the panic.
@@ -846,6 +985,29 @@ impl BatchExecutor {
             *timer = crate::gear::take_phase_timings();
             let wall = t0.elapsed();
             *times = (wall.saturating_sub(waited), waited);
+            if traced {
+                // Two spans per stage per sweep: aggregate bubble (upstream
+                // hand-off waits) then aggregate busy. Magnitudes are exact;
+                // the placement (bubble-then-busy) is a summary — the real
+                // waits interleave per request.
+                let w = Writer::Stage(stage as u16);
+                let st16 = stage as u16;
+                let waited_ns = waited.as_nanos() as u64;
+                let end = trace::now_ns();
+                trace::emit_thread_at(
+                    Some(w),
+                    EventKind::StageSpan { stage: st16, busy: false },
+                    span_start,
+                    waited_ns,
+                );
+                trace::emit_thread_at(
+                    Some(w),
+                    EventKind::StageSpan { stage: st16, busy: true },
+                    span_start.saturating_add(waited_ns),
+                    end.saturating_sub(span_start).saturating_sub(waited_ns),
+                );
+                *tr = trace::drain_thread();
+            }
             // Locality drain: while later stages are still draining the
             // pipeline tail, compress any queued flush whose layer this
             // stage owns — on the worker whose caches those are. Strictly
@@ -870,12 +1032,15 @@ impl BatchExecutor {
                             None => break,
                         }
                     };
-                    service_flush(&slot);
+                    service_flush(&slot, traced);
                 }
             }
         });
         for t in &self.timers {
             crate::gear::merge_phase_timings(t);
+        }
+        for t in &mut self.chunk_trace {
+            self.pending_events.append(t);
         }
     }
 
@@ -892,20 +1057,46 @@ impl BatchExecutor {
         if b == 0 {
             return;
         }
+        let traced = self.trace_on;
         let pool = match &self.pool {
             Some(pool) if b >= MIN_PREFILL_FANOUT => pool,
             _ => {
+                let span_start = if traced { trace::now_ns() } else { 0 };
                 model.prefill_chunk_batch(slots, &mut self.bufs);
+                if traced {
+                    self.pending_events.push(Event {
+                        t_ns: span_start,
+                        dur_ns: trace::now_ns().saturating_sub(span_start),
+                        writer: Writer::Engine,
+                        kind: EventKind::Chunk { n_seqs: b as u32 },
+                    });
+                }
                 return;
             }
         };
         let chunk = b.div_ceil(self.workers.min(b));
-        let tasks: Vec<Mutex<Option<&mut [PrefillSlot]>>> =
-            slots.chunks_mut(chunk).map(|part| Mutex::new(Some(part))).collect();
+        let n_chunks = b.div_ceil(chunk);
+        self.chunk_trace.clear();
+        self.chunk_trace.resize_with(n_chunks, Vec::new);
+        let tasks: Vec<Mutex<Option<(&mut [PrefillSlot], &mut Vec<Event>)>>> = slots
+            .chunks_mut(chunk)
+            .zip(self.chunk_trace.iter_mut())
+            .map(|(part, tr)| Mutex::new(Some((part, tr))))
+            .collect();
         pool.run_jobs(tasks.len(), &|i, bufs| {
-            let part = tasks[i].lock().unwrap().take().expect("prefill chunk claimed twice");
+            let (part, tr) =
+                tasks[i].lock().unwrap().take().expect("prefill chunk claimed twice");
+            let span_start = if traced { trace::now_ns() } else { 0 };
+            let n_seqs = part.len() as u32;
             model.prefill_chunk_batch(part, bufs);
+            if traced {
+                trace::emit_thread_span(None, EventKind::Chunk { n_seqs }, span_start);
+                *tr = trace::drain_thread();
+            }
         });
+        for t in &mut self.chunk_trace {
+            self.pending_events.append(t);
+        }
     }
 
     /// Submit one detached flush job for asynchronous compression and
@@ -939,10 +1130,11 @@ impl BatchExecutor {
     /// work is waited on, finished work returns immediately. Worker-side
     /// component timings fold into the calling thread's accumulator here —
     /// at the engine's deterministic join order — and a worker-side panic
-    /// re-raises here. Returns `(result, stalled, hidden)`: wall time this
-    /// call blocked, and compression wall time that completed off the
-    /// caller's critical path (the overlap win).
-    pub fn join_flush(&mut self, ticket: FlushTicket) -> (FlushResult, Duration, Duration) {
+    /// re-raises here. On traced runs the returned [`FlushObs`] carries
+    /// the run span and the segment's staged quality records, whichever
+    /// thread compressed it.
+    pub fn join_flush(&mut self, ticket: FlushTicket) -> FlushJoined {
+        let traced = self.trace_on;
         let t0 = Instant::now();
         let mut st = ticket.slot.state.lock().unwrap();
         loop {
@@ -952,17 +1144,46 @@ impl BatchExecutor {
                     // component timings land directly in this thread's
                     // accumulator, exactly like the old blocking flush.
                     drop(st);
+                    let stale =
+                        if traced { trace::take_staged_quality().len() as u64 } else { 0 };
+                    if traced {
+                        trace::set_quality_capture(true);
+                    }
+                    let span_start = if traced { trace::now_ns() } else { 0 };
                     let result = work.compress();
-                    return (result, t0.elapsed(), Duration::ZERO);
+                    if traced {
+                        trace::set_quality_capture(false);
+                    }
+                    let obs = traced.then(|| FlushObs {
+                        run: Event {
+                            t_ns: span_start,
+                            dur_ns: trace::now_ns().saturating_sub(span_start),
+                            writer: Writer::Engine,
+                            kind: EventKind::FlushRun { layer: ticket.slot.layer as u32 },
+                        },
+                        quality: trace::take_staged_quality(),
+                        stale,
+                    });
+                    return FlushJoined {
+                        result,
+                        stalled: t0.elapsed(),
+                        hidden: Duration::ZERO,
+                        obs,
+                    };
                 }
                 FlushState::Running => {
                     *st = FlushState::Running;
                     st = ticket.slot.cv.wait(st).unwrap();
                 }
-                FlushState::Done { result, timings, work_time } => {
+                FlushState::Done { result, timings, work_time, obs } => {
                     crate::gear::merge_phase_timings(&timings);
                     let stalled = t0.elapsed();
-                    return (result, stalled, work_time.saturating_sub(stalled));
+                    return FlushJoined {
+                        result,
+                        stalled,
+                        hidden: work_time.saturating_sub(stalled),
+                        obs,
+                    };
                 }
                 FlushState::Taken => unreachable!("flush ticket joined twice"),
                 FlushState::Panicked(p) => resume_unwind(p),

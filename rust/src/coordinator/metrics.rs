@@ -1,8 +1,10 @@
 //! Engine metrics: throughput, latency, memory, and the GEAR component
 //! time breakdown (reproduces Fig 3a).
 
+use std::fmt::Write as _;
 use std::time::Duration;
 
+use crate::trace::TraceSummary;
 use crate::util::timing::PhaseTimer;
 
 /// Aggregated over an engine run.
@@ -55,6 +57,10 @@ pub struct EngineMetrics {
     /// upstream hand-off. `stage_bubble[0]` is always zero (stage 0 has no
     /// upstream).
     pub stage_bubble: Vec<Duration>,
+    /// Aggregated trace summary, present when the engine ran with tracing
+    /// enabled (see [`crate::trace::Tracer`]). Folded in at the end of
+    /// `run_to_completion` and rendered by [`Self::render_text`].
+    pub trace: Option<TraceSummary>,
 }
 
 impl EngineMetrics {
@@ -71,16 +77,20 @@ impl EngineMetrics {
     }
 
     /// Step-latency percentile over the recorded decode sweeps
-    /// (nearest-rank on the sorted samples; `q` in `[0, 1]`). Zero when no
-    /// sweep decoded.
+    /// (nearest-rank on the sorted samples; `q` clamped to `[0, 1]`, with
+    /// non-finite `q` treated as 1.0). Zero when no sweep decoded. The
+    /// boundaries are exact: `q = 0.0` returns the minimum sample and
+    /// `q = 1.0` the maximum, including for a single-sample vector.
     pub fn step_latency_pct(&self, q: f64) -> Duration {
-        if self.step_latencies.is_empty() {
+        let n = self.step_latencies.len();
+        if n == 0 {
             return Duration::ZERO;
         }
         let mut v = self.step_latencies.clone();
         v.sort_unstable();
-        let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-        v[idx]
+        let q = if q.is_finite() { q.clamp(0.0, 1.0) } else { 1.0 };
+        let idx = ((n - 1) as f64 * q).round() as usize;
+        v[idx.min(n - 1)]
     }
 
     /// Median per-sweep decode step latency.
@@ -119,7 +129,13 @@ impl EngineMetrics {
             .zip(&self.stage_bubble)
             .map(|(&b, &w)| {
                 let total = (b + w).as_secs_f64();
-                if total <= 0.0 { 0.0 } else { b.as_secs_f64() / total }
+                if total > 0.0 && total.is_finite() {
+                    (b.as_secs_f64() / total).clamp(0.0, 1.0)
+                } else {
+                    // Zero (or degenerate) wall: report idle rather than
+                    // NaN/Inf, which would break the CI schema diff.
+                    0.0
+                }
             })
             .collect()
     }
@@ -153,6 +169,57 @@ impl EngineMetrics {
         let overlapped = (accounted - wall).max(0.0);
         rows.push(("overlapped (off critical path)".to_string(), overlapped, 0.0));
         rows
+    }
+
+    /// Plain-text snapshot for the server's `metrics` verb: one
+    /// `name value` pair per line, numbers only (no units), stable names.
+    /// Trace-derived lines (`trace_*`) appear only when the engine ran
+    /// with tracing enabled. Every value is finite by construction — the
+    /// zero-wall guards above hold even for a default (all-zero) run.
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "requests_finished {}", self.requests_finished);
+        let _ = writeln!(s, "requests_preempted {}", self.requests_preempted);
+        let _ = writeln!(s, "requests_oom {}", self.requests_oom);
+        let _ = writeln!(s, "prompt_tokens {}", self.prompt_tokens);
+        let _ = writeln!(s, "generated_tokens {}", self.generated_tokens);
+        let _ = writeln!(s, "max_concurrency {}", self.max_concurrency);
+        let _ = writeln!(s, "peak_cache_bytes {}", self.peak_cache_bytes);
+        let _ = writeln!(s, "wall_secs {:.6}", self.wall.as_secs_f64());
+        let _ = writeln!(s, "prefill_secs {:.6}", self.prefill.as_secs_f64());
+        let _ = writeln!(s, "prefill_chunks {}", self.prefill_chunks);
+        let _ = writeln!(s, "throughput_tok_s {:.3}", self.throughput());
+        let _ = writeln!(s, "decode_throughput_tok_s {:.3}", self.decode_throughput());
+        let _ = writeln!(s, "step_p50_secs {:.6}", self.step_p50().as_secs_f64());
+        let _ = writeln!(s, "step_p99_secs {:.6}", self.step_p99().as_secs_f64());
+        let _ = writeln!(s, "flush_jobs {}", self.flush_jobs);
+        let _ = writeln!(s, "flush_stall_secs {:.6}", self.flush_stall.as_secs_f64());
+        let _ = writeln!(s, "flush_overlap_won_secs {:.6}", self.flush_overlap_won.as_secs_f64());
+        for (name, secs, frac) in self.time_breakdown() {
+            let key = name.split_whitespace().next().unwrap_or("other");
+            let _ = writeln!(s, "breakdown_{key}_secs {secs:.6}");
+            let _ = writeln!(s, "breakdown_{key}_frac {frac:.6}");
+        }
+        for (stage, occ) in self.stage_occupancy().iter().enumerate() {
+            let _ = writeln!(s, "stage_{stage}_occupancy {occ:.6}");
+        }
+        if let Some(t) = &self.trace {
+            let _ = writeln!(s, "trace_events {}", t.events);
+            let _ = writeln!(s, "trace_logical_events {}", t.logical_events);
+            let _ = writeln!(s, "trace_dropped {}", t.dropped);
+            let _ = writeln!(s, "trace_quality_dropped {}", t.quality_dropped);
+            let _ = writeln!(s, "trace_admitted {}", t.admitted);
+            let _ = writeln!(s, "trace_preemptions {}", t.preemptions);
+            let _ = writeln!(s, "trace_flushes {}", t.flushes);
+            let _ = writeln!(s, "trace_finished {}", t.finished);
+            let _ = writeln!(s, "trace_oom_finished {}", t.oom_finished);
+            let _ = writeln!(s, "trace_quality_records {}", t.quality_records);
+            let _ = writeln!(s, "trace_bytes_actual {}", t.bytes_actual);
+            let _ = writeln!(s, "trace_bytes_predicted {}", t.bytes_predicted);
+            let _ = writeln!(s, "trace_max_err_fro {:.6}", t.max_err_fro);
+            let _ = writeln!(s, "trace_mean_err_fro {:.6}", t.mean_err_fro);
+        }
+        s
     }
 }
 
@@ -226,6 +293,53 @@ mod tests {
         assert!((rows[4].1 - 0.060).abs() < 1e-9, "overlap = {}", rows[4].1);
         // Component fractions are over the accounted total in this regime.
         assert!((rows[0].2 - 0.5).abs() < 1e-9);
+    }
+
+    /// A run that finished before the wall clock ticked (or a default
+    /// metrics value) must still render finite numbers everywhere — a
+    /// NaN/Inf here silently breaks the CI bench schema diff.
+    #[test]
+    fn zero_wall_metrics_stay_finite() {
+        let mut m = EngineMetrics::default();
+        m.record_stage_times(&[(Duration::ZERO, Duration::ZERO)]);
+        assert!(m.throughput().is_finite());
+        assert!(m.decode_throughput().is_finite());
+        for occ in m.stage_occupancy() {
+            assert!(occ.is_finite(), "zero-wall occupancy must be finite, got {occ}");
+            assert_eq!(occ, 0.0);
+        }
+        for (name, secs, frac) in m.time_breakdown() {
+            assert!(secs.is_finite(), "{name} seconds not finite");
+            assert!(frac.is_finite(), "{name} fraction not finite");
+        }
+        let text = m.render_text();
+        for line in text.lines() {
+            let val = line.rsplit(' ').next().unwrap();
+            assert!(
+                val.parse::<f64>().map(f64::is_finite).unwrap_or(false),
+                "non-finite metrics line: {line}"
+            );
+        }
+    }
+
+    /// Quantile boundaries must be exact: q = 0 is the minimum, q = 1 the
+    /// maximum, a single-sample vector returns its sample for every q, and
+    /// pathological q (NaN, ±Inf, out of range) must not panic or index
+    /// out of bounds.
+    #[test]
+    fn quantile_boundaries_and_single_sample() {
+        let mut m = EngineMetrics::default();
+        m.step_latencies.push(Duration::from_millis(7));
+        for q in [0.0, 0.5, 1.0, -3.0, 42.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(m.step_latency_pct(q), Duration::from_millis(7), "q = {q}");
+        }
+        m.step_latencies.push(Duration::from_millis(1));
+        m.step_latencies.push(Duration::from_millis(99));
+        assert_eq!(m.step_latency_pct(0.0), Duration::from_millis(1));
+        assert_eq!(m.step_latency_pct(1.0), Duration::from_millis(99));
+        assert_eq!(m.step_latency_pct(-1.0), Duration::from_millis(1), "q clamps low");
+        assert_eq!(m.step_latency_pct(2.0), Duration::from_millis(99), "q clamps high");
+        assert_eq!(m.step_latency_pct(f64::NAN), Duration::from_millis(99), "NaN acts as 1.0");
     }
 
     #[test]

@@ -48,7 +48,9 @@
 //!   The commit phase folds unused headroom back.
 //! * [`request`] — generation requests, results, lifecycle states.
 //! * [`metrics`] — latency/throughput counters + the GEAR component time
-//!   breakdown (Fig 3a), including work done on executor workers.
+//!   breakdown (Fig 3a), including work done on executor workers; carries
+//!   the [`crate::trace::TraceSummary`] when tracing is on and renders
+//!   the plain-text snapshot behind the server's `metrics` verb.
 //! * [`device_model`] — analytic V100-class step-time model used by the
 //!   throughput benches (see DESIGN.md §3 on why byte accounting + a
 //!   bandwidth model reproduces Fig 3b/3c).
@@ -59,8 +61,12 @@
 //! sizes, and pipeline stage counts — is documented in
 //! `docs/ARCHITECTURE.md`. The execution plane has grown without ever
 //! touching policy: PR 1 cut the executor seam, PR 3 made the pool
-//! persistent, PR 4 detached the flush lane, and this PR added the
-//! layer-sharded pipeline plane behind the same `run_into` entry point.
+//! persistent, PR 4 detached the flush lane, PR 5 added the layer-sharded
+//! pipeline plane behind the same `run_into` entry point, and this PR
+//! threaded the structured trace plane (`crate::trace`) through every
+//! commit point — per-thread event rings folded at the deterministic
+//! joins, so the logical event stream is itself bit-identical across
+//! planes.
 
 pub mod device_model;
 pub mod engine;

@@ -29,6 +29,7 @@ use std::time::Instant;
 use crate::kvcache::budget::MemoryBudget;
 use crate::kvcache::{CacheSpec, RequestCache};
 use crate::model::{Model, PrefillState};
+use crate::trace::{EventKind, FinishClass, Tracer};
 use crate::util::rng::Rng;
 
 use super::engine::EngineConfig;
@@ -164,12 +165,18 @@ impl Scheduler {
     /// creates the request in [`ReqPhase::Prefill`]; the engine's sweeps
     /// run the prefill in chunks. Requests that can never fit finish as
     /// `OutOfMemory`.
+    ///
+    /// On traced runs each admission emits [`EventKind::Admit`]; an
+    /// admission-time OOM rejection consumes a serial too and emits a
+    /// bare [`EventKind::Finish`] (there is no matching `Admit` — the
+    /// request never entered the active set).
     pub fn try_admit(
         &mut self,
         model: &Model,
         active: &mut Vec<ActiveRequest>,
         finished: &mut Vec<GenResult>,
         metrics: &mut EngineMetrics,
+        tracer: &mut Option<Tracer>,
     ) {
         while active.len() < self.cfg.max_batch {
             // Estimate from a borrow of the queue head — the request (and
@@ -186,6 +193,18 @@ impl Scheduler {
                     let (req, enq, preemptions) =
                         self.waiting.pop_front().expect("peeked head vanished");
                     metrics.requests_oom += 1;
+                    // Rejections consume a serial so every Finish event
+                    // carries a unique one (serials are engine-internal
+                    // and nothing else observes the gap).
+                    let serial = self.next_serial;
+                    self.next_serial += 1;
+                    if let Some(t) = tracer {
+                        t.emit(EventKind::Finish {
+                            serial,
+                            reason: FinishClass::Oom,
+                            tokens: 0,
+                        });
+                    }
                     finished.push(GenResult {
                         id: req.id,
                         output: Vec::new(),
@@ -209,6 +228,9 @@ impl Scheduler {
             let rng = Rng::new(self.cfg.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
             let serial = self.next_serial;
             self.next_serial += 1;
+            if let Some(t) = tracer {
+                t.emit(EventKind::Admit { serial, req_id: req.id });
+            }
             active.push(ActiveRequest {
                 serial,
                 req,
@@ -245,16 +267,28 @@ impl Scheduler {
         active: &mut Vec<ActiveRequest>,
         finished: &mut Vec<GenResult>,
         metrics: &mut EngineMetrics,
+        tracer: &mut Option<Tracer>,
     ) {
         if let Some(idx) = (0..active.len()).max_by_key(|&i| active[i].serial) {
             let a = active.swap_remove(idx);
             self.budget.release(a.reserved + a.headroom);
             if active.is_empty() {
                 metrics.requests_oom += 1;
+                if let Some(t) = tracer {
+                    t.emit(EventKind::Preempt { serial: a.serial, oom: true });
+                    t.emit(EventKind::Finish {
+                        serial: a.serial,
+                        reason: FinishClass::Oom,
+                        tokens: a.output.len() as u32,
+                    });
+                }
                 finished.push(a.into_result(FinishReason::OutOfMemory));
                 return;
             }
             metrics.requests_preempted += 1;
+            if let Some(t) = tracer {
+                t.emit(EventKind::Preempt { serial: a.serial, oom: false });
+            }
             let (req, enq, preemptions) = (a.req, a.enqueued_at, a.preemptions + 1);
             self.requeue_front(req, enq, preemptions);
         }
@@ -286,7 +320,7 @@ mod tests {
         for i in 0..4 {
             sched.submit(GenRequest::greedy(i, vec![1, 2, 3], 4));
         }
-        sched.try_admit(&model, &mut active, &mut finished, &mut metrics);
+        sched.try_admit(&model, &mut active, &mut finished, &mut metrics, &mut None);
         assert_eq!(active.len(), 4);
         // Force the tie the clock can produce on its own: every candidate
         // started at the same instant.
@@ -294,14 +328,14 @@ mod tests {
         for a in active.iter_mut() {
             a.started_at = t;
         }
-        sched.preempt_youngest(&mut active, &mut finished, &mut metrics);
+        sched.preempt_youngest(&mut active, &mut finished, &mut metrics, &mut None);
         assert_eq!(active.len(), 3);
         assert!(
             active.iter().all(|a| a.serial != 3),
             "victim must be the youngest admission (serial 3)"
         );
         assert_eq!(sched.waiting_len(), 1, "victim requeued at the front");
-        sched.preempt_youngest(&mut active, &mut finished, &mut metrics);
+        sched.preempt_youngest(&mut active, &mut finished, &mut metrics, &mut None);
         assert!(active.iter().all(|a| a.serial <= 1), "then serial 2");
         assert_eq!(metrics.requests_preempted, 2);
         assert!(finished.is_empty(), "preemption with survivors never OOM-finishes");
@@ -336,7 +370,7 @@ mod tests {
             started_at: Instant::now(),
             pending_flushes: Vec::new(),
         });
-        sched.try_admit(&model, &mut active, &mut finished, &mut metrics);
+        sched.try_admit(&model, &mut active, &mut finished, &mut metrics, &mut None);
         assert_eq!(active.len(), 1, "nothing admitted under an exhausted budget");
         assert_eq!(sched.waiting_len(), 1, "the head request still waits, unchanged");
         assert_eq!(metrics.requests_oom, 0);

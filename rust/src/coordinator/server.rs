@@ -4,6 +4,12 @@
 //! line per prompt (in request order per connection). One engine thread owns
 //! the model; connection threads communicate with it over channels. Used by
 //! `gear-serve serve` and the `serve_requests` example.
+//!
+//! One verb is reserved: a line consisting of exactly `metrics` is not a
+//! prompt — it returns the engine's plain-text metrics snapshot
+//! ([`crate::coordinator::EngineMetrics::render_text`], including the
+//! `trace_*` lines when tracing is on), terminated by a blank line. The
+//! snapshot refreshes after each engine batch completes.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -29,6 +35,7 @@ struct Submission {
 pub struct EngineClient {
     tx: Sender<Submission>,
     next_id: Arc<AtomicU64>,
+    metrics_text: Arc<Mutex<String>>,
 }
 
 impl EngineClient {
@@ -42,6 +49,13 @@ impl EngineClient {
             .map_err(|_| Error::msg("engine thread terminated"))?;
         reply_rx.recv().map_err(|_| Error::msg("engine dropped request"))
     }
+
+    /// Latest plain-text metrics snapshot (empty before the first batch
+    /// completes). Refreshed by the engine thread after each
+    /// `run_to_completion`, so it reflects cumulative totals.
+    pub fn metrics_text(&self) -> String {
+        self.metrics_text.lock().unwrap().clone()
+    }
 }
 
 /// Spawn the engine thread; returns a client handle.
@@ -51,6 +65,8 @@ impl EngineClient {
 /// continuous batching appropriate for a single-core testbed.
 pub fn spawn_engine(model: Model, cfg: EngineConfig) -> EngineClient {
     let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
+    let metrics_text = Arc::new(Mutex::new(String::new()));
+    let snapshot = Arc::clone(&metrics_text);
     std::thread::spawn(move || {
         let mut engine = Engine::new(model, cfg);
         let mut pending: Vec<(u64, Sender<GenResult>)> = Vec::new();
@@ -66,7 +82,12 @@ pub fn spawn_engine(model: Model, cfg: EngineConfig) -> EngineClient {
                 pending.push((s.req.id, s.reply));
                 engine.submit(s.req);
             }
-            for result in engine.run_to_completion() {
+            let results = engine.run_to_completion();
+            // Publish the refreshed (cumulative) snapshot before any reply
+            // lands, so a client that sees its result and immediately asks
+            // for `metrics` reads a batch total that includes it.
+            *snapshot.lock().unwrap() = engine.metrics.render_text();
+            for result in results {
                 if let Some(pos) = pending.iter().position(|(id, _)| *id == result.id) {
                     let (_, reply) = pending.swap_remove(pos);
                     let _ = reply.send(result);
@@ -74,7 +95,7 @@ pub fn spawn_engine(model: Model, cfg: EngineConfig) -> EngineClient {
             }
         }
     });
-    EngineClient { tx, next_id: Arc::new(AtomicU64::new(1)) }
+    EngineClient { tx, next_id: Arc::new(AtomicU64::new(1)), metrics_text }
 }
 
 /// Serve the line protocol on `addr` until the process exits.
@@ -102,6 +123,14 @@ fn handle_conn(stream: TcpStream, client: &EngineClient, max_new_tokens: usize) 
     for line in reader.lines() {
         let line = line?;
         if line.is_empty() {
+            continue;
+        }
+        if line == "metrics" {
+            // Reserved verb: dump the metrics snapshot, end with a blank
+            // line so clients can read a variable-length reply.
+            let mut w = writer.lock().unwrap();
+            w.write_all(client.metrics_text().as_bytes())?;
+            writeln!(w)?;
             continue;
         }
         // The task prompts end with '\n' which lines() strips; restore it.
@@ -170,5 +199,46 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         // Untrained model: any decodable reply is fine; protocol must work.
         assert!(line.ends_with('\n'));
+    }
+
+    /// The `metrics` verb must return the engine's plain-text snapshot
+    /// (terminated by a blank line), not treat the word as a prompt.
+    #[test]
+    fn metrics_verb_returns_snapshot() {
+        let client = spawn_engine(tiny_model(), EngineConfig::new(CacheSpec::gear(4)));
+        assert!(client.metrics_text().is_empty(), "no snapshot before the first batch");
+        let tok = Tokenizer::new();
+        client.generate(tok.encode_with_bos("m=2;m?\n"), 4).unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server_client = client.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let stream = stream.unwrap();
+                let c = server_client.clone();
+                std::thread::spawn(move || handle_conn(stream, &c, 4));
+            }
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, "metrics").unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut lines = Vec::new();
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let line = line.trim_end().to_string();
+            if line.is_empty() {
+                break;
+            }
+            lines.push(line);
+        }
+        assert!(
+            lines.iter().any(|l| l.starts_with("requests_finished ")),
+            "snapshot must carry counters, got {lines:?}"
+        );
+        assert!(
+            lines.iter().any(|l| l == "requests_finished 1"),
+            "one request finished before the verb, got {lines:?}"
+        );
     }
 }

@@ -225,7 +225,55 @@ pub fn compress(x: &Tensor, kind: KvKind, cfg: &GearConfig) -> CompressedMatrix 
             out.sparse = Some(sp);
         }
     }
+    if crate::trace::quality_capture_on() {
+        stage_quality_record(x, kind, cfg, &out);
+    }
     out
+}
+
+/// Stage a [`crate::trace::QualityStaged`] record for this compression:
+/// achieved vs. predicted bytes plus the Frobenius norms of the Eq. (4)
+/// components. Gated on an active quality-capture scope — the untraced
+/// path pays one relaxed atomic load in [`crate::trace::quality_capture_on`]
+/// and nothing else; the reconstruction below only runs while tracing.
+fn stage_quality_record(x: &Tensor, kind: KvKind, cfg: &GearConfig, out: &CompressedMatrix) {
+    let (rows, cols) = (out.rows, out.cols);
+    let mut rec = vec![0.0f32; rows * cols];
+    out.reconstruct_into(&mut rec);
+    let mut lr = vec![0.0f32; rows * cols];
+    if let Some(l) = &out.lowrank {
+        l.add_into(&mut lr);
+    }
+    let mut err_sq = 0.0f64;
+    let mut resid_sq = 0.0f64;
+    for ((&xi, &ri), &li) in x.data().iter().zip(&rec).zip(&lr) {
+        let e = f64::from(xi - ri);
+        err_sq += e * e;
+        // R = X − D̂ − S = (X − reconstruct) + L: the residual the
+        // low-rank term was fitted to, recovered without re-dequantizing.
+        let r = e + f64::from(li);
+        resid_sq += r * r;
+    }
+    let lowrank_sq: f64 = lr.iter().map(|&v| f64::from(v) * f64::from(v)).sum();
+    let outlier_sq: f64 = match &out.sparse {
+        Some(sp) => {
+            let mut s = vec![0.0f32; rows * cols];
+            sp.add_into(&mut s);
+            s.iter().map(|&v| f64::from(v) * f64::from(v)).sum()
+        }
+        None => 0.0,
+    };
+    crate::trace::stage_quality(crate::trace::QualityStaged {
+        side: kind,
+        rows: rows as u32,
+        cols: cols as u32,
+        bytes: out.nbytes() as u64,
+        pred_bytes: super::size::predicted_nbytes(cfg, kind, rows, cols) as u64,
+        err_fro: err_sq.sqrt() as f32,
+        quant_resid_fro: resid_sq.sqrt() as f32,
+        lowrank_fro: lowrank_sq.sqrt() as f32,
+        outlier_fro: outlier_sq.sqrt() as f32,
+    });
 }
 
 /// Dense residual `base − dequant(q)` (+ optional extra subtraction).
@@ -450,6 +498,47 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn quality_probe_stages_exact_byte_accounting() {
+        // Keep a tracer alive so the process-wide gate is open; the probe
+        // additionally needs this thread's capture scope.
+        let _tracer = crate::trace::Tracer::new(None);
+        let mut rng = Rng::new(56);
+        let x = kv_matrix(&mut rng, 64, 32);
+        assert!(crate::trace::take_staged_quality().is_empty());
+        let cfg = GearConfig::new(Method::gear_default(2), 4);
+        crate::trace::set_quality_capture(true);
+        let c = compress(&x, KvKind::Key, &cfg);
+        crate::trace::set_quality_capture(false);
+        let staged = crate::trace::take_staged_quality();
+        assert_eq!(staged.len(), 1);
+        let q = staged[0];
+        assert_eq!(q.side, KvKind::Key);
+        assert_eq!((q.rows as usize, q.cols as usize), (64, 32));
+        // Achieved bytes are the real storage, and the analytic predictor
+        // is exact, so the trace's achieved/predicted pair must agree.
+        assert_eq!(q.bytes as usize, c.nbytes());
+        assert_eq!(q.bytes, q.pred_bytes);
+        // ‖X − X̂‖_F matches a direct recomputation.
+        let err: f64 = x
+            .data()
+            .iter()
+            .zip(c.reconstruct().data())
+            .map(|(&a, &b)| {
+                let e = f64::from(a - b);
+                e * e
+            })
+            .sum::<f64>()
+            .sqrt();
+        assert!((f64::from(q.err_fro) - err).abs() < 1e-3 * err.max(1.0), "{} vs {err}", q.err_fro);
+        // The low-rank fit cannot make the residual worse (Eq. 4's point).
+        assert!(q.err_fro <= q.quant_resid_fro * 1.01, "{} > {}", q.err_fro, q.quant_resid_fro);
+        assert!(q.lowrank_fro > 0.0 && q.outlier_fro > 0.0);
+        // Outside a capture scope nothing stages, even with a live tracer.
+        let _ = compress(&x, KvKind::Key, &cfg);
+        assert!(crate::trace::take_staged_quality().is_empty());
     }
 
     #[test]

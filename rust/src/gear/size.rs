@@ -7,7 +7,8 @@
 //! and so the cache manager can plan admission against a byte budget before
 //! compressing anything.
 
-use super::compose::{Backbone, Method};
+use super::compose::{Backbone, GearConfig, Method};
+use super::KvKind;
 
 /// Size breakdown of one compressed n×d KV matrix, in bytes.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -120,6 +121,14 @@ pub fn predict(method: Method, is_key: bool, n: usize, d: usize, n_heads: usize)
         Method::SparseOnly { s } => b.sparse_bytes = sparse(s),
     }
     b
+}
+
+/// Predicted bytes of one n×d matrix compressed under `cfg` — the
+/// baseline the trace quality probe records next to achieved bytes
+/// (`predict` is exact by the `predict_matches_measured` contract, so
+/// any achieved/predicted gap in a trace is a real accounting bug).
+pub fn predicted_nbytes(cfg: &GearConfig, kind: KvKind, n: usize, d: usize) -> usize {
+    predict(cfg.method, matches!(kind, KvKind::Key), n, d, cfg.n_heads).total()
 }
 
 /// Predicted KV-size fraction for a full cache: K and V matrices of

@@ -42,6 +42,13 @@
 //! engine's pipelined plane each flush is tagged with its layer index and
 //! preferentially drained by the pipeline stage that owns that layer —
 //! pure locality routing; the install/commit protocol above is unchanged.
+//!
+//! **Tracing.** This module emits nothing itself. The engine records the
+//! `seal`/`flush_submit` pair at the detach point and `flush_join` at the
+//! install/commit point (see [`crate::trace`]); the compression call
+//! inside the worker stages per-matrix GEAR quality probes
+//! (achieved-vs-predicted bytes, Eq. (4) residual norms) that ride the
+//! flush observation back to those same deterministic commit points.
 
 use crate::gear::compose::{compress, CompressedMatrix, GearConfig, Method};
 use crate::gear::size::SizeBreakdown;

@@ -61,7 +61,10 @@ impl FlushWork {
 
     /// Run the GEAR compression (quant backbone + low-rank residual +
     /// sparse outliers, per [`Method`]). Pure and deterministic: the RNG
-    /// inside is seeded from the config and matrix shape only.
+    /// inside is seeded from the config and matrix shape only. When the
+    /// flush lane runs traced, the two `compress` calls below stage one
+    /// quality probe each (K first, then V — the order
+    /// [`crate::trace::Quality`] attribution relies on).
     pub fn compress(self) -> FlushResult {
         let cfg = GearConfig::new(self.method, self.n_heads);
         FlushResult {

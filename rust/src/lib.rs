@@ -30,6 +30,13 @@
 //!   `docs/ARCHITECTURE.md` documents the sweep phases and the full
 //!   concurrency contract. The split is the scaling seam: multi-device
 //!   sharding extends the executor without touching policy.
+//! * [`trace`] — structured engine tracing: per-thread event rings,
+//!   request lifecycle events keyed by admission serial, sweep-phase /
+//!   chunk / stage / flush spans, and per-layer GEAR quality telemetry,
+//!   exported as Perfetto JSON + a schema-declared JSONL journal
+//!   (`GEAR_TRACE=trace.json` or `EngineConfig::with_trace`). The
+//!   *logical* event stream is bit-identical across exec modes and pool
+//!   sizes — a cross-plane correctness oracle on top of the token goldens.
 //! * [`runtime`] — PJRT (XLA) executable loading for the AOT-compiled JAX
 //!   graphs in `artifacts/` (Python never runs at serve time). Gated
 //!   behind the `xla` cargo feature (needs the vendored `xla` crate).
@@ -67,6 +74,7 @@ pub mod kvcache;
 pub mod model;
 pub mod runtime;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! gear-serve info                                   artifact + model summary
-//! gear-serve serve  [--addr A] [--spec S] [--budget-mb N] [--max-new N]
+//! gear-serve serve  [--addr A] [--spec S] [--budget-mb N] [--max-new N] [--trace PATH]
 //! gear-serve eval   [--task hard|easy] [--spec S] [--n N] [--backend rust|xla]
 //! gear-serve demo   [--spec S]                      one-shot generation demo
 //! ```
@@ -99,6 +99,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig::new(spec);
     if budget_mb > 0 {
         cfg = cfg.with_budget(budget_mb << 20);
+    }
+    // --trace PATH writes Perfetto JSON to PATH and the JSONL journal next
+    // to it; the GEAR_TRACE env var is the config-free equivalent.
+    let trace = args.get("trace", "");
+    if !trace.is_empty() {
+        cfg = cfg.with_trace(&trace);
+        println!("trace: {trace} (+ .jsonl journal)");
     }
     println!("spec: {} | budget: {} | addr: {addr}", spec.label(),
              if budget_mb > 0 { format!("{budget_mb} MiB") } else { "unlimited".into() });

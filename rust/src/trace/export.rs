@@ -1,0 +1,719 @@
+//! Trace export: Chrome-trace/Perfetto JSON, the JSONL event journal
+//! with its declared schema, and the schema-validating JSONL parser
+//! used by `tests/trace_golden.rs` and the CI `trace` job.
+//!
+//! The crate builds offline with no serde, so both renderers emit JSON
+//! by string formatting (the same approach as `bench_throughput`) and
+//! the validator ships a tiny recursive-descent parser for the subset
+//! of JSON the renderers produce (no string escapes — nothing we emit
+//! needs them, and the parser rejects them loudly rather than guessing).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::{Event, EventKind, FinishClass, SweepPhase, Tracer, Writer};
+use crate::gear::KvKind;
+
+/// Keys present on every JSONL event line, in order.
+pub const BASE_FIELDS: &[&str] = &["t_ns", "dur_ns", "writer", "kind"];
+
+/// Per-kind payload keys, in the order they follow the base keys on an
+/// event line. This table *is* the declared schema: the emitter and
+/// [`jsonl_schema_line`] both derive from it, and the unit tests render
+/// one event of every kind through [`validate_jsonl`] so the two can
+/// never drift apart silently.
+pub const KIND_FIELDS: &[(&str, &[&str])] = &[
+    ("enqueue", &["req_id"]),
+    ("admit", &["serial", "req_id"]),
+    ("reserve", &["serial", "bytes"]),
+    ("prefill_chunk", &["serial", "rows"]),
+    ("decode_step", &["n_seqs"]),
+    ("first_token", &["serial"]),
+    ("seal", &["serial", "layer", "rows"]),
+    ("flush_submit", &["serial", "layer", "rows"]),
+    ("flush_join", &["serial", "layer"]),
+    ("preempt", &["serial", "oom"]),
+    ("finish", &["serial", "reason", "tokens"]),
+    (
+        "quality",
+        &[
+            "serial",
+            "layer",
+            "rows",
+            "prefill",
+            "side",
+            "bytes",
+            "pred_bytes",
+            "err_fro",
+            "quant_resid_fro",
+            "lowrank_fro",
+            "outlier_fro",
+        ],
+    ),
+    ("phase", &["phase"]),
+    ("chunk", &["n_seqs"]),
+    ("stage_span", &["stage", "busy"]),
+    ("flush_run", &["layer"]),
+];
+
+fn writer_label(w: Writer) -> String {
+    match w {
+        Writer::Engine => "engine".to_string(),
+        Writer::Worker(i) => format!("worker{i}"),
+        Writer::Stage(s) => format!("stage{s}"),
+    }
+}
+
+fn tid(w: Writer) -> u32 {
+    match w {
+        Writer::Engine => 1,
+        Writer::Worker(i) => 10 + u32::from(i),
+        Writer::Stage(s) => 1000 + u32::from(s),
+    }
+}
+
+fn side_label(side: KvKind) -> &'static str {
+    match side {
+        KvKind::Key => "key",
+        KvKind::Value => "value",
+    }
+}
+
+fn reason_label(reason: FinishClass) -> &'static str {
+    match reason {
+        FinishClass::Stop => "stop",
+        FinishClass::Length => "length",
+        FinishClass::Oom => "oom",
+    }
+}
+
+fn phase_label(phase: SweepPhase) -> &'static str {
+    match phase {
+        SweepPhase::Reserve => "reserve",
+        SweepPhase::Prefill => "prefill",
+        SweepPhase::Decode => "decode",
+        SweepPhase::Flush => "flush",
+    }
+}
+
+/// Finite floats render as plain decimals (Rust's `Display` never emits
+/// exponents, so the output is always a valid JSON number); non-finite
+/// values — which the quality probe never produces for real inputs —
+/// degrade to `null` rather than corrupting the document.
+fn fmt_f32(x: f32) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Append this kind's payload fields (each preceded by a comma) in the
+/// exact order [`KIND_FIELDS`] declares for it.
+fn push_fields(out: &mut String, kind: &EventKind) {
+    match *kind {
+        EventKind::Enqueue { req_id } => {
+            let _ = write!(out, ",\"req_id\":{req_id}");
+        }
+        EventKind::Admit { serial, req_id } => {
+            let _ = write!(out, ",\"serial\":{serial},\"req_id\":{req_id}");
+        }
+        EventKind::Reserve { serial, bytes } => {
+            let _ = write!(out, ",\"serial\":{serial},\"bytes\":{bytes}");
+        }
+        EventKind::PrefillChunk { serial, rows } => {
+            let _ = write!(out, ",\"serial\":{serial},\"rows\":{rows}");
+        }
+        EventKind::DecodeStep { n_seqs } => {
+            let _ = write!(out, ",\"n_seqs\":{n_seqs}");
+        }
+        EventKind::FirstToken { serial } => {
+            let _ = write!(out, ",\"serial\":{serial}");
+        }
+        EventKind::Seal { serial, layer, rows } => {
+            let _ = write!(out, ",\"serial\":{serial},\"layer\":{layer},\"rows\":{rows}");
+        }
+        EventKind::FlushSubmit { serial, layer, rows } => {
+            let _ = write!(out, ",\"serial\":{serial},\"layer\":{layer},\"rows\":{rows}");
+        }
+        EventKind::FlushJoin { serial, layer } => {
+            let _ = write!(out, ",\"serial\":{serial},\"layer\":{layer}");
+        }
+        EventKind::Preempt { serial, oom } => {
+            let _ = write!(out, ",\"serial\":{serial},\"oom\":{oom}");
+        }
+        EventKind::Finish { serial, reason, tokens } => {
+            let _ = write!(
+                out,
+                ",\"serial\":{serial},\"reason\":\"{}\",\"tokens\":{tokens}",
+                reason_label(reason)
+            );
+        }
+        EventKind::Quality(q) => {
+            let _ = write!(
+                out,
+                ",\"serial\":{},\"layer\":{},\"rows\":{},\"prefill\":{},\"side\":\"{}\",\
+                 \"bytes\":{},\"pred_bytes\":{},\"err_fro\":{},\"quant_resid_fro\":{},\
+                 \"lowrank_fro\":{},\"outlier_fro\":{}",
+                q.serial,
+                q.layer,
+                q.rows,
+                q.prefill,
+                side_label(q.side),
+                q.bytes,
+                q.pred_bytes,
+                fmt_f32(q.err_fro),
+                fmt_f32(q.quant_resid_fro),
+                fmt_f32(q.lowrank_fro),
+                fmt_f32(q.outlier_fro)
+            );
+        }
+        EventKind::Phase { phase } => {
+            let _ = write!(out, ",\"phase\":\"{}\"", phase_label(phase));
+        }
+        EventKind::Chunk { n_seqs } => {
+            let _ = write!(out, ",\"n_seqs\":{n_seqs}");
+        }
+        EventKind::StageSpan { stage, busy } => {
+            let _ = write!(out, ",\"stage\":{stage},\"busy\":{busy}");
+        }
+        EventKind::FlushRun { layer } => {
+            let _ = write!(out, ",\"layer\":{layer}");
+        }
+    }
+}
+
+/// The journal's first line: a `schema` object declaring the base keys
+/// and the payload keys of every event kind, mirroring the pattern of
+/// `BENCH_throughput.json`'s `schema` object.
+pub fn jsonl_schema_line() -> String {
+    let mut s = String::from("{\"schema\":{\"version\":1,\"base\":[");
+    for (i, k) in BASE_FIELDS.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "\"{k}\"");
+    }
+    s.push_str("],\"kinds\":{");
+    for (i, (kind, fields)) in KIND_FIELDS.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "\"{kind}\":[");
+        for (j, f) in fields.iter().enumerate() {
+            if j > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\"{f}\"");
+        }
+        s.push(']');
+    }
+    s.push_str("}}}");
+    s
+}
+
+fn jsonl_line(ev: &Event) -> String {
+    let mut s = format!(
+        "{{\"t_ns\":{},\"dur_ns\":{},\"writer\":\"{}\",\"kind\":\"{}\"",
+        ev.t_ns,
+        ev.dur_ns,
+        writer_label(ev.writer),
+        ev.kind.name()
+    );
+    push_fields(&mut s, &ev.kind);
+    s.push('}');
+    s
+}
+
+/// Render the JSONL journal: schema line first, then one event per line
+/// in emission/fold order.
+pub fn render_jsonl(events: &[Event]) -> String {
+    let mut out = jsonl_schema_line();
+    out.push('\n');
+    for ev in events {
+        out.push_str(&jsonl_line(ev));
+        out.push('\n');
+    }
+    out
+}
+
+/// Display name for the Perfetto track entry.
+fn display_name(kind: &EventKind) -> String {
+    match kind {
+        EventKind::Phase { phase } => format!("phase:{}", phase_label(*phase)),
+        EventKind::StageSpan { stage, busy } => {
+            format!("stage{stage}:{}", if *busy { "busy" } else { "bubble" })
+        }
+        EventKind::FlushRun { layer } => format!("flush_run:L{layer}"),
+        _ => kind.name().to_string(),
+    }
+}
+
+/// Render a Chrome-trace / Perfetto JSON document. Logical events
+/// become thread-scoped instants, timing events become complete (`X`)
+/// spans; the engine, each worker, and each pipeline stage get named
+/// tracks via `thread_name` metadata. Timestamps are normalised to the
+/// earliest event and expressed in microseconds.
+pub fn render_perfetto(events: &[Event]) -> String {
+    let t0 = events.iter().map(|e| e.t_ns).min().unwrap_or(0);
+    let mut order: Vec<usize> = (0..events.len()).collect();
+    order.sort_by_key(|&i| (events[i].t_ns, i));
+    let mut tracks: Vec<Writer> = events.iter().map(|e| e.writer).collect();
+    tracks.sort();
+    tracks.dedup();
+
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    let mut first = true;
+    let mut sep = |out: &mut String| {
+        if first {
+            first = false;
+        } else {
+            out.push_str(",\n");
+        }
+    };
+    for &w in &tracks {
+        sep(&mut out);
+        let _ = write!(
+            out,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            tid(w),
+            writer_label(w)
+        );
+    }
+    for &i in &order {
+        let ev = &events[i];
+        sep(&mut out);
+        let ts = (ev.t_ns - t0) as f64 / 1000.0;
+        let mut fields = String::new();
+        push_fields(&mut fields, &ev.kind);
+        let args = fields.strip_prefix(',').unwrap_or("");
+        if ev.kind.is_logical() {
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{ts:.3},\"pid\":1,\
+                 \"tid\":{},\"args\":{{{args}}}}}",
+                display_name(&ev.kind),
+                tid(ev.writer)
+            );
+        } else {
+            let dur = ev.dur_ns as f64 / 1000.0;
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{ts:.3},\"dur\":{dur:.3},\"pid\":1,\
+                 \"tid\":{},\"args\":{{{args}}}}}",
+                display_name(&ev.kind),
+                tid(ev.writer)
+            );
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Write `contents` to `path` atomically: a pid-keyed temp file in the
+/// same directory, then a rename. Parallel test processes sharing one
+/// `GEAR_TRACE` path each land a complete document instead of
+/// interleaved partial writes.
+pub(crate) fn write_atomic(path: &Path, contents: &str) -> io::Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(format!(".tmp.{}", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp);
+    fs::write(&tmp, contents)?;
+    fs::rename(&tmp, path)
+}
+
+impl Tracer {
+    /// Export the recorded run: Perfetto JSON to the configured path and
+    /// the JSONL journal next to it (extension swapped to `.jsonl`).
+    /// No-op for capture-only tracers.
+    pub fn export_files(&self) -> io::Result<()> {
+        let Some(path) = self.path() else {
+            return Ok(());
+        };
+        write_atomic(path, &render_perfetto(self.events()))?;
+        write_atomic(&path.with_extension("jsonl"), &render_jsonl(self.events()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Validating parser
+// ---------------------------------------------------------------------------
+
+/// Minimal JSON value, produced by [`parse_json`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonVal {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number, as `f64`.
+    Num(f64),
+    /// A string (escape-free by construction of our emitters).
+    Str(String),
+    /// An array.
+    Arr(Vec<JsonVal>),
+    /// An object, preserving key order.
+    Obj(Vec<(String, JsonVal)>),
+}
+
+impl JsonVal {
+    /// Member lookup on an object.
+    pub fn get(&self, key: &str) -> Option<&JsonVal> {
+        match self {
+            JsonVal::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// String payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array payload, if this is an array.
+    pub fn as_arr(&self) -> Option<&[JsonVal]> {
+        match self {
+            JsonVal::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Object payload, if this is an object.
+    pub fn as_obj(&self) -> Option<&[(String, JsonVal)]> {
+        match self {
+            JsonVal::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.pos < self.s.len() && self.s[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            match b {
+                b'"' => {
+                    let s = std::str::from_utf8(&self.s[start..self.pos])
+                        .map_err(|_| "invalid utf-8 in string".to_string())?
+                        .to_string();
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                b'\\' => return Err(format!("escape sequence at byte {} unsupported", self.pos)),
+                _ => self.pos += 1,
+            }
+        }
+        Err("unterminated string".to_string())
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.s[start..self.pos]).unwrap_or("");
+        text.parse::<f64>().map_err(|_| format!("bad number {text:?} at byte {start}"))
+    }
+
+    fn literal(&mut self, lit: &str, val: JsonVal) -> Result<JsonVal, String> {
+        if self.s[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(val)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonVal, String> {
+        self.ws();
+        match self.peek() {
+            Some(b'"') => Ok(JsonVal::Str(self.string()?)),
+            Some(b'{') => {
+                self.pos += 1;
+                let mut kvs = Vec::new();
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(JsonVal::Obj(kvs));
+                }
+                loop {
+                    self.ws();
+                    let k = self.string()?;
+                    self.ws();
+                    self.expect(b':')?;
+                    let v = self.value()?;
+                    kvs.push((k, v));
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(JsonVal::Obj(kvs));
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                let mut vals = Vec::new();
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(JsonVal::Arr(vals));
+                }
+                loop {
+                    vals.push(self.value()?);
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(JsonVal::Arr(vals));
+                        }
+                        _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+                    }
+                }
+            }
+            Some(b't') => self.literal("true", JsonVal::Bool(true)),
+            Some(b'f') => self.literal("false", JsonVal::Bool(false)),
+            Some(b'n') => self.literal("null", JsonVal::Null),
+            Some(_) => Ok(JsonVal::Num(self.number()?)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+}
+
+/// Parse one JSON document (the escape-free subset our emitters
+/// produce). Trailing garbage after the document is an error.
+pub fn parse_json(text: &str) -> Result<JsonVal, String> {
+    let mut p = Parser { s: text.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.ws();
+    if p.pos != p.s.len() {
+        return Err(format!("trailing data at byte {}", p.pos));
+    }
+    Ok(v)
+}
+
+/// Validate a JSONL journal against the schema declared on its first
+/// line: every event line must parse, carry the base keys in order,
+/// name a kind the schema declares, and carry exactly that kind's
+/// payload keys in order. Returns the number of event lines.
+pub fn validate_jsonl(text: &str) -> Result<usize, String> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or_else(|| "empty journal".to_string())?;
+    let header = parse_json(header).map_err(|e| format!("schema line: {e}"))?;
+    let schema = header.get("schema").ok_or_else(|| "first line lacks \"schema\"".to_string())?;
+    let base: Vec<&str> = schema
+        .get("base")
+        .and_then(JsonVal::as_arr)
+        .ok_or_else(|| "schema.base missing".to_string())?
+        .iter()
+        .map(|v| v.as_str().ok_or_else(|| "schema.base entry not a string".to_string()))
+        .collect::<Result<_, _>>()?;
+    let kinds = schema
+        .get("kinds")
+        .and_then(JsonVal::as_obj)
+        .ok_or_else(|| "schema.kinds missing".to_string())?;
+
+    let mut n = 0usize;
+    for (i, line) in lines.enumerate() {
+        let ctx = |e: String| format!("event line {}: {e}", i + 1);
+        let v = parse_json(line).map_err(&ctx)?;
+        let obj = v.as_obj().ok_or_else(|| ctx("not an object".to_string()))?;
+        let keys: Vec<&str> = obj.iter().map(|(k, _)| k.as_str()).collect();
+        if keys.len() < base.len() || keys[..base.len()] != base[..] {
+            return Err(ctx(format!("base keys {:?} != {base:?}", &keys)));
+        }
+        for k in &base {
+            let val = v.get(k).expect("base key present");
+            let ok = match *k {
+                "t_ns" | "dur_ns" => matches!(val, JsonVal::Num(_)),
+                "writer" | "kind" => matches!(val, JsonVal::Str(_)),
+                _ => true,
+            };
+            if !ok {
+                return Err(ctx(format!("base key {k:?} has wrong type")));
+            }
+        }
+        let kind = v.get("kind").and_then(JsonVal::as_str).expect("checked above");
+        let declared = kinds
+            .iter()
+            .find(|(k, _)| k == kind)
+            .ok_or_else(|| ctx(format!("kind {kind:?} not in schema")))?;
+        let expected: Vec<&str> = declared
+            .1
+            .as_arr()
+            .ok_or_else(|| ctx(format!("schema.kinds[{kind:?}] not an array")))?
+            .iter()
+            .map(|f| f.as_str().unwrap_or("?"))
+            .collect();
+        if keys[base.len()..] != expected[..] {
+            return Err(ctx(format!(
+                "kind {kind:?} payload keys {:?} != declared {expected:?}",
+                &keys[base.len()..]
+            )));
+        }
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Quality;
+
+    /// One event of every kind, exercising every serializer arm.
+    fn one_of_each() -> Vec<Event> {
+        let kinds = vec![
+            EventKind::Enqueue { req_id: 1 },
+            EventKind::Admit { serial: 0, req_id: 1 },
+            EventKind::Reserve { serial: 0, bytes: 4096 },
+            EventKind::PrefillChunk { serial: 0, rows: 32 },
+            EventKind::DecodeStep { n_seqs: 2 },
+            EventKind::FirstToken { serial: 0 },
+            EventKind::Seal { serial: 0, layer: 1, rows: 16 },
+            EventKind::FlushSubmit { serial: 0, layer: 1, rows: 16 },
+            EventKind::FlushJoin { serial: 0, layer: 1 },
+            EventKind::Preempt { serial: 3, oom: false },
+            EventKind::Finish { serial: 0, reason: FinishClass::Length, tokens: 24 },
+            EventKind::Quality(Quality {
+                serial: 0,
+                layer: 1,
+                rows: 16,
+                prefill: false,
+                side: KvKind::Key,
+                bytes: 512,
+                pred_bytes: 512,
+                err_fro: 0.25,
+                quant_resid_fro: 0.5,
+                lowrank_fro: 0.4,
+                outlier_fro: 0.0,
+            }),
+            EventKind::Phase { phase: SweepPhase::Decode },
+            EventKind::Chunk { n_seqs: 2 },
+            EventKind::StageSpan { stage: 0, busy: true },
+            EventKind::FlushRun { layer: 1 },
+        ];
+        kinds
+            .into_iter()
+            .enumerate()
+            .map(|(i, kind)| Event {
+                t_ns: 1000 + i as u64,
+                dur_ns: if kind.is_logical() { 0 } else { 50 },
+                writer: match i % 3 {
+                    0 => Writer::Engine,
+                    1 => Writer::Worker(2),
+                    _ => Writer::Stage(1),
+                },
+                kind,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_kind_round_trips_through_the_validator() {
+        let events = one_of_each();
+        assert_eq!(events.len(), KIND_FIELDS.len(), "one sample per declared kind");
+        let jsonl = render_jsonl(&events);
+        let n = validate_jsonl(&jsonl).expect("schema-valid journal");
+        assert_eq!(n, events.len());
+    }
+
+    #[test]
+    fn validator_rejects_undeclared_keys_and_kinds() {
+        let good = render_jsonl(&one_of_each());
+        let mut lines: Vec<&str> = good.lines().collect();
+        let bad_kind = "{\"t_ns\":1,\"dur_ns\":0,\"writer\":\"engine\",\"kind\":\"bogus\"}";
+        lines.push(bad_kind);
+        assert!(validate_jsonl(&lines.join("\n")).unwrap_err().contains("bogus"));
+
+        let mut lines: Vec<&str> = good.lines().collect();
+        let extra_key =
+            "{\"t_ns\":1,\"dur_ns\":0,\"writer\":\"engine\",\"kind\":\"first_token\",\
+             \"serial\":0,\"smuggled\":1}";
+        lines.push(extra_key);
+        assert!(validate_jsonl(&lines.join("\n")).is_err());
+
+        // Journal without a schema line fails immediately.
+        assert!(validate_jsonl("{\"t_ns\":0}").is_err());
+    }
+
+    #[test]
+    fn perfetto_document_parses_and_names_tracks() {
+        let doc = render_perfetto(&one_of_each());
+        let v = parse_json(&doc).expect("valid JSON");
+        let evs = v.get("traceEvents").and_then(JsonVal::as_arr).expect("traceEvents array");
+        // 3 distinct writers -> 3 thread_name metadata entries + the events.
+        assert_eq!(evs.len(), 3 + KIND_FIELDS.len());
+        let meta: Vec<&JsonVal> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(JsonVal::as_str) == Some("M"))
+            .collect();
+        assert_eq!(meta.len(), 3);
+        let names: Vec<&str> = meta
+            .iter()
+            .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(JsonVal::as_str))
+            .collect();
+        assert!(names.contains(&"engine"));
+        assert!(names.contains(&"worker2"));
+        assert!(names.contains(&"stage1"));
+        // Spans carry durations, instants don't.
+        assert!(evs.iter().any(|e| e.get("ph").and_then(JsonVal::as_str) == Some("X")));
+        assert!(evs.iter().any(|e| e.get("ph").and_then(JsonVal::as_str) == Some("i")));
+    }
+
+    #[test]
+    fn schema_line_is_valid_json_and_covers_all_kinds() {
+        let v = parse_json(&jsonl_schema_line()).expect("valid JSON");
+        let kinds = v.get("schema").and_then(|s| s.get("kinds")).and_then(JsonVal::as_obj);
+        assert_eq!(kinds.map(|k| k.len()), Some(KIND_FIELDS.len()));
+    }
+
+    #[test]
+    fn parser_handles_nested_values_and_rejects_trailing_data() {
+        let v = parse_json("{\"a\":[1,2.5,-3e2],\"b\":{\"c\":null,\"d\":true}}").unwrap();
+        assert_eq!(v.get("a").and_then(JsonVal::as_arr).map(|a| a.len()), Some(3));
+        assert_eq!(v.get("b").and_then(|b| b.get("d")), Some(&JsonVal::Bool(true)));
+        assert!(parse_json("{} junk").is_err());
+        assert!(parse_json("{\"unterminated").is_err());
+        assert!(parse_json("{\"esc\":\"a\\nb\"}").is_err());
+    }
+}

@@ -1,0 +1,773 @@
+//! Structured engine tracing: per-thread event rings, request lifecycle
+//! events, sweep-phase spans, and GEAR quality telemetry.
+//!
+//! ## Ring ownership and the hot-path contract
+//!
+//! Every thread that can observe engine work owns at most one
+//! pre-allocated event ring, stored in a thread local:
+//!
+//! * the **engine thread** writes through its [`Tracer`] (created per
+//!   engine when tracing is enabled), which owns the largest ring and is
+//!   the single point where all events are eventually folded;
+//! * each **pool worker** lazily allocates a thread-local ring the first
+//!   time it emits a traced event and drains it into a caller-owned slot
+//!   at the end of every chunk / stage / flush it runs — the fold points
+//!   mirror [`crate::gear::take_phase_timings`], so no cross-thread
+//!   channel or shared lock ever appears on the emission path.
+//!
+//! When tracing is **off** the cost model is strict: no ring is
+//! allocated anywhere (asserted by [`rings_allocated`] in
+//! `tests/trace_golden.rs`), no lock is taken, and the only residue on
+//! the hot path is a single relaxed atomic load per potential emission
+//! site (the executor caches even that in a plain `bool` per sweep).
+//!
+//! ## Logical vs. timing events
+//!
+//! [`EventKind`] splits into two families:
+//!
+//! * **logical** events (`EventKind::is_logical`) are emitted by the
+//!   engine thread at policy commit points — admission, reservation,
+//!   prefill-chunk layout, seal/submit/join of segment flushes,
+//!   preemption, first token, finish, and per-layer GEAR [`Quality`]
+//!   records. Their payloads carry no timing data. Because the policy
+//!   plane is deterministic by construction, the logical stream is
+//!   **bit-identical across [`crate::coordinator::ExecMode`]s and pool
+//!   sizes** — `tests/trace_golden.rs` enforces this as a cross-plane
+//!   oracle on top of the token-stream goldens.
+//! * **timing** events (phase / chunk / stage / flush-run spans) record
+//!   where wall time went. Their count and interleaving legitimately
+//!   depend on pool width and mode, so they are excluded from the
+//!   golden comparison.
+//!
+//! ## Export
+//!
+//! [`Tracer::export_files`] (in [`export`]) writes a Chrome-trace /
+//! Perfetto JSON (workers and stages as named tracks) plus a JSONL
+//! journal whose first line declares the schema, in the same spirit as
+//! `BENCH_throughput.json`'s `schema` object. [`Tracer::summary`] folds
+//! an aggregate [`TraceSummary`] into
+//! [`crate::coordinator::EngineMetrics`].
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::gear::KvKind;
+
+/// Capacity of a worker's lazily-allocated thread-local ring. Workers
+/// drain at every chunk/stage/flush boundary, so this only needs to hold
+/// one fold interval's worth of events.
+const WORKER_RING_CAP: usize = 4096;
+
+/// Capacity of the engine [`Tracer`] ring, which holds a whole run.
+const ENGINE_RING_CAP: usize = 1 << 16;
+
+/// Process-wide count of live [`Tracer`]s. The single relaxed load of
+/// this counter is the documented tracing-off cost on shared code paths
+/// (e.g. the quality probe inside `gear::compose::compress`).
+static ACTIVE_TRACERS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of rings ever allocated (engine + thread-local).
+/// Monotonic; the disabled-mode test asserts it does not move.
+static RINGS_ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+/// Events discarded because a ring was full (drop-new policy).
+static EVENTS_DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// Common time origin for every ring in the process, so events from
+/// different threads land on one comparable axis.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Number of event rings ever allocated in this process (monotonic).
+/// A run with tracing disabled must leave this unchanged.
+pub fn rings_allocated() -> u64 {
+    RINGS_ALLOCATED.load(Ordering::Relaxed)
+}
+
+/// True when at least one [`Tracer`] is alive anywhere in the process.
+/// One relaxed atomic load — the entire tracing-off cost at call sites
+/// that cannot see an engine-owned flag.
+pub(crate) fn tracing_active() -> bool {
+    ACTIVE_TRACERS.load(Ordering::Relaxed) > 0
+}
+
+/// Nanoseconds since the process-wide trace epoch.
+pub(crate) fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Which track an event belongs to. Rings are owned per *thread*;
+/// writers are the logical tracks events are attributed to (a pool
+/// worker executing a pipeline stage emits that stage's span with a
+/// [`Writer::Stage`] writer from its own thread-local ring).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Writer {
+    /// The engine (policy) thread.
+    Engine,
+    /// Pool worker `i` (thread `gear-exec-i`).
+    Worker(u16),
+    /// Pipeline stage `s` of the layer-sharded decode plane.
+    Stage(u16),
+}
+
+/// Why a request finished, as recorded in the trace. Mirrors
+/// [`crate::coordinator::FinishReason`] without the payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishClass {
+    /// Hit a stop token.
+    Stop,
+    /// Hit `max_new_tokens`.
+    Length,
+    /// Evicted terminally or rejected at admission for byte budget.
+    Oom,
+}
+
+/// The engine sweep phase a timing span covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepPhase {
+    /// Byte reservation / preemption loop.
+    Reserve,
+    /// Chunked prefill round.
+    Prefill,
+    /// Batched decode step.
+    Decode,
+    /// Joining last sweep's flush tickets.
+    Flush,
+}
+
+/// One per-matrix GEAR quality record: achieved bytes vs.
+/// [`crate::gear::size::predict`], plus the Frobenius norms of the
+/// Eq. (4) components so the per-layer error budget is visible.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quality {
+    /// Admission serial of the request whose segment was compressed.
+    pub serial: u64,
+    /// Layer index of the cache the segment belongs to.
+    pub layer: u32,
+    /// Token rows in the compressed segment.
+    pub rows: u32,
+    /// True for prefill (rank `r_p`) compression, false for a sealed
+    /// decode-buffer flush (rank `r_g`).
+    pub prefill: bool,
+    /// Key or Value matrix.
+    pub side: KvKind,
+    /// Achieved compressed size in bytes (`CompressedMatrix::nbytes`).
+    pub bytes: u64,
+    /// Predicted size from `gear::size::predict` (exact by contract).
+    pub pred_bytes: u64,
+    /// `‖X − (D̂ + L + S)‖_F` — total reconstruction error.
+    pub err_fro: f32,
+    /// `‖X − D̂ − S‖_F` — the residual the low-rank term approximates.
+    pub quant_resid_fro: f32,
+    /// `‖L‖_F` — energy captured by the low-rank term.
+    pub lowrank_fro: f32,
+    /// `‖S‖_F` — energy carried by the sparse outliers.
+    pub outlier_fro: f32,
+}
+
+impl Quality {
+    /// Attach request/layer identity to a staged observation at its
+    /// deterministic drain point (prefill commit or flush join).
+    pub(crate) fn from_staged(
+        q: &QualityStaged,
+        serial: u64,
+        layer: u32,
+        prefill: bool,
+    ) -> Quality {
+        Quality {
+            serial,
+            layer,
+            rows: q.rows,
+            prefill,
+            side: q.side,
+            bytes: q.bytes,
+            pred_bytes: q.pred_bytes,
+            err_fro: q.err_fro,
+            quant_resid_fro: q.quant_resid_fro,
+            lowrank_fro: q.lowrank_fro,
+            outlier_fro: q.outlier_fro,
+        }
+    }
+}
+
+/// A trace event payload. Logical kinds (see [`EventKind::is_logical`])
+/// form the mode-independent golden stream; timing kinds are spans whose
+/// shape depends on pool width and exec mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Request handed to [`crate::coordinator::Engine::submit`].
+    Enqueue {
+        /// Caller-assigned request id.
+        req_id: u64,
+    },
+    /// Scheduler admitted the request and assigned its serial.
+    Admit {
+        /// Admission serial (total order over admissions).
+        serial: u64,
+        /// Caller-assigned request id.
+        req_id: u64,
+    },
+    /// Byte reservation for one active request this sweep.
+    Reserve {
+        /// Admission serial.
+        serial: u64,
+        /// Bytes reserved (current footprint + step growth bound).
+        bytes: u64,
+    },
+    /// One prefill chunk scheduled for a request this sweep.
+    PrefillChunk {
+        /// Admission serial.
+        serial: u64,
+        /// Prompt rows in this chunk.
+        rows: u32,
+    },
+    /// One batched decode step over the active set.
+    DecodeStep {
+        /// Sequences decoded this step.
+        n_seqs: u32,
+    },
+    /// First generated token committed for a request.
+    FirstToken {
+        /// Admission serial.
+        serial: u64,
+    },
+    /// A streaming-buffer segment sealed and detached for compression.
+    Seal {
+        /// Admission serial.
+        serial: u64,
+        /// Layer index.
+        layer: u32,
+        /// Rows in the sealed segment.
+        rows: u32,
+    },
+    /// Sealed segment submitted to the flush lane.
+    FlushSubmit {
+        /// Admission serial.
+        serial: u64,
+        /// Layer index.
+        layer: u32,
+        /// Rows in the submitted segment.
+        rows: u32,
+    },
+    /// Flush ticket joined; compressed segment installed at commit.
+    FlushJoin {
+        /// Admission serial.
+        serial: u64,
+        /// Layer index.
+        layer: u32,
+    },
+    /// Scheduler preempted the youngest active request.
+    Preempt {
+        /// Admission serial of the victim.
+        serial: u64,
+        /// True if the victim could not be requeued and finished OOM.
+        oom: bool,
+    },
+    /// Request left the active set.
+    Finish {
+        /// Admission serial.
+        serial: u64,
+        /// Why it finished.
+        reason: FinishClass,
+        /// Generated tokens at finish.
+        tokens: u32,
+    },
+    /// Per-matrix GEAR quality record (see [`Quality`]).
+    Quality(Quality),
+    /// Timing: one engine sweep phase (engine thread).
+    Phase {
+        /// Which phase the span covers.
+        phase: SweepPhase,
+    },
+    /// Timing: one decode/prefill chunk executed by a pool worker.
+    Chunk {
+        /// Sequences (decode) or slots (prefill) in the chunk.
+        n_seqs: u32,
+    },
+    /// Timing: a pipeline stage interval — busy (executing its layer
+    /// range) or a bubble (waiting on the upstream hand-off).
+    StageSpan {
+        /// Stage index.
+        stage: u16,
+        /// True for busy execution, false for a hand-off bubble.
+        busy: bool,
+    },
+    /// Timing: the worker-side run of one submitted flush job.
+    FlushRun {
+        /// Layer index of the flushed cache.
+        layer: u32,
+    },
+}
+
+impl EventKind {
+    /// Whether this kind belongs to the deterministic logical stream
+    /// (true) or to the mode-dependent timing family (false).
+    pub fn is_logical(&self) -> bool {
+        !matches!(
+            self,
+            EventKind::Phase { .. }
+                | EventKind::Chunk { .. }
+                | EventKind::StageSpan { .. }
+                | EventKind::FlushRun { .. }
+        )
+    }
+
+    /// Stable snake_case name used by both export formats and the JSONL
+    /// schema object.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Enqueue { .. } => "enqueue",
+            EventKind::Admit { .. } => "admit",
+            EventKind::Reserve { .. } => "reserve",
+            EventKind::PrefillChunk { .. } => "prefill_chunk",
+            EventKind::DecodeStep { .. } => "decode_step",
+            EventKind::FirstToken { .. } => "first_token",
+            EventKind::Seal { .. } => "seal",
+            EventKind::FlushSubmit { .. } => "flush_submit",
+            EventKind::FlushJoin { .. } => "flush_join",
+            EventKind::Preempt { .. } => "preempt",
+            EventKind::Finish { .. } => "finish",
+            EventKind::Quality(_) => "quality",
+            EventKind::Phase { .. } => "phase",
+            EventKind::Chunk { .. } => "chunk",
+            EventKind::StageSpan { .. } => "stage_span",
+            EventKind::FlushRun { .. } => "flush_run",
+        }
+    }
+}
+
+/// One recorded event: a payload plus the track it belongs to and its
+/// position (and, for spans, extent) on the shared time axis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Nanoseconds since the process trace epoch.
+    pub t_ns: u64,
+    /// Span duration in nanoseconds; 0 for instant events.
+    pub dur_ns: u64,
+    /// Logical track.
+    pub writer: Writer,
+    /// Payload.
+    pub kind: EventKind,
+}
+
+/// Fixed-capacity event buffer. Pushes past capacity are dropped (the
+/// *new* event is discarded so the recorded prefix stays contiguous) and
+/// counted in the process-wide drop counter.
+#[derive(Debug)]
+struct Ring {
+    buf: Vec<Event>,
+}
+
+impl Ring {
+    fn with_capacity(cap: usize) -> Self {
+        RINGS_ALLOCATED.fetch_add(1, Ordering::Relaxed);
+        Ring { buf: Vec::with_capacity(cap) }
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(ev);
+        } else {
+            EVENTS_DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Take the buffered events, keeping the allocation.
+    fn drain(&mut self) -> Vec<Event> {
+        self.buf.drain(..).collect()
+    }
+}
+
+/// One GEAR quality observation staged by `gear::compose::compress`
+/// before the caller can attribute it to a (serial, layer). The engine
+/// (prefill commit) or flush lane (segment compression) drains these in
+/// deterministic order — K then V per layer — and attaches identity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QualityStaged {
+    /// Key or Value matrix.
+    pub side: KvKind,
+    /// Token rows compressed.
+    pub rows: u32,
+    /// Channels.
+    pub cols: u32,
+    /// Achieved compressed bytes.
+    pub bytes: u64,
+    /// Predicted bytes from `gear::size::predict`.
+    pub pred_bytes: u64,
+    /// `‖X − (D̂ + L + S)‖_F`.
+    pub err_fro: f32,
+    /// `‖X − D̂ − S‖_F`.
+    pub quant_resid_fro: f32,
+    /// `‖L‖_F`.
+    pub lowrank_fro: f32,
+    /// `‖S‖_F`.
+    pub outlier_fro: f32,
+}
+
+struct TlState {
+    writer: Writer,
+    ring: Option<Ring>,
+    quality_on: bool,
+    staged: Vec<QualityStaged>,
+}
+
+thread_local! {
+    static TL: RefCell<TlState> = RefCell::new(TlState {
+        writer: Writer::Engine,
+        ring: None,
+        quality_on: false,
+        staged: Vec::new(),
+    });
+}
+
+/// Declare which logical track this thread's emissions belong to.
+/// Called once by each pool worker at thread start; allocates nothing.
+pub(crate) fn set_thread_writer(w: Writer) {
+    TL.with(|tl| tl.borrow_mut().writer = w);
+}
+
+/// This thread's declared track ([`Writer::Engine`] if never declared).
+pub(crate) fn thread_writer() -> Writer {
+    TL.with(|tl| tl.borrow().writer)
+}
+
+/// Emit a span that started at `start_ns` and ends now, optionally
+/// attributed to an explicit writer (e.g. a stage track) instead of the
+/// thread default.
+pub(crate) fn emit_thread_span(writer: Option<Writer>, kind: EventKind, start_ns: u64) {
+    let now = now_ns();
+    emit_thread_raw(writer, kind, start_ns, now.saturating_sub(start_ns));
+}
+
+/// Emit an event at an explicit position/extent on the time axis (used
+/// for the pipeline plane's aggregate busy/bubble placement).
+pub(crate) fn emit_thread_at(writer: Option<Writer>, kind: EventKind, t_ns: u64, dur_ns: u64) {
+    emit_thread_raw(writer, kind, t_ns, dur_ns);
+}
+
+fn emit_thread_raw(writer: Option<Writer>, kind: EventKind, t_ns: u64, dur_ns: u64) {
+    TL.with(|tl| {
+        let mut tl = tl.borrow_mut();
+        let w = writer.unwrap_or(tl.writer);
+        let ring = tl.ring.get_or_insert_with(|| Ring::with_capacity(WORKER_RING_CAP));
+        ring.push(Event { t_ns, dur_ns, writer: w, kind });
+    });
+}
+
+/// Drain this thread's ring. Workers call this at every fold point
+/// (end of chunk / stage / flush) so their events travel back to the
+/// engine through the same caller-owned slots as the phase timers.
+pub(crate) fn drain_thread() -> Vec<Event> {
+    TL.with(|tl| tl.borrow_mut().ring.as_mut().map(Ring::drain).unwrap_or_default())
+}
+
+/// Whether `gear::compose::compress` should stage a quality record.
+/// Costs one relaxed atomic load when no tracer exists in the process;
+/// the thread-local flag is only consulted after that fast-out.
+pub(crate) fn quality_capture_on() -> bool {
+    tracing_active() && TL.with(|tl| tl.borrow().quality_on)
+}
+
+/// Scope the quality probe for compress calls on this thread. Set only
+/// around attributable compressions (prefill commit, flush run) so
+/// unrelated compress calls never stage records.
+pub(crate) fn set_quality_capture(on: bool) {
+    TL.with(|tl| tl.borrow_mut().quality_on = on);
+}
+
+/// Stage one quality observation on this thread (identity attached
+/// later by whoever drains it).
+pub(crate) fn stage_quality(q: QualityStaged) {
+    TL.with(|tl| tl.borrow_mut().staged.push(q));
+}
+
+/// Take every staged quality observation on this thread.
+pub(crate) fn take_staged_quality() -> Vec<QualityStaged> {
+    TL.with(|tl| std::mem::take(&mut tl.borrow_mut().staged))
+}
+
+/// Aggregate of one traced run, folded into
+/// [`crate::coordinator::EngineMetrics`] and rendered by the server's
+/// plain-text `metrics` verb.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TraceSummary {
+    /// Total events recorded (logical + timing).
+    pub events: u64,
+    /// Logical events among them.
+    pub logical_events: u64,
+    /// Events discarded to full rings during the run.
+    pub dropped: u64,
+    /// Quality records discarded because attribution was ambiguous.
+    pub quality_dropped: u64,
+    /// Requests admitted.
+    pub admitted: u64,
+    /// Preemption events.
+    pub preemptions: u64,
+    /// Flush tickets joined.
+    pub flushes: u64,
+    /// Requests finished (any reason).
+    pub finished: u64,
+    /// Requests finished out-of-memory.
+    pub oom_finished: u64,
+    /// Quality records captured.
+    pub quality_records: u64,
+    /// Sum of achieved compressed bytes over quality records.
+    pub bytes_actual: u64,
+    /// Sum of predicted bytes over quality records.
+    pub bytes_predicted: u64,
+    /// Largest per-matrix reconstruction error `‖X − X̂‖_F`.
+    pub max_err_fro: f32,
+    /// Mean per-matrix reconstruction error.
+    pub mean_err_fro: f32,
+}
+
+/// Engine-side trace collector: the engine thread's ring plus the fold
+/// target for worker/stage/flush events. Created per engine when
+/// tracing is enabled; its existence flips the process-wide
+/// [`tracing_active`] gate.
+#[derive(Debug)]
+pub struct Tracer {
+    ring: Ring,
+    path: Option<PathBuf>,
+    dropped_at_start: u64,
+    quality_dropped: u64,
+}
+
+impl Tracer {
+    /// Create a tracer. With a path, [`Tracer::export_files`] writes the
+    /// Perfetto JSON there and the JSONL journal next to it; without
+    /// one the trace is capture-only (used by the golden tests).
+    pub fn new(path: Option<PathBuf>) -> Self {
+        ACTIVE_TRACERS.fetch_add(1, Ordering::Relaxed);
+        Tracer {
+            ring: Ring::with_capacity(ENGINE_RING_CAP),
+            path,
+            dropped_at_start: EVENTS_DROPPED.load(Ordering::Relaxed),
+            quality_dropped: 0,
+        }
+    }
+
+    /// Export target, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Emit an instant event on the engine track.
+    pub(crate) fn emit(&mut self, kind: EventKind) {
+        self.ring.push(Event { t_ns: now_ns(), dur_ns: 0, writer: Writer::Engine, kind });
+    }
+
+    /// Emit an engine-track span that started at `start_ns`.
+    pub(crate) fn emit_span(&mut self, kind: EventKind, start_ns: u64) {
+        let now = now_ns();
+        self.ring.push(Event {
+            t_ns: start_ns,
+            dur_ns: now.saturating_sub(start_ns),
+            writer: Writer::Engine,
+            kind,
+        });
+    }
+
+    /// Append events drained from a worker/stage/flush fold point. The
+    /// fold positions are deterministic (fixed points in the sweep), so
+    /// the journal order is reproducible even though folded timestamps
+    /// predate neighbouring engine events.
+    pub(crate) fn fold(&mut self, events: Vec<Event>) {
+        for ev in events {
+            self.ring.push(ev);
+        }
+    }
+
+    /// Count quality records that had to be discarded because their
+    /// (serial, layer) attribution was ambiguous.
+    pub(crate) fn note_quality_dropped(&mut self, n: u64) {
+        self.quality_dropped += n;
+    }
+
+    /// All recorded events, in emission/fold order.
+    pub fn events(&self) -> &[Event] {
+        &self.ring.buf
+    }
+
+    /// The logical stream: payloads of logical events in order, with
+    /// timestamps stripped. Bit-identical across exec modes and pool
+    /// sizes — the golden-test comparison key.
+    pub fn logical(&self) -> Vec<EventKind> {
+        self.ring.buf.iter().filter(|e| e.kind.is_logical()).map(|e| e.kind).collect()
+    }
+
+    /// Fold the recorded run into an aggregate.
+    pub fn summary(&self) -> TraceSummary {
+        let mut s = TraceSummary {
+            events: self.ring.buf.len() as u64,
+            dropped: EVENTS_DROPPED
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.dropped_at_start),
+            quality_dropped: self.quality_dropped,
+            ..TraceSummary::default()
+        };
+        let mut err_sum = 0.0f64;
+        for ev in &self.ring.buf {
+            if ev.kind.is_logical() {
+                s.logical_events += 1;
+            }
+            match ev.kind {
+                EventKind::Admit { .. } => s.admitted += 1,
+                EventKind::Preempt { .. } => s.preemptions += 1,
+                EventKind::FlushJoin { .. } => s.flushes += 1,
+                EventKind::Finish { reason, .. } => {
+                    s.finished += 1;
+                    if reason == FinishClass::Oom {
+                        s.oom_finished += 1;
+                    }
+                }
+                EventKind::Quality(q) => {
+                    s.quality_records += 1;
+                    s.bytes_actual += q.bytes;
+                    s.bytes_predicted += q.pred_bytes;
+                    s.max_err_fro = s.max_err_fro.max(q.err_fro);
+                    err_sum += f64::from(q.err_fro);
+                }
+                _ => {}
+            }
+        }
+        if s.quality_records > 0 {
+            s.mean_err_fro = (err_sum / s.quality_records as f64) as f32;
+        }
+        s
+    }
+}
+
+impl Drop for Tracer {
+    fn drop(&mut self) {
+        ACTIVE_TRACERS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind) -> Event {
+        Event { t_ns: 1, dur_ns: 0, writer: Writer::Engine, kind }
+    }
+
+    #[test]
+    fn ring_drops_new_events_when_full() {
+        let mut r = Ring::with_capacity(2);
+        let cap = r.buf.capacity();
+        for i in 0..cap + 3 {
+            r.push(ev(EventKind::DecodeStep { n_seqs: i as u32 }));
+        }
+        assert_eq!(r.buf.len(), cap);
+        // The retained prefix is the *oldest* events.
+        assert_eq!(r.buf[0].kind, EventKind::DecodeStep { n_seqs: 0 });
+        let drained = r.drain();
+        assert_eq!(drained.len(), cap);
+        assert!(r.buf.is_empty());
+        // Allocation survives the drain.
+        assert_eq!(r.buf.capacity(), cap);
+    }
+
+    #[test]
+    fn logical_filter_excludes_timing_kinds() {
+        let mut t = Tracer::new(None);
+        t.emit(EventKind::Admit { serial: 0, req_id: 7 });
+        t.emit(EventKind::Phase { phase: SweepPhase::Decode });
+        t.emit(EventKind::Chunk { n_seqs: 3 });
+        t.emit(EventKind::StageSpan { stage: 1, busy: true });
+        t.emit(EventKind::FlushRun { layer: 0 });
+        t.emit(EventKind::FirstToken { serial: 0 });
+        assert_eq!(
+            t.logical(),
+            vec![
+                EventKind::Admit { serial: 0, req_id: 7 },
+                EventKind::FirstToken { serial: 0 },
+            ]
+        );
+        let s = t.summary();
+        assert_eq!(s.events, 6);
+        assert_eq!(s.logical_events, 2);
+        assert_eq!(s.admitted, 1);
+    }
+
+    #[test]
+    fn summary_aggregates_quality_records() {
+        let mut t = Tracer::new(None);
+        for (i, err) in [0.5f32, 1.5f32].into_iter().enumerate() {
+            t.emit(EventKind::Quality(Quality {
+                serial: 3,
+                layer: i as u32,
+                rows: 16,
+                prefill: false,
+                side: KvKind::Key,
+                bytes: 100,
+                pred_bytes: 100,
+                err_fro: err,
+                quant_resid_fro: 2.0,
+                lowrank_fro: 1.0,
+                outlier_fro: 0.0,
+            }));
+        }
+        let s = t.summary();
+        assert_eq!(s.quality_records, 2);
+        assert_eq!(s.bytes_actual, 200);
+        assert_eq!(s.bytes_predicted, 200);
+        assert_eq!(s.max_err_fro, 1.5);
+        assert!((s.mean_err_fro - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn thread_local_emission_folds_back_in_order() {
+        let t0 = std::thread::spawn(|| {
+            set_thread_writer(Writer::Worker(3));
+            emit_thread_at(None, EventKind::Chunk { n_seqs: 2 }, now_ns(), 0);
+            emit_thread_span(
+                Some(Writer::Stage(1)),
+                EventKind::StageSpan { stage: 1, busy: true },
+                now_ns(),
+            );
+            drain_thread()
+        })
+        .join()
+        .unwrap();
+        assert_eq!(t0.len(), 2);
+        assert_eq!(t0[0].writer, Writer::Worker(3));
+        assert_eq!(t0[1].writer, Writer::Stage(1));
+        let mut tr = Tracer::new(None);
+        tr.fold(t0);
+        assert_eq!(tr.events().len(), 2);
+        // This thread never emitted, so its drain is an allocation-free no-op.
+        assert!(drain_thread().is_empty());
+    }
+
+    #[test]
+    fn quality_staging_round_trips() {
+        std::thread::spawn(|| {
+            assert!(take_staged_quality().is_empty());
+            set_quality_capture(true);
+            stage_quality(QualityStaged {
+                side: KvKind::Value,
+                rows: 8,
+                cols: 4,
+                bytes: 64,
+                pred_bytes: 64,
+                err_fro: 0.1,
+                quant_resid_fro: 0.2,
+                lowrank_fro: 0.05,
+                outlier_fro: 0.0,
+            });
+            set_quality_capture(false);
+            let staged = take_staged_quality();
+            assert_eq!(staged.len(), 1);
+            assert_eq!(staged[0].side, KvKind::Value);
+            assert!(take_staged_quality().is_empty());
+        })
+        .join()
+        .unwrap();
+    }
+}

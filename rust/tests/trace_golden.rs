@@ -1,0 +1,198 @@
+//! Golden tests for the structured trace plane: the *logical* event
+//! stream (request lifecycle, sweep policy decisions, flush protocol,
+//! GEAR quality records — everything except timing spans) must be
+//! bit-identical across `ExecMode::{Sequential, Batched, Pipelined}`,
+//! every pool size, and every stage count, including through preemption
+//! mid-pipeline. Tracing disabled must cost nothing observable: no
+//! events, no ring allocations. And the JSONL journal must round-trip
+//! through the schema-validating parser.
+
+use std::sync::Mutex;
+
+use gear_serve::coordinator::engine::{Engine, EngineConfig};
+use gear_serve::coordinator::request::{FinishReason, GenRequest};
+use gear_serve::coordinator::ExecMode;
+use gear_serve::kvcache::CacheSpec;
+use gear_serve::model::config::ModelConfig;
+use gear_serve::model::{Model, ModelWeights};
+use gear_serve::trace::export::{parse_json, validate_jsonl};
+use gear_serve::trace::{rings_allocated, EventKind};
+
+/// `trace::rings_allocated()` is a process-global monotone counter, so
+/// every test in this binary serializes on this lock — a traced test
+/// running concurrently with the disabled-mode test would bump the
+/// counter mid-delta and fail it spuriously.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking test must not poison the others.
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny_model() -> Model {
+    let cfg = ModelConfig { vocab: 13, d_model: 64, n_layers: 2, n_heads: 2, max_seq: 160 };
+    Model::new(ModelWeights::random(cfg, 11))
+}
+
+/// The tight-budget compressed spec from `pool_golden`: a two-token
+/// streaming buffer under a 64 KiB budget drives flush-driven growth
+/// into the budget mid-sweep, so the run preempts — the trace must hold
+/// identical through rollback on every plane.
+fn preempt_spec() -> CacheSpec {
+    CacheSpec::Compressed {
+        method: gear_serve::gear::Method::GearL {
+            bits: 2,
+            backbone: gear_serve::gear::compose::Backbone::Kivi(16),
+            r: 4,
+        },
+        buffer: 2,
+        prefill_rank: 4,
+        decode_rank: 4,
+    }
+}
+
+const BUDGET: usize = 64 << 10;
+
+fn traced_engine(exec: ExecMode, pool: usize, stages: usize) -> Engine {
+    let cfg = EngineConfig::new(preempt_spec())
+        .with_budget(BUDGET)
+        .with_max_batch(16)
+        .with_exec(exec)
+        .with_pool_threads(pool)
+        .with_pipeline_stages(stages)
+        .with_trace_capture();
+    Engine::new(tiny_model(), cfg)
+}
+
+/// Submit the `pool_golden` preemption wave and return the logical
+/// event stream.
+fn run_logical(e: &mut Engine) -> Vec<EventKind> {
+    for i in 0..12u64 {
+        let prompt: Vec<u32> = (0..20).map(|t| ((t + i as usize) % 10) as u32 + 3).collect();
+        e.submit(GenRequest::greedy(i, prompt, 24));
+    }
+    let results = e.run_to_completion();
+    assert_eq!(results.len(), 12);
+    assert!(results.iter().all(|r| r.finish != FinishReason::OutOfMemory));
+    e.tracer().expect("trace_capture engine must own a tracer").logical()
+}
+
+/// Tentpole determinism contract: the logical stream is a pure function
+/// of the request set and policy, never of the execution plane. Pool
+/// sizes {1, 4} pin both the inline fallback and real fan-out; stage
+/// counts {1, n_layers} pin the degenerate and fully-sharded pipeline —
+/// all under active preemption.
+#[test]
+fn logical_stream_identical_across_planes() {
+    let _g = lock();
+    let mut seq = traced_engine(ExecMode::Sequential, 1, 1);
+    let reference = run_logical(&mut seq);
+
+    // The scenario really exercises every logical family.
+    let has = |f: fn(&EventKind) -> bool| reference.iter().any(f);
+    assert!(has(|k| matches!(k, EventKind::Enqueue { .. })));
+    assert!(has(|k| matches!(k, EventKind::Admit { .. })));
+    assert!(has(|k| matches!(k, EventKind::Reserve { .. })));
+    assert!(has(|k| matches!(k, EventKind::PrefillChunk { .. })));
+    assert!(has(|k| matches!(k, EventKind::DecodeStep { .. })));
+    assert!(has(|k| matches!(k, EventKind::FirstToken { .. })));
+    assert!(has(|k| matches!(k, EventKind::Seal { .. })));
+    assert!(has(|k| matches!(k, EventKind::FlushSubmit { .. })));
+    assert!(has(|k| matches!(k, EventKind::FlushJoin { .. })));
+    assert!(has(|k| matches!(k, EventKind::Preempt { .. })), "scenario must preempt");
+    assert!(has(|k| matches!(k, EventKind::Finish { .. })));
+    assert!(has(|k| matches!(k, EventKind::Quality(_))), "GEAR quality records missing");
+
+    for pool in [1, 4] {
+        let mut e = traced_engine(ExecMode::Batched, pool, 1);
+        assert_eq!(reference, run_logical(&mut e), "batched pool {pool}");
+    }
+    for stages in [1, 2] {
+        // n_layers = 2, so stages = 2 is one layer per stage.
+        let mut e = traced_engine(ExecMode::Pipelined, 4, stages);
+        assert_eq!(reference, run_logical(&mut e), "pipelined stages {stages}");
+    }
+}
+
+/// Disabled-mode contract: an untraced engine emits zero events and
+/// allocates zero rings — the only cost left on the hot path is the
+/// relaxed `tracing_active()` load.
+#[test]
+fn disabled_run_emits_nothing_and_allocates_no_rings() {
+    let _g = lock();
+    if std::env::var_os("GEAR_TRACE").is_some() {
+        // The engine constructor honours GEAR_TRACE, which would turn
+        // this into a traced run; the CI trace job sets it only for
+        // engine_e2e, so this is a local-environment escape hatch.
+        eprintln!("GEAR_TRACE set; skipping disabled-mode check");
+        return;
+    }
+    let before = rings_allocated();
+    let cfg = EngineConfig::new(preempt_spec())
+        .with_budget(BUDGET)
+        .with_max_batch(16)
+        .with_exec(ExecMode::Batched)
+        .with_pool_threads(2);
+    let mut e = Engine::new(tiny_model(), cfg);
+    for i in 0..6u64 {
+        let prompt: Vec<u32> = (0..20).map(|t| ((t + i as usize) % 10) as u32 + 3).collect();
+        e.submit(GenRequest::greedy(i, prompt, 24));
+    }
+    assert_eq!(e.run_to_completion().len(), 6);
+    assert!(e.tracer().is_none(), "untraced engine must not own a tracer");
+    assert!(e.metrics.trace.is_none(), "untraced metrics must carry no summary");
+    assert_eq!(
+        rings_allocated(),
+        before,
+        "a disabled run allocated trace rings (worker thread-locals leaked through the gate)"
+    );
+}
+
+/// Export contract: a traced run writes a Perfetto document whose
+/// `traceEvents` carry all three event families, plus a JSONL journal
+/// that round-trips through the schema-validating parser.
+#[test]
+fn jsonl_roundtrips_through_validating_parser() {
+    let _g = lock();
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("trace_golden_{}.json", std::process::id()));
+    let cfg = EngineConfig::new(preempt_spec())
+        .with_budget(BUDGET)
+        .with_max_batch(16)
+        .with_exec(ExecMode::Batched)
+        .with_pool_threads(2)
+        .with_trace(&path);
+    let mut e = Engine::new(tiny_model(), cfg);
+    for i in 0..6u64 {
+        let prompt: Vec<u32> = (0..20).map(|t| ((t + i as usize) % 10) as u32 + 3).collect();
+        e.submit(GenRequest::greedy(i, prompt, 24));
+    }
+    assert_eq!(e.run_to_completion().len(), 6);
+
+    // Perfetto document: valid JSON, non-empty traceEvents, all three
+    // event families (lifecycle, sweep span, quality) present.
+    let perfetto = std::fs::read_to_string(&path).expect("perfetto file written");
+    let doc = parse_json(&perfetto).expect("perfetto output is valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array present");
+    assert!(!events.is_empty());
+    let names: Vec<&str> =
+        events.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+    assert!(names.iter().any(|n| *n == "admit"), "lifecycle events missing: {names:?}");
+    assert!(names.iter().any(|n| n.starts_with("phase:")), "sweep spans missing");
+    assert!(names.iter().any(|n| *n == "quality"), "quality events missing");
+
+    // JSONL journal next to it: schema line + one valid line per event.
+    let jsonl_path = path.with_extension("jsonl");
+    let jsonl = std::fs::read_to_string(&jsonl_path).expect("jsonl journal written");
+    let n = validate_jsonl(&jsonl).expect("journal validates against its schema");
+    assert!(n > 0, "journal carried no events");
+    for family in ["\"kind\":\"admit\"", "\"kind\":\"flush_join\"", "\"kind\":\"quality\""] {
+        assert!(jsonl.contains(family), "journal missing {family}");
+    }
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&jsonl_path);
+}
