@@ -13,7 +13,9 @@
 
 use gear_serve::coordinator::device_model::DeviceModel;
 use gear_serve::coordinator::engine::{Engine, EngineConfig};
-use gear_serve::coordinator::executor::{default_pipeline_stages, default_pool_threads};
+use gear_serve::coordinator::executor::{
+    default_hybrid_threshold, default_pipeline_stages, default_pool_threads,
+};
 use gear_serve::coordinator::request::GenRequest;
 use gear_serve::coordinator::ExecMode;
 use gear_serve::gear::size::predict_cache_frac;
@@ -155,11 +157,14 @@ fn real_engine() {
     println!();
 }
 
-/// Sequential vs batched vs layer-pipelined decode plane, and chunked vs
-/// whole-prompt prefill, on real engine runs: CPU wall-clock tokens/s
-/// across `max_batch ∈ {1, 4, 16}`, plus a machine-readable
+/// Sequential vs batched vs layer-pipelined vs hybrid decode plane, and
+/// chunked vs whole-prompt prefill, on real engine runs: CPU wall-clock
+/// tokens/s across `max_batch ∈ {1, 4, 16}`, plus a machine-readable
 /// `BENCH_throughput.json` so the perf trajectory accumulates across PRs.
-/// `smoke` shrinks the workload so CI can run the comparison per push.
+/// The hybrid leg should match or beat the better fixed plane at every
+/// batch size (it picks per sweep); its per-plane sweep counters land in
+/// the JSON so a miss is explainable. `smoke` shrinks the workload so CI
+/// can run the comparison per push.
 fn compare_exec_planes(smoke: bool) {
     let weights = if Artifacts::available() {
         ModelWeights::load(&Artifacts::default_dir().join("weights.bin")).unwrap()
@@ -173,6 +178,9 @@ fn compare_exec_planes(smoke: bool) {
     // (GEAR_PIPELINE_STAGES / one stage per worker, clamped to n_layers at
     // dispatch) — recorded in the JSON so rows are interpretable offline.
     let stages_default = default_pipeline_stages(pool);
+    // Likewise the hybrid plane-switch threshold a Hybrid engine resolves
+    // to (GEAR_HYBRID_THRESHOLD / MIN_FANOUT).
+    let hybrid_default = default_hybrid_threshold();
     // Decode-heavy workload (short prompt, long generation) and a
     // decode-only metric: prefill work is identical in both modes and would
     // otherwise dilute the comparison.
@@ -181,8 +189,8 @@ fn compare_exec_planes(smoke: bool) {
     let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| (i % 46) + 3).collect();
 
     let mut t = Table::new(&format!(
-        "Decode plane: sequential vs pooled vs pipelined sweep ({pool}-thread pool, \
-         {host}-way host, decode-phase tok/s)"
+        "Decode plane: sequential vs pooled vs pipelined vs hybrid sweep ({pool}-thread \
+         pool, {host}-way host, hybrid threshold {hybrid_default}, decode-phase tok/s)"
     ))
     .header(&[
         "spec",
@@ -192,6 +200,8 @@ fn compare_exec_planes(smoke: bool) {
         "pool x",
         "pipe tok/s",
         "pipe x",
+        "hybr tok/s",
+        "hybr x",
         "p50 ms",
         "p99 ms",
         "flush ms",
@@ -202,13 +212,15 @@ fn compare_exec_planes(smoke: bool) {
 
     for (name, spec) in [("fp16", CacheSpec::Fp16), ("gear-4", CacheSpec::gear(4))] {
         for batch in [1usize, 4, 16] {
-            let mut tput = [0.0f64; 3];
+            let mut tput = [0.0f64; 4];
             let mut pooled = None;
             let mut piped = None;
+            let mut hybr = None;
             let mut seq_flush_ms = 0.0f64;
-            for (slot, exec) in [ExecMode::Sequential, ExecMode::Batched, ExecMode::Pipelined]
-                .into_iter()
-                .enumerate()
+            for (slot, exec) in
+                [ExecMode::Sequential, ExecMode::Batched, ExecMode::Pipelined, ExecMode::Hybrid]
+                    .into_iter()
+                    .enumerate()
             {
                 let mut e = Engine::new(
                     Model::new(weights.clone()),
@@ -227,12 +239,15 @@ fn compare_exec_planes(smoke: bool) {
                     }
                     ExecMode::Batched => pooled = Some(e.metrics.clone()),
                     ExecMode::Pipelined => piped = Some(e.metrics.clone()),
+                    ExecMode::Hybrid => hybr = Some(e.metrics.clone()),
                 }
             }
             let m = pooled.expect("batched leg always runs");
             let pm = piped.expect("pipelined leg always runs");
+            let hm = hybr.expect("hybrid leg always runs");
             let speedup = tput[1] / tput[0].max(1e-9);
             let pipe_speedup = tput[2] / tput[0].max(1e-9);
+            let hybrid_speedup = tput[3] / tput[0].max(1e-9);
             let (p50, p99) = (m.step_p50().as_secs_f64() * 1e3, m.step_p99().as_secs_f64() * 1e3);
             let flush_ms = m.flush_stall.as_secs_f64() * 1e3;
             let overlap_ms = m.flush_overlap_won.as_secs_f64() * 1e3;
@@ -255,6 +270,8 @@ fn compare_exec_planes(smoke: bool) {
                 format!("{speedup:.2}x"),
                 sig(tput[2]),
                 format!("{pipe_speedup:.2}x"),
+                sig(tput[3]),
+                format!("{hybrid_speedup:.2}x"),
                 format!("{p50:.3}"),
                 format!("{p99:.3}"),
                 format!("{flush_ms:.3}"),
@@ -270,12 +287,22 @@ fn compare_exec_planes(smoke: bool) {
                  \"step_p99_ms\": {p99:.4}, \"flush_jobs\": {}, \
                  \"flush_stall_ms\": {flush_ms:.4}, \
                  \"seq_flush_stall_ms\": {seq_flush_ms:.4}, \
-                 \"flush_overlap_won_ms\": {overlap_ms:.4}}}",
+                 \"flush_overlap_won_ms\": {overlap_ms:.4}, \
+                 \"hybrid_decode_tok_s\": {:.3}, \"hybrid_speedup\": {hybrid_speedup:.4}, \
+                 \"hybrid_batched_sweeps\": {}, \"hybrid_pipelined_sweeps\": {}, \
+                 \"hybrid_switches\": {}, \"hybrid_batched_tok_s\": {:.3}, \
+                 \"hybrid_pipelined_tok_s\": {:.3}}}",
                 tput[0],
                 tput[1],
                 tput[2],
                 bubbles.join(", "),
-                m.flush_jobs
+                m.flush_jobs,
+                tput[3],
+                hm.hybrid_batched_sweeps,
+                hm.hybrid_pipelined_sweeps,
+                hm.hybrid_switches,
+                hm.hybrid_batched_throughput(),
+                hm.hybrid_pipelined_throughput()
             ));
         }
     }
@@ -283,11 +310,13 @@ fn compare_exec_planes(smoke: bool) {
     println!(
         "expected shape: pool ~1x at batch 1 (inline path), > 1x at batch >= 8 on \
          multi-core; pipe > 1x already at batch 1 (layer stages overlap within one \
-         request) with the win bounded by the deepest stage; flush ms is the residual \
-         join stall after overlapping with the next sweep (seq_flush_stall_ms in the \
-         JSON is the blocking baseline it beat; overlap ms is compression wall time \
-         hidden off the critical path; bubble ms sums each stage's upstream hand-off \
-         wait — per-stage values are in the JSON)\n"
+         request) with the win bounded by the deepest stage; hybr >= max(pool, pipe) \
+         at every batch — it pipelines below the threshold and chunks above it \
+         (per-plane sweep counters are in the JSON if it misses); flush ms is the \
+         residual join stall after overlapping with the next sweep \
+         (seq_flush_stall_ms in the JSON is the blocking baseline it beat; overlap \
+         ms is compression wall time hidden off the critical path; bubble ms sums \
+         each stage's upstream hand-off wait — per-stage values are in the JSON)\n"
     );
 
     // Chunked vs whole-prompt prefill on a prompt-heavy workload: total
@@ -345,10 +374,14 @@ fn compare_exec_planes(smoke: bool) {
          \"pipelined_decode_tok_s\", \"pipeline_speedup\", \"pipeline_stages\", \
          \"stage_bubble_ms\", \"step_p50_ms\", \
          \"step_p99_ms\", \"flush_jobs\", \"flush_stall_ms\", \"seq_flush_stall_ms\", \
-         \"flush_overlap_won_ms\"],\n    \"chunked_prefill_row\": [\"spec\", \"max_batch\", \
+         \"flush_overlap_won_ms\", \"hybrid_decode_tok_s\", \"hybrid_speedup\", \
+         \"hybrid_batched_sweeps\", \"hybrid_pipelined_sweeps\", \"hybrid_switches\", \
+         \"hybrid_batched_tok_s\", \"hybrid_pipelined_tok_s\"],\n    \
+         \"chunked_prefill_row\": [\"spec\", \"max_batch\", \
          \"whole_prefill_tok_s\", \"chunked_prefill_tok_s\", \"ratio\"]\n  }},\n  \
          \"mode\": \"{}\",\n  \"host_parallelism\": {host},\n  \"pool_threads\": {pool},\n  \
          \"pipeline_stages_default\": {stages_default},\n  \
+         \"hybrid_threshold_default\": {hybrid_default},\n  \
          \"decode_workload\": {{\"prompt_len\": {prompt_len}, \
          \"max_new_tokens\": {max_new}, \"requests\": {n_reqs}}},\n  \
          \"prefill_workload\": {{\"prompt_len\": {long_len}, \

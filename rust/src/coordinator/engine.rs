@@ -68,8 +68,13 @@
 //! schedules, and peak cache bytes for every pool size and stage count —
 //! `tests/batched_vs_sequential.rs` and `tests/pool_golden.rs` pin this,
 //! including a flush held in flight across a preemption of its own request
-//! and preemption mid-pipeline. Chunked prefill is likewise bit-identical
-//! to whole-prompt prefill for every chunk size
+//! and preemption mid-pipeline. [`ExecMode::Hybrid`] selects one of the
+//! two pooled planes per sweep (the scheduler's
+//! [`super::scheduler::PlanePolicy`], reading only the deterministic
+//! decode-batch sequence), so it inherits the same guarantee for every
+//! switch sequence — `tests/hybrid_golden.rs` pins it property-style,
+//! switches with flushes outstanding included. Chunked prefill is
+//! likewise bit-identical to whole-prompt prefill for every chunk size
 //! (`tests/prefill_chunked.rs`).
 //!
 //! Budget semantics: `peak_cache_bytes` tracks reservations, which *lead*
@@ -87,7 +92,7 @@ use crate::kvcache::CacheSpec;
 use crate::model::{Model, PrefillSlot};
 use crate::trace::{self, EventKind, FinishClass, Quality, SweepPhase, Tracer};
 
-use super::executor::{BatchExecutor, ExecMode, FlushJoined};
+use super::executor::{BatchExecutor, ExecMode, FlushJoined, Plane};
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, GenRequest, GenResult};
 use super::scheduler::{ActiveRequest, ReqPhase, Scheduler};
@@ -122,6 +127,14 @@ pub struct EngineConfig {
     /// (`GEAR_PIPELINE_STAGES`, else one stage per pool worker). The token
     /// stream is bit-identical for every value (`tests/pool_golden.rs`).
     pub pipeline_stages: Option<usize>,
+    /// Decode-batch threshold for [`ExecMode::Hybrid`]'s per-sweep plane
+    /// policy: sweeps at or above it dispatch batch-chunked, smaller
+    /// sweeps pipeline (with hysteresis — see
+    /// [`super::scheduler::PlanePolicy`]). `None` (the default) resolves
+    /// through [`super::executor::default_hybrid_threshold`]
+    /// (`GEAR_HYBRID_THRESHOLD`, else `MIN_FANOUT`). The token stream is
+    /// bit-identical for every value (`tests/hybrid_golden.rs`).
+    pub hybrid_threshold: Option<usize>,
     /// Trace export path: [`Tracer::export_files`] writes Perfetto JSON
     /// here and the JSONL journal next to it after every
     /// [`Engine::run_to_completion`]. `None` falls back to the
@@ -145,6 +158,7 @@ impl EngineConfig {
             prefill_chunk: 128,
             pool_threads: None,
             pipeline_stages: None,
+            hybrid_threshold: None,
             trace: None,
             trace_capture: false,
         }
@@ -179,6 +193,13 @@ impl EngineConfig {
     /// [`Self::pipeline_stages`]).
     pub fn with_pipeline_stages(mut self, stages: usize) -> Self {
         self.pipeline_stages = Some(stages.max(1));
+        self
+    }
+
+    /// Pin the [`ExecMode::Hybrid`] plane-switch threshold (see
+    /// [`Self::hybrid_threshold`]; clamped to at least 1).
+    pub fn with_hybrid_threshold(mut self, threshold: usize) -> Self {
+        self.hybrid_threshold = Some(threshold.max(1));
         self
     }
 
@@ -485,6 +506,9 @@ impl Engine {
         let t_step = Instant::now();
         let t_decode = self.span_start();
         let mut logits = std::mem::take(&mut self.logits_buf);
+        // Plane chosen for this sweep under `ExecMode::Hybrid` (`None` in
+        // the fixed modes); drives the per-plane metric split below.
+        let mut chosen: Option<Plane> = None;
         let present: Vec<u64> = {
             let mut refs: Vec<&mut ActiveRequest> = self
                 .active
@@ -496,6 +520,21 @@ impl Engine {
                 return;
             }
             let present = refs.iter().map(|a| a.serial).collect();
+            // Hybrid: consult the plane policy with this sweep's decode
+            // batch size — a deterministic value (the contract) — and aim
+            // the executor before dispatching. Part of the sequential
+            // policy phase, so the chosen sequence is deterministic too.
+            if self.executor.mode() == ExecMode::Hybrid {
+                let plane = self.scheduler.plane_policy.choose(refs.len());
+                self.executor.set_sweep_plane(plane);
+                chosen = Some(plane);
+                if let Some(t) = &mut self.tracer {
+                    t.emit(EventKind::PlaneChosen {
+                        batch: refs.len() as u32,
+                        pipelined: plane == Plane::Pipelined,
+                    });
+                }
+            }
             if let Some(t) = &mut self.tracer {
                 t.emit(EventKind::DecodeStep { n_seqs: refs.len() as u32 });
             }
@@ -539,7 +578,26 @@ impl Engine {
             self.settle_reservation(serial);
         }
         self.logits_buf = logits;
-        self.metrics.step_latencies.push(t_step.elapsed());
+        let step = t_step.elapsed();
+        self.metrics.step_latencies.push(step);
+        // Hybrid bookkeeping: attribute this sweep (and the tokens it
+        // decoded) to the plane that ran it, so the bench can report
+        // per-plane tok/s and the switch count.
+        if let Some(plane) = chosen {
+            match plane {
+                Plane::Batched => {
+                    self.metrics.hybrid_batched_sweeps += 1;
+                    self.metrics.hybrid_batched_tokens += present.len();
+                    self.metrics.hybrid_batched_time += step;
+                }
+                Plane::Pipelined => {
+                    self.metrics.hybrid_pipelined_sweeps += 1;
+                    self.metrics.hybrid_pipelined_tokens += present.len();
+                    self.metrics.hybrid_pipelined_time += step;
+                }
+            }
+            self.metrics.hybrid_switches = self.scheduler.plane_policy.switches();
+        }
     }
 
     /// Join every outstanding flush of the given requests, in fixed
@@ -828,6 +886,45 @@ mod tests {
         };
         for n in [1u64, 9] {
             assert_eq!(run(ExecMode::Sequential, n), run(ExecMode::Pipelined, n), "n_reqs {n}");
+        }
+    }
+
+    #[test]
+    fn hybrid_mode_matches_sequential_mode() {
+        // Hybrid picks a plane per sweep; with the threshold in the middle
+        // of the batch-size range the run actually switches (the batch
+        // decays as requests finish), and the stream must still match the
+        // reference token-for-token.
+        let run = |exec: ExecMode, n_reqs: u64| {
+            let cfg =
+                ModelConfig { vocab: 13, d_model: 32, n_layers: 2, n_heads: 4, max_seq: 96 };
+            let model = Model::new(ModelWeights::random(cfg, 7));
+            let mut e = Engine::new(
+                model,
+                EngineConfig::new(CacheSpec::gear(4))
+                    .with_exec(exec)
+                    .with_pipeline_stages(2)
+                    .with_hybrid_threshold(4),
+            );
+            for i in 0..n_reqs {
+                // Staggered lengths so the decode batch shrinks through
+                // the threshold as shorter requests finish.
+                e.submit(GenRequest::greedy(i, vec![1, 2, 3 + (i % 7) as u32], 4 + i as usize));
+            }
+            let mut res = e.run_to_completion();
+            res.sort_by_key(|r| r.id);
+            let metrics = e.metrics.clone();
+            (res.into_iter().map(|r| (r.id, r.output, r.finish)).collect::<Vec<_>>(), metrics)
+        };
+        for n in [1u64, 9] {
+            let (seq, _) = run(ExecMode::Sequential, n);
+            let (hyb, m) = run(ExecMode::Hybrid, n);
+            assert_eq!(seq, hyb, "n_reqs {n}");
+            if n == 9 {
+                assert!(m.hybrid_batched_sweeps > 0, "large batches must chunk");
+                assert!(m.hybrid_pipelined_sweeps > 0, "small batches must pipeline");
+                assert!(m.hybrid_switches >= 1, "the batch decay must switch planes");
+            }
         }
     }
 

@@ -61,6 +61,21 @@
 //! layers, filling the pipeline's drain bubble. Per-stage busy/bubble
 //! times are reported through [`BatchExecutor::stage_times`].
 //!
+//! ## Hybrid per-sweep plane selection ([`ExecMode::Hybrid`])
+//!
+//! The two parallel planes have complementary sweet spots: the batch plane
+//! needs [`MIN_FANOUT`] requests before dispatching pays off, while the
+//! pipeline plane parallelizes at batch 1 but pays hand-off overhead per
+//! request. Under `Hybrid` the engine picks a plane per decode sweep
+//! ([`super::scheduler::PlanePolicy`]: pipeline below a threshold,
+//! batch-chunked at or above it, with hysteresis) and calls
+//! [`BatchExecutor::set_sweep_plane`] before `run_into`. Both planes run
+//! from the same warm pool; their lazily-built per-plane state (the hidden
+//! slab, timers, trace slots) lives on the executor and survives switches,
+//! and the flush lane is shared pool state — a flush submitted under one
+//! plane is drained and joined under the other unchanged. Since each plane
+//! is bit-identical to `Sequential`, so is every switch sequence.
+//!
 //! ## Asynchronous segment flush (submit/join)
 //!
 //! Decode sweeps append through
@@ -125,14 +140,36 @@ pub enum ExecMode {
     /// decode parallelizes even at batch 1. Bit-identical to `Sequential`
     /// for every stage count.
     Pipelined,
+    /// Per-sweep plane selection: the engine consults the scheduler's
+    /// [`super::scheduler::PlanePolicy`] at the top of each decode sweep
+    /// and dispatches that sweep through either the batch-chunked or the
+    /// pipelined plane (small batches pipeline, large batches chunk — see
+    /// [`default_hybrid_threshold`]). Both planes run from the same warm
+    /// pool and are bit-identical to `Sequential`, so any switch sequence
+    /// — including switches with flushes outstanding — is too.
+    Hybrid,
+}
+
+/// The concrete execution plane one decode sweep dispatches through. Fixed
+/// by [`ExecMode`] for the non-hybrid modes; chosen per sweep by the
+/// scheduler's plane policy under [`ExecMode::Hybrid`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Plane {
+    /// Request-chunked across the pool (inline below [`MIN_FANOUT`]).
+    Batched,
+    /// Layer-sharded into contiguous pipeline stages.
+    Pipelined,
 }
 
 /// Batches smaller than this run inline (still layer-major, just on the
 /// engine thread): waking the parked pool and dispatching descriptors costs
 /// a few microseconds, which dominates small-model decode steps. 8 is where
 /// the parallel win is promised (`bench_throughput -- --compare`); below it
-/// the inline path is never slower than the old per-request loop.
-const MIN_FANOUT: usize = 8;
+/// the inline path is never slower than the old per-request loop. Also the
+/// default switch point for [`ExecMode::Hybrid`]'s plane policy (see
+/// [`default_hybrid_threshold`]): below it the batch plane has nothing to
+/// fan out, so the pipeline plane is the one that can still parallelize.
+pub const MIN_FANOUT: usize = 8;
 
 /// Prefill chunks dispatch at a much lower fan-in than decode steps: one
 /// chunk is O(chunk × prompt-so-far) attention work per layer, hundreds of
@@ -298,6 +335,20 @@ pub fn default_pipeline_stages(workers: usize) -> usize {
         Err(_) => workers,
     }
     .max(1)
+}
+
+/// Resolve the decode-batch threshold for [`ExecMode::Hybrid`]'s plane
+/// policy: the `GEAR_HYBRID_THRESHOLD` environment variable when set to a
+/// positive integer, otherwise [`MIN_FANOUT`]. Batches at or above the
+/// threshold dispatch through the batch-chunked plane; smaller batches
+/// pipeline (see [`super::scheduler::PlanePolicy`] for the hysteresis
+/// rules). Results are bit-identical for every value — the threshold only
+/// moves work between two bit-identical planes.
+pub fn default_hybrid_threshold() -> usize {
+    match std::env::var("GEAR_HYBRID_THRESHOLD") {
+        Ok(s) => s.trim().parse::<usize>().ok().filter(|&n| n >= 1).unwrap_or(MIN_FANOUT),
+        Err(_) => MIN_FANOUT,
+    }
 }
 
 /// Partition `n_layers` into `stages` contiguous near-equal ranges
@@ -665,8 +716,8 @@ pub struct BatchExecutor {
     mode: ExecMode,
     /// Pool size (1 for `Sequential`, which never dispatches).
     workers: usize,
-    /// Configured pipeline stage count (`Pipelined` only; clamped to the
-    /// layer count at dispatch).
+    /// Configured pipeline stage count (`Pipelined`/`Hybrid`; clamped to
+    /// the layer count at dispatch).
     stages: usize,
     /// The persistent pool; `None` in `Sequential` mode.
     pool: Option<WorkerPool>,
@@ -691,6 +742,13 @@ pub struct BatchExecutor {
     /// Worker/stage events folded from dispatches since the engine last
     /// drained them via [`Self::take_trace_events`].
     pending_events: Vec<Event>,
+    /// The plane the next decode sweep dispatches through under
+    /// [`ExecMode::Hybrid`] (set per sweep via [`Self::set_sweep_plane`];
+    /// ignored by the fixed modes). Both planes' lazily-built state
+    /// (`pipe_hidden`, timers, trace slots) lives on this executor and the
+    /// flush lane is shared pool state, so switching costs nothing and a
+    /// flush submitted under one plane joins under the other unchanged.
+    sweep_plane: Plane,
 }
 
 impl BatchExecutor {
@@ -707,18 +765,20 @@ impl BatchExecutor {
     ) -> BatchExecutor {
         let workers = match mode {
             ExecMode::Sequential => 1,
-            ExecMode::Batched | ExecMode::Pipelined => {
+            ExecMode::Batched | ExecMode::Pipelined | ExecMode::Hybrid => {
                 threads.unwrap_or_else(default_pool_threads).max(1)
             }
         };
         let stages = match mode {
-            ExecMode::Pipelined => stages.unwrap_or_else(|| default_pipeline_stages(workers)),
+            ExecMode::Pipelined | ExecMode::Hybrid => {
+                stages.unwrap_or_else(|| default_pipeline_stages(workers))
+            }
             _ => 1,
         }
         .max(1);
         let pool = match mode {
             ExecMode::Sequential => None,
-            ExecMode::Batched | ExecMode::Pipelined => {
+            ExecMode::Batched | ExecMode::Pipelined | ExecMode::Hybrid => {
                 Some(WorkerPool::new(workers, *model.config()))
             }
         };
@@ -734,7 +794,16 @@ impl BatchExecutor {
             trace_on: false,
             chunk_trace: Vec::new(),
             pending_events: Vec::new(),
+            sweep_plane: Plane::Batched,
         }
+    }
+
+    /// Select the plane the next decode sweep dispatches through. Only
+    /// meaningful under [`ExecMode::Hybrid`] (the fixed modes ignore it);
+    /// called by the engine once per sweep after consulting the
+    /// scheduler's plane policy, before [`Self::run_into`].
+    pub fn set_sweep_plane(&mut self, plane: Plane) {
+        self.sweep_plane = plane;
     }
 
     /// Enable or disable tracing for subsequent dispatches. Sets this
@@ -765,7 +834,7 @@ impl BatchExecutor {
         self.workers
     }
 
-    /// Configured pipeline stage count (1 unless `Pipelined`).
+    /// Configured pipeline stage count (1 unless `Pipelined` or `Hybrid`).
     pub fn stages(&self) -> usize {
         self.stages
     }
@@ -794,7 +863,16 @@ impl BatchExecutor {
         if b == 0 {
             return;
         }
-        if self.mode == ExecMode::Pipelined {
+        // Resolve the effective plane: fixed by the mode, except under
+        // Hybrid where the engine selected it for this sweep. `Sequential`
+        // has no pool, so its batch-plane dispatch below always takes the
+        // inline path — the reference semantics.
+        let plane = match self.mode {
+            ExecMode::Pipelined => Plane::Pipelined,
+            ExecMode::Hybrid => self.sweep_plane,
+            ExecMode::Sequential | ExecMode::Batched => Plane::Batched,
+        };
+        if plane == Plane::Pipelined {
             self.run_pipelined(model, batch, out);
             return;
         }

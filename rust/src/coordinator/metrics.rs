@@ -57,6 +57,23 @@ pub struct EngineMetrics {
     /// upstream hand-off. `stage_bubble[0]` is always zero (stage 0 has no
     /// upstream).
     pub stage_bubble: Vec<Duration>,
+    /// Decode sweeps `ExecMode::Hybrid` dispatched through the
+    /// batch-chunked plane (zero in the fixed modes).
+    pub hybrid_batched_sweeps: usize,
+    /// Decode sweeps `ExecMode::Hybrid` dispatched through the pipelined
+    /// plane.
+    pub hybrid_pipelined_sweeps: usize,
+    /// Plane switches the hybrid policy recorded (the first choice is not
+    /// a switch; hysteresis bounds this to one per threshold crossing).
+    pub hybrid_switches: usize,
+    /// Tokens decoded in hybrid sweeps that ran batch-chunked.
+    pub hybrid_batched_tokens: usize,
+    /// Tokens decoded in hybrid sweeps that ran pipelined.
+    pub hybrid_pipelined_tokens: usize,
+    /// Step wall time accumulated over hybrid batch-chunked sweeps.
+    pub hybrid_batched_time: Duration,
+    /// Step wall time accumulated over hybrid pipelined sweeps.
+    pub hybrid_pipelined_time: Duration,
     /// Aggregated trace summary, present when the engine ran with tracing
     /// enabled (see [`crate::trace::Tracer`]). Folded in at the end of
     /// `run_to_completion` and rendered by [`Self::render_text`].
@@ -74,6 +91,20 @@ impl EngineMetrics {
     pub fn decode_throughput(&self) -> f64 {
         let secs = self.wall.saturating_sub(self.prefill).as_secs_f64();
         self.generated_tokens as f64 / secs.max(1e-9)
+    }
+
+    /// Tokens per second of the hybrid run's *batch-chunked* sweeps (step
+    /// wall only). Zero when no hybrid sweep ran batch-chunked — the
+    /// per-plane split behind the bench's hybrid `--compare` leg.
+    pub fn hybrid_batched_throughput(&self) -> f64 {
+        self.hybrid_batched_tokens as f64 / self.hybrid_batched_time.as_secs_f64().max(1e-9)
+    }
+
+    /// Tokens per second of the hybrid run's *pipelined* sweeps (step wall
+    /// only). Zero when no hybrid sweep pipelined.
+    pub fn hybrid_pipelined_throughput(&self) -> f64 {
+        self.hybrid_pipelined_tokens as f64
+            / self.hybrid_pipelined_time.as_secs_f64().max(1e-9)
     }
 
     /// Step-latency percentile over the recorded decode sweeps
@@ -195,6 +226,11 @@ impl EngineMetrics {
         let _ = writeln!(s, "flush_jobs {}", self.flush_jobs);
         let _ = writeln!(s, "flush_stall_secs {:.6}", self.flush_stall.as_secs_f64());
         let _ = writeln!(s, "flush_overlap_won_secs {:.6}", self.flush_overlap_won.as_secs_f64());
+        let _ = writeln!(s, "hybrid_batched_sweeps {}", self.hybrid_batched_sweeps);
+        let _ = writeln!(s, "hybrid_pipelined_sweeps {}", self.hybrid_pipelined_sweeps);
+        let _ = writeln!(s, "hybrid_switches {}", self.hybrid_switches);
+        let _ = writeln!(s, "hybrid_batched_tok_s {:.3}", self.hybrid_batched_throughput());
+        let _ = writeln!(s, "hybrid_pipelined_tok_s {:.3}", self.hybrid_pipelined_throughput());
         for (name, secs, frac) in self.time_breakdown() {
             let key = name.split_whitespace().next().unwrap_or("other");
             let _ = writeln!(s, "breakdown_{key}_secs {secs:.6}");

@@ -62,11 +62,15 @@
 //! `docs/ARCHITECTURE.md`. The execution plane has grown without ever
 //! touching policy: PR 1 cut the executor seam, PR 3 made the pool
 //! persistent, PR 4 detached the flush lane, PR 5 added the layer-sharded
-//! pipeline plane behind the same `run_into` entry point, and this PR
-//! threaded the structured trace plane (`crate::trace`) through every
-//! commit point — per-thread event rings folded at the deterministic
-//! joins, so the logical event stream is itself bit-identical across
-//! planes.
+//! pipeline plane behind the same `run_into` entry point, PR 6 threaded
+//! the structured trace plane (`crate::trace`) through every commit point
+//! — per-thread event rings folded at the deterministic joins, so the
+//! logical event stream is itself bit-identical across planes — and this
+//! PR added [`executor::ExecMode::Hybrid`]: the scheduler's
+//! [`scheduler::PlanePolicy`] picks the batch-chunked or pipelined plane
+//! per sweep from the decode batch size (threshold + hysteresis), both
+//! planes sharing one warm pool and one flush lane, so every switch
+//! sequence stays bit-identical too (`tests/hybrid_golden.rs`).
 
 pub mod device_model;
 pub mod engine;
@@ -77,5 +81,5 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::{Engine, EngineConfig};
-pub use executor::ExecMode;
+pub use executor::{ExecMode, Plane};
 pub use request::{GenRequest, GenResult, RequestId};

@@ -33,9 +33,95 @@ use crate::trace::{EventKind, FinishClass, Tracer};
 use crate::util::rng::Rng;
 
 use super::engine::EngineConfig;
-use super::executor::FlushTicket;
+use super::executor::{default_hybrid_threshold, FlushTicket, Plane};
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, GenRequest, GenResult};
+
+/// Per-sweep plane selection for [`super::executor::ExecMode::Hybrid`]:
+/// pipeline when the decode batch is small (below the threshold the batch
+/// plane needs to fan out), batch-chunked at or above it, with hysteresis
+/// so a batch oscillating around the threshold doesn't thrash.
+///
+/// The rules, with `t = threshold` and `m = margin` (fixed at 1):
+/// * No plane chosen yet: `batch >= t` picks [`Plane::Batched`], else
+///   [`Plane::Pipelined`].
+/// * Currently pipelined: switch to batched only when `batch >= t`.
+/// * Currently batched: switch to pipelined only when `batch + m < t` —
+///   i.e. the batch must drop *strictly below* `t - m`, not merely below
+///   `t`. A batch bouncing between `t - 1` and `t` therefore switches at
+///   most once per crossing direction instead of every sweep.
+///
+/// The policy reads only the decode batch size — a value that is itself
+/// bit-identical across planes (the determinism contract) — so the chosen
+/// plane sequence is deterministic, and since both planes are bit-identical
+/// to `Sequential`, the choice can never affect results; it only moves
+/// work between equivalent schedules. Selection is part of the engine's
+/// fixed-order policy phase (`tests/hybrid_golden.rs` pins all of this).
+#[derive(Debug, Clone)]
+pub struct PlanePolicy {
+    threshold: usize,
+    margin: usize,
+    current: Option<Plane>,
+    switches: usize,
+}
+
+impl PlanePolicy {
+    /// Policy with the given switch threshold (clamped to at least 1; a
+    /// threshold of 1 means every non-empty batch runs batch-chunked).
+    pub fn new(threshold: usize) -> PlanePolicy {
+        PlanePolicy { threshold: threshold.max(1), margin: 1, current: None, switches: 0 }
+    }
+
+    /// Choose the plane for a sweep decoding `decode_batch` requests,
+    /// applying the hysteresis rules above and recording a switch when the
+    /// choice differs from the previous sweep's.
+    pub fn choose(&mut self, decode_batch: usize) -> Plane {
+        let next = match self.current {
+            None => {
+                if decode_batch >= self.threshold {
+                    Plane::Batched
+                } else {
+                    Plane::Pipelined
+                }
+            }
+            Some(Plane::Pipelined) => {
+                if decode_batch >= self.threshold {
+                    Plane::Batched
+                } else {
+                    Plane::Pipelined
+                }
+            }
+            Some(Plane::Batched) => {
+                if decode_batch + self.margin < self.threshold {
+                    Plane::Pipelined
+                } else {
+                    Plane::Batched
+                }
+            }
+        };
+        if self.current.is_some() && self.current != Some(next) {
+            self.switches += 1;
+        }
+        self.current = Some(next);
+        next
+    }
+
+    /// The configured switch threshold.
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+
+    /// The plane the most recent [`Self::choose`] picked, if any.
+    pub fn current(&self) -> Option<Plane> {
+        self.current
+    }
+
+    /// Number of plane switches recorded so far (the first choice is not a
+    /// switch).
+    pub fn switches(&self) -> usize {
+        self.switches
+    }
+}
 
 /// Where an active request is in its lifecycle.
 pub enum ReqPhase {
@@ -108,12 +194,18 @@ pub struct Scheduler {
     waiting: VecDeque<(GenRequest, Instant, usize)>,
     /// Next admission serial (see [`ActiveRequest::serial`]).
     next_serial: u64,
+    /// Per-sweep plane selection for `ExecMode::Hybrid` (unused by the
+    /// fixed modes). Scheduler-side because it is pure policy: it reads
+    /// the deterministic decode-batch sequence and nothing else.
+    pub plane_policy: PlanePolicy,
 }
 
 impl Scheduler {
     pub fn new(cfg: EngineConfig) -> Scheduler {
         let budget = MemoryBudget::new(cfg.budget_bytes);
-        Scheduler { cfg, budget, waiting: VecDeque::new(), next_serial: 0 }
+        let plane_policy =
+            PlanePolicy::new(cfg.hybrid_threshold.unwrap_or_else(default_hybrid_threshold));
+        Scheduler { cfg, budget, waiting: VecDeque::new(), next_serial: 0, plane_policy }
     }
 
     pub fn cfg(&self) -> &EngineConfig {
@@ -375,5 +467,43 @@ mod tests {
         assert_eq!(sched.waiting_len(), 1, "the head request still waits, unchanged");
         assert_eq!(metrics.requests_oom, 0);
         assert!(finished.is_empty());
+    }
+
+    /// Hysteresis: a batch oscillating between `t` and `t - 1` must switch
+    /// at most once per crossing direction, not once per sweep. Only a
+    /// drop strictly below `t - margin` sends a batched policy back to the
+    /// pipeline plane.
+    #[test]
+    fn plane_policy_hysteresis() {
+        let mut p = PlanePolicy::new(4);
+        assert_eq!(p.threshold(), 4);
+        assert_eq!(p.current(), None);
+        // First choice: plain threshold comparison, not a switch.
+        assert_eq!(p.choose(1), Plane::Pipelined);
+        assert_eq!(p.switches(), 0);
+        // Rising through the threshold switches once...
+        assert_eq!(p.choose(4), Plane::Batched);
+        assert_eq!(p.switches(), 1);
+        // ...and the t / t-1 oscillation then sticks to Batched: 3 + 1 is
+        // not strictly below 4.
+        for b in [3, 4, 3, 4, 3] {
+            assert_eq!(p.choose(b), Plane::Batched, "batch {b} must not thrash");
+        }
+        assert_eq!(p.switches(), 1, "no extra switches while oscillating");
+        // A real drop (below t - margin) switches back exactly once.
+        assert_eq!(p.choose(2), Plane::Pipelined);
+        assert_eq!(p.switches(), 2);
+        // And from Pipelined, anything short of t stays pipelined.
+        assert_eq!(p.choose(3), Plane::Pipelined);
+        assert_eq!(p.switches(), 2);
+
+        // Threshold 1: every non-empty batch is batch-chunked from the
+        // first choice on (1 + margin < 1 is never true).
+        let mut p1 = PlanePolicy::new(1);
+        assert_eq!(p1.choose(1), Plane::Batched);
+        assert_eq!(p1.choose(0), Plane::Batched, "0 + 1 < 1 is false: sticky");
+        assert_eq!(p1.switches(), 0);
+        // Degenerate threshold clamps to 1.
+        assert_eq!(PlanePolicy::new(0).threshold(), 1);
     }
 }

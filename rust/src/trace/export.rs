@@ -29,6 +29,7 @@ pub const KIND_FIELDS: &[(&str, &[&str])] = &[
     ("admit", &["serial", "req_id"]),
     ("reserve", &["serial", "bytes"]),
     ("prefill_chunk", &["serial", "rows"]),
+    ("plane_chosen", &["batch", "pipelined"]),
     ("decode_step", &["n_seqs"]),
     ("first_token", &["serial"]),
     ("seal", &["serial", "layer", "rows"]),
@@ -125,6 +126,9 @@ fn push_fields(out: &mut String, kind: &EventKind) {
         }
         EventKind::PrefillChunk { serial, rows } => {
             let _ = write!(out, ",\"serial\":{serial},\"rows\":{rows}");
+        }
+        EventKind::PlaneChosen { batch, pipelined } => {
+            let _ = write!(out, ",\"batch\":{batch},\"pipelined\":{pipelined}");
         }
         EventKind::DecodeStep { n_seqs } => {
             let _ = write!(out, ",\"n_seqs\":{n_seqs}");
@@ -607,6 +611,7 @@ mod tests {
             EventKind::Admit { serial: 0, req_id: 1 },
             EventKind::Reserve { serial: 0, bytes: 4096 },
             EventKind::PrefillChunk { serial: 0, rows: 32 },
+            EventKind::PlaneChosen { batch: 2, pipelined: true },
             EventKind::DecodeStep { n_seqs: 2 },
             EventKind::FirstToken { serial: 0 },
             EventKind::Seal { serial: 0, layer: 1, rows: 16 },

@@ -225,6 +225,18 @@ pub enum EventKind {
         /// Prompt rows in this chunk.
         rows: u32,
     },
+    /// `ExecMode::Hybrid` plane selection for one decode sweep, emitted
+    /// just before the sweep's [`EventKind::DecodeStep`]. Logical: the
+    /// policy reads only the deterministic decode-batch sequence, so the
+    /// chosen sequence is identical for a given threshold across pool
+    /// sizes and stage counts.
+    PlaneChosen {
+        /// The deciding decode batch size.
+        batch: u32,
+        /// True when the sweep dispatched through the pipelined plane,
+        /// false for the batch-chunked plane.
+        pipelined: bool,
+    },
     /// One batched decode step over the active set.
     DecodeStep {
         /// Sequences decoded this step.
@@ -324,6 +336,7 @@ impl EventKind {
             EventKind::Admit { .. } => "admit",
             EventKind::Reserve { .. } => "reserve",
             EventKind::PrefillChunk { .. } => "prefill_chunk",
+            EventKind::PlaneChosen { .. } => "plane_chosen",
             EventKind::DecodeStep { .. } => "decode_step",
             EventKind::FirstToken { .. } => "first_token",
             EventKind::Seal { .. } => "seal",

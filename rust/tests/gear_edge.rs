@@ -1,0 +1,167 @@
+//! Edge-case and error-bound tests for the GEAR compression components
+//! (`gear::{quant, lowrank, outlier, compose}`): degenerate inputs the
+//! serving path can produce (zero and constant matrices, ranks at or
+//! past the matrix dimensions, outlier fractions that round to zero
+//! entries), plus a randomized property pinning Eq. (4)'s error
+//! structure — the reconstruction error of the composite never exceeds
+//! the bound its own components predict.
+
+use gear_serve::gear::compose::{compress, Backbone, CompressedMatrix, GearConfig};
+use gear_serve::gear::error::rel_error;
+use gear_serve::gear::lowrank::power_iter_lowrank;
+use gear_serve::gear::outlier::{filter_outliers, k_per_side};
+use gear_serve::gear::quant::{Axis, QuantScheme, QuantizedMatrix};
+use gear_serve::gear::{KvKind, Method};
+use gear_serve::prop_assert;
+use gear_serve::tensor::Tensor;
+use gear_serve::util::prop::{forall, gen_kv_like, Config};
+use gear_serve::util::rng::Rng;
+
+fn kv_matrix(r: &mut Rng, rows: usize, cols: usize) -> Tensor {
+    Tensor::new(&[rows, cols], gen_kv_like(r, rows * cols))
+}
+
+/// A zero matrix compresses to an exact zero reconstruction under every
+/// method: degenerate groups quantize at scale 0, the outlier filter
+/// extracts only zeros, and the low-rank fit of a zero residual is a
+/// zero product (its factors may be degenerate, the product may not).
+#[test]
+fn zero_matrix_reconstructs_exactly() {
+    let x = Tensor::zeros(&[16, 32]);
+    for m in [
+        Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(8) },
+        Method::OutlierAware { bits: 2, backbone: Backbone::Kcvt, s: 0.1 },
+        Method::gear_l_default(2),
+        Method::gear_default(2),
+        Method::LowRankOnly { r: 4 },
+    ] {
+        for kind in [KvKind::Key, KvKind::Value] {
+            let c = compress(&x, kind, &GearConfig::new(m, 4));
+            assert!(
+                c.reconstruct().data().iter().all(|&v| v == 0.0),
+                "{m:?} {kind:?}: zero matrix reconstructed non-zero"
+            );
+            assert_eq!(rel_error(x.data(), c.reconstruct().data()), 0.0);
+        }
+    }
+    let q = QuantizedMatrix::quantize(&x, 2, QuantScheme::per_token_group(8));
+    assert_eq!(q.max_step(), 0.0, "zero matrix must quantize at scale 0");
+}
+
+/// A constant matrix is a single-value group everywhere: scale 0, the
+/// zero-point carries the value, and the GEAR-L residual is exactly
+/// zero — so the reconstruction is exact, not approximate. 3.25 is
+/// FP16-representable, so zero-point rounding cannot perturb it.
+#[test]
+fn constant_matrix_reconstructs_exactly() {
+    let x = Tensor::filled(&[12, 16], 3.25);
+    for m in [
+        Method::QuantOnly { bits: 2, backbone: Backbone::Kivi(4) },
+        Method::QuantOnly { bits: 4, backbone: Backbone::Kcvt },
+        Method::GearL { bits: 2, backbone: Backbone::Kivi(4), r: 4 },
+    ] {
+        let c = compress(&x, KvKind::Key, &GearConfig::new(m, 4));
+        for (i, v) in c.reconstruct().data().iter().enumerate() {
+            assert_eq!(*v, 3.25, "{m:?}: entry {i} drifted");
+        }
+    }
+}
+
+/// Requested ranks at or beyond min(n, d) clamp to min(n, d): the
+/// factorization is then full-rank and recovers the matrix to the FP16
+/// precision of its stored factors. Rank 0 clamps up to 1.
+#[test]
+fn rank_clamps_to_matrix_dimensions() {
+    let mut rng = Rng::new(77);
+    let x = kv_matrix(&mut rng, 8, 4);
+    for req in [4usize, 8, 100] {
+        let lr = power_iter_lowrank(x.data(), 8, 4, req, 4, &mut rng);
+        assert_eq!(lr.r, 4, "requested rank {req} must clamp to min(8, 4)");
+        let rel = rel_error(x.data(), lr.to_dense().data());
+        assert!(rel < 2e-2, "full-rank fit (req {req}) rel err {rel}");
+    }
+    let lr = power_iter_lowrank(x.data(), 8, 4, 0, 4, &mut rng);
+    assert_eq!(lr.r, 1, "rank 0 must clamp up to 1");
+}
+
+/// An outlier fraction whose entry count rounds to zero is a no-op:
+/// empty sparse matrix, remainder bitwise equal to the input. 64
+/// entries at s = 1% give 0.32 entries per side, which rounds to 0.
+#[test]
+fn outlier_fraction_rounding_to_zero_is_noop() {
+    assert_eq!(k_per_side(64, 0.01), 0);
+    assert_eq!(k_per_side(64, 0.02), 1); // sanity: the paper's s = 2% is not a no-op
+    let mut rng = Rng::new(78);
+    let x = kv_matrix(&mut rng, 8, 64);
+    for axis in [Axis::Row, Axis::Col] {
+        // Along Col the vectors are 8 long: 8 * 0.01 / 2 rounds to 0 too.
+        let (s, rem) = filter_outliers(&x, 0.01, axis);
+        assert_eq!(s.nnz(), 0, "{axis:?}: rounded-to-zero fraction extracted entries");
+        assert_eq!(rem.data(), x.data(), "{axis:?}: remainder must be untouched");
+    }
+    // Through the composite: full GEAR with a no-op fraction must match
+    // GEAR-L exactly (same backbone, same residual, same seed).
+    let gear = compress(
+        &x,
+        KvKind::Value,
+        &GearConfig::new(Method::Gear { bits: 2, backbone: Backbone::Kivi(8), s: 0.01, r: 4 }, 4),
+    );
+    let gearl = compress(
+        &x,
+        KvKind::Value,
+        &GearConfig::new(Method::GearL { bits: 2, backbone: Backbone::Kivi(8), r: 4 }, 4),
+    );
+    assert_eq!(gear.sparse.as_ref().map(|s| s.nnz()), Some(0));
+    assert_eq!(gear.reconstruct().data(), gearl.reconstruct().data());
+}
+
+/// Eq. (4) error structure, as a randomized property. Two bounds the
+/// decomposition `X ≈ D̂ + L + S` itself predicts:
+///
+/// * backbone: every entry of the quantized remainder is within half a
+///   quantization step of `D̂` (+ FP16 rounding of scale/zero), so the
+///   quant + sparse partial reconstruction obeys the per-entry bound
+///   `|X − D̂ − S| ≤ max_step / 2 + ε`;
+/// * low-rank: `L` is a least-squares fit of the residual `R = X − D̂ −
+///   S`, so adding it cannot exceed the error of leaving it out —
+///   `‖X − X̂‖_F` is bounded by the partial reconstruction's error.
+#[test]
+fn prop_eq4_error_within_predicted_bound() {
+    forall(
+        Config { cases: 64, seed: 0x6EA4_0004 },
+        |r| {
+            let rows = 8 + r.next_below(56) as usize;
+            let cols = *r.choose(&[16usize, 32, 64]);
+            let bits = *r.choose(&[2u8, 4]);
+            let s = *r.choose(&[0.0f64, 0.02, 0.05]);
+            let rank = 1 + r.next_below(6) as usize;
+            (kv_matrix(r, rows, cols), bits, s, rank)
+        },
+        |(x, bits, s, rank)| {
+            let method = Method::Gear { bits: *bits, backbone: Backbone::Kivi(16), s: *s, r: *rank };
+            let c = compress(x, KvKind::Value, &GearConfig::new(method, 4));
+
+            // Partial reconstruction D̂ + S (the term the low-rank fit
+            // refines), reusing the component sum contract.
+            let partial = CompressedMatrix { lowrank: None, ..c.clone() };
+            let q = c.quant.as_ref().expect("GEAR always stores a backbone");
+            let step_bound = f64::from(q.max_step()) * 0.5 + 1e-2;
+            for (i, (a, b)) in x.data().iter().zip(partial.reconstruct().data()).enumerate() {
+                prop_assert!(
+                    f64::from((a - b).abs()) <= step_bound,
+                    "entry {i}: |{a} - {b}| exceeds half-step bound {step_bound}"
+                );
+            }
+
+            // Full reconstruction must not exceed the partial one's error
+            // (the FP16-rounded factors get a hair of slack).
+            let full_err = rel_error(x.data(), c.reconstruct().data());
+            let partial_err = rel_error(x.data(), partial.reconstruct().data());
+            prop_assert!(
+                full_err <= partial_err * 1.02 + 1e-6,
+                "low-rank term increased the error: {full_err} > {partial_err}"
+            );
+            Ok(())
+        },
+    );
+}

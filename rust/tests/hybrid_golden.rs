@@ -1,0 +1,340 @@
+//! Golden equivalence tests for `ExecMode::Hybrid`, the per-sweep
+//! plane-selection mode: for *every* switch sequence the policy can
+//! produce — across the full pool-size × stage-count × threshold
+//! lattice, through preemption, and with flush jobs outstanding at the
+//! switch — the hybrid engine must be bit-identical to the sequential
+//! reference: same token streams, same finish reasons, same preemption
+//! counts, same peak cache bytes, same flush submission schedule.
+//!
+//! The randomized suites run on the in-repo property framework
+//! (`util::prop::forall`): any failure panics with the case index and
+//! seed so the exact workload can be replayed.
+
+use gear_serve::coordinator::engine::{Engine, EngineConfig};
+use gear_serve::coordinator::metrics::EngineMetrics;
+use gear_serve::coordinator::request::{FinishReason, GenRequest};
+use gear_serve::coordinator::ExecMode;
+use gear_serve::kvcache::CacheSpec;
+use gear_serve::model::config::ModelConfig;
+use gear_serve::model::{Model, ModelWeights};
+use gear_serve::prop_assert;
+use gear_serve::trace::EventKind;
+use gear_serve::util::prop::{forall, Config};
+use gear_serve::util::rng::Rng;
+
+/// Everything observable about a finished run. `flush_jobs` is part of
+/// the contract: the submission schedule is fixed at commit points, so
+/// the hybrid plane must submit exactly as many jobs as sequential no
+/// matter which plane executed each sweep.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    results: Vec<(u64, Vec<u32>, FinishReason, usize)>, // id, tokens, finish, preemptions
+    peak_cache_bytes: usize,
+    requests_preempted: usize,
+    requests_oom: usize,
+    generated_tokens: usize,
+    flush_jobs: usize,
+}
+
+/// Four layers so the stage lattice {1, 2, n_layers} is non-degenerate:
+/// stages 2 puts two layers per stage, stages 4 one per stage.
+fn deep_model() -> Model {
+    let cfg = ModelConfig { vocab: 13, d_model: 64, n_layers: 4, n_heads: 2, max_seq: 160 };
+    Model::new(ModelWeights::random(cfg, 11))
+}
+
+/// Compressed spec whose streaming buffer seals every `buffer` decoded
+/// tokens — `buffer: 1` keeps a flush job outstanding across every
+/// sweep boundary, including sweeps where the plane switches.
+fn gearl_spec(buffer: usize) -> CacheSpec {
+    CacheSpec::Compressed {
+        method: gear_serve::gear::Method::GearL {
+            bits: 2,
+            backbone: gear_serve::gear::compose::Backbone::Kivi(16),
+            r: 4,
+        },
+        buffer,
+        prefill_rank: 4,
+        decode_rank: 4,
+    }
+}
+
+/// One randomized workload: request count, per-request prompt lengths
+/// and decode lengths (staggered lengths make the decode batch decay
+/// through the threshold), cache budget (the tight settings force
+/// preemption), streaming-buffer size, and the hybrid threshold itself.
+#[derive(Debug, Clone)]
+struct Workload {
+    prompt_lens: Vec<usize>,
+    max_new: Vec<usize>,
+    budget: usize,
+    buffer: usize,
+    threshold: usize,
+}
+
+fn gen_workload(r: &mut Rng) -> Workload {
+    let n = 1 + r.next_below(12) as usize; // 1..=12: crosses MIN_FANOUT = 8
+    let prompt_lens = (0..n).map(|_| 4 + r.next_below(28) as usize).collect();
+    let max_new = (0..n).map(|_| 2 + r.next_below(14) as usize).collect();
+    // usize::MAX never preempts; 64 KiB collides with flush-driven
+    // growth mid-sweep (the pool_golden preemption regime); 96 KiB sits
+    // in between and preempts only the largest workloads.
+    let budget = *r.choose(&[usize::MAX, 64 << 10, 96 << 10]);
+    let buffer = *r.choose(&[1, 2]);
+    let threshold = 1 + r.next_below(12) as usize; // 1..=12 straddles every batch
+    Workload { prompt_lens, max_new, budget, buffer, threshold }
+}
+
+/// Run `w` to completion on one engine configuration. Prompt contents
+/// are a pure function of (request index, prompt length), so sequential
+/// and hybrid runs see byte-identical inputs.
+fn run(w: &Workload, exec: ExecMode, pool: usize, stages: usize) -> (Outcome, EngineMetrics) {
+    let mut cfg = EngineConfig::new(gearl_spec(w.buffer))
+        .with_budget(w.budget)
+        .with_max_batch(16)
+        .with_exec(exec);
+    if exec != ExecMode::Sequential {
+        cfg = cfg
+            .with_pool_threads(pool)
+            .with_pipeline_stages(stages)
+            .with_hybrid_threshold(w.threshold);
+    }
+    let mut e = Engine::new(deep_model(), cfg);
+    for (i, (&len, &max_new)) in w.prompt_lens.iter().zip(&w.max_new).enumerate() {
+        let prompt: Vec<u32> = (0..len).map(|t| ((t + i) % 10) as u32 + 3).collect();
+        e.submit(GenRequest::greedy(i as u64, prompt, max_new));
+    }
+    let mut results = e.run_to_completion();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(e.budget_used(), 0, "bytes still reserved after the run drained");
+    let out = Outcome {
+        results: results
+            .into_iter()
+            .map(|r| (r.id, r.output, r.finish, r.preemptions))
+            .collect(),
+        peak_cache_bytes: e.metrics.peak_cache_bytes,
+        requests_preempted: e.metrics.requests_preempted,
+        requests_oom: e.metrics.requests_oom,
+        generated_tokens: e.metrics.generated_tokens,
+        flush_jobs: e.metrics.flush_jobs,
+    };
+    (out, e.metrics.clone())
+}
+
+/// The property: at one pool size, for every stage count in {1, 2,
+/// n_layers} the hybrid engine reproduces the sequential reference
+/// bit-for-bit on a randomized workload, and the per-plane sweep
+/// counters account for every decode sweep consistently.
+fn hybrid_matches_sequential_at_pool(pool: usize, seed: u64) {
+    forall(
+        Config { cases: 64, seed },
+        gen_workload,
+        |w| {
+            let (reference, _) = run(w, ExecMode::Sequential, 1, 1);
+            prop_assert!(
+                reference.results.len() == w.prompt_lens.len(),
+                "sequential reference lost requests: {} of {}",
+                reference.results.len(),
+                w.prompt_lens.len()
+            );
+            if w.budget < usize::MAX {
+                prop_assert!(
+                    reference.peak_cache_bytes <= w.budget,
+                    "sequential peak {} overshot budget {}",
+                    reference.peak_cache_bytes,
+                    w.budget
+                );
+            }
+            for stages in [1, 2, 4] {
+                let (got, m) = run(w, ExecMode::Hybrid, pool, stages);
+                prop_assert!(
+                    reference == got,
+                    "pool {pool} stages {stages} diverged from sequential:\n  ref: {reference:?}\n  got: {got:?}"
+                );
+                // Every decode sweep went through exactly one plane, and
+                // the switch count can't exceed the sweep count.
+                let sweeps = m.hybrid_batched_sweeps + m.hybrid_pipelined_sweeps;
+                prop_assert!(sweeps > 0, "pool {pool} stages {stages}: no hybrid sweeps recorded");
+                prop_assert!(
+                    m.hybrid_switches < sweeps,
+                    "pool {pool} stages {stages}: {} switches in {sweeps} sweeps",
+                    m.hybrid_switches
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hybrid_matches_sequential_pool_1() {
+    hybrid_matches_sequential_at_pool(1, 0x6EA2_0001);
+}
+
+#[test]
+fn hybrid_matches_sequential_pool_2() {
+    hybrid_matches_sequential_at_pool(2, 0x6EA2_0002);
+}
+
+#[test]
+fn hybrid_matches_sequential_pool_4() {
+    hybrid_matches_sequential_at_pool(4, 0x6EA2_0004);
+}
+
+/// Staggered decode lengths: request `i` decodes `4 + 2 i` tokens, so
+/// the decode batch decays one request at a time through any threshold
+/// in range — the deterministic way to force plane switches.
+fn staggered(n: usize, budget: usize, buffer: usize, threshold: usize) -> Workload {
+    Workload {
+        prompt_lens: vec![20; n],
+        max_new: (0..n).map(|i| 4 + 2 * i).collect(),
+        budget,
+        buffer,
+        threshold,
+    }
+}
+
+/// Torture: a one-token streaming buffer keeps a compression job
+/// outstanding across *every* sweep boundary, so the plane switch
+/// happens with flushes submitted by the other plane still in flight —
+/// the join at the next commit must observe them regardless of which
+/// plane runs that sweep. Tight budget adds preemption churn on top.
+#[test]
+fn switch_with_flush_outstanding_bit_identical() {
+    let w = staggered(12, 64 << 10, 1, 6);
+    let (reference, ref_m) = run(&w, ExecMode::Sequential, 1, 1);
+    assert!(ref_m.flush_jobs > 0, "one-token buffers produced no flush jobs");
+
+    let (got, m) = run(&w, ExecMode::Hybrid, 4, 2);
+    assert_eq!(reference, got);
+    assert!(m.hybrid_switches >= 1, "decaying batch never crossed threshold 6");
+    assert!(m.hybrid_batched_sweeps > 0, "batched plane never ran");
+    assert!(m.hybrid_pipelined_sweeps > 0, "pipelined plane never ran");
+}
+
+/// Torture: preemption and plane switching in the same run — the tight
+/// budget preempts the youngest requests while the decaying batch
+/// drives switches, and readmission swings the batch back up across the
+/// threshold. Victim schedule, readmission interleaving, and token
+/// streams must all match sequential.
+#[test]
+fn preemption_straddling_switches_bit_identical() {
+    let w = staggered(12, 64 << 10, 2, 6);
+    let (reference, _) = run(&w, ExecMode::Sequential, 1, 1);
+    assert!(reference.requests_preempted > 0, "scenario failed to trigger preemption");
+    assert!(reference.results.iter().all(|(_, _, f, _)| *f != FinishReason::OutOfMemory));
+
+    for (pool, stages) in [(2, 2), (4, 4)] {
+        let (got, m) = run(&w, ExecMode::Hybrid, pool, stages);
+        assert_eq!(reference, got, "pool {pool} stages {stages}");
+        assert!(m.hybrid_switches >= 1, "pool {pool} stages {stages}: no switch under preemption");
+    }
+}
+
+/// Hysteresis: a monotonically decaying batch crosses the threshold
+/// downward exactly once, so the policy must switch exactly once — no
+/// flapping at the boundary. Unbounded budget keeps readmission churn
+/// out so the batch really is monotone.
+#[test]
+fn hysteresis_switches_once_per_crossing() {
+    let w = staggered(10, usize::MAX, 2, 5);
+    let (reference, _) = run(&w, ExecMode::Sequential, 1, 1);
+    let (got, m) = run(&w, ExecMode::Hybrid, 4, 2);
+    assert_eq!(reference, got);
+    assert!(m.hybrid_batched_sweeps > 0, "batch of 10 should start on the batched plane");
+    assert!(m.hybrid_pipelined_sweeps > 0, "decayed batch should end on the pipelined plane");
+    assert_eq!(m.hybrid_switches, 1, "monotone decay must switch exactly once");
+}
+
+/// Threshold extremes pin each plane: threshold 1 means every non-empty
+/// batch is `>= 1`, so the policy always picks batched; a threshold no
+/// batch can reach means it always picks pipelined. Either way: zero
+/// switches, and still bit-identical to sequential.
+#[test]
+fn threshold_extremes_pin_one_plane() {
+    let w = staggered(10, usize::MAX, 2, 1);
+    let (reference, _) = run(&w, ExecMode::Sequential, 1, 1);
+
+    let (got, m) = run(&w, ExecMode::Hybrid, 4, 2);
+    assert_eq!(reference, got, "threshold 1");
+    assert_eq!(m.hybrid_pipelined_sweeps, 0, "threshold 1 must never pipeline");
+    assert_eq!(m.hybrid_switches, 0);
+
+    let w = Workload { threshold: usize::MAX, ..w };
+    let (got, m) = run(&w, ExecMode::Hybrid, 4, 2);
+    assert_eq!(reference, got, "threshold usize::MAX");
+    assert_eq!(m.hybrid_batched_sweeps, 0, "unreachable threshold must always pipeline");
+    assert_eq!(m.hybrid_switches, 0);
+}
+
+/// Trace contract: the hybrid logical stream is the sequential logical
+/// stream plus one `plane_chosen` record per decode sweep — filtering
+/// those out must give bit-identical streams, each `plane_chosen`'s
+/// deciding batch size must match the `decode_step` it precedes, and
+/// the chosen sequence must actually visit both planes (while the run,
+/// by stream equality, still preempts exactly like sequential).
+#[test]
+fn logical_stream_matches_sequential_modulo_plane_chosen() {
+    let w = staggered(12, 64 << 10, 2, 6);
+    let mk = |exec: ExecMode| {
+        let mut cfg = EngineConfig::new(gearl_spec(w.buffer))
+            .with_budget(w.budget)
+            .with_max_batch(16)
+            .with_exec(exec)
+            .with_trace_capture();
+        if exec == ExecMode::Hybrid {
+            cfg = cfg
+                .with_pool_threads(4)
+                .with_pipeline_stages(2)
+                .with_hybrid_threshold(w.threshold);
+        }
+        let mut e = Engine::new(deep_model(), cfg);
+        for (i, (&len, &max_new)) in w.prompt_lens.iter().zip(&w.max_new).enumerate() {
+            let prompt: Vec<u32> = (0..len).map(|t| ((t + i) % 10) as u32 + 3).collect();
+            e.submit(GenRequest::greedy(i as u64, prompt, max_new));
+        }
+        e.run_to_completion();
+        e.tracer().expect("trace_capture engine must own a tracer").logical()
+    };
+
+    let reference = mk(ExecMode::Sequential);
+    assert!(reference.iter().any(|k| matches!(k, EventKind::Preempt { .. })));
+    assert!(!reference.iter().any(|k| matches!(k, EventKind::PlaneChosen { .. })));
+
+    let hybrid = mk(ExecMode::Hybrid);
+    let filtered: Vec<&EventKind> = hybrid
+        .iter()
+        .filter(|k| !matches!(k, EventKind::PlaneChosen { .. }))
+        .collect();
+    assert_eq!(reference.iter().collect::<Vec<_>>(), filtered);
+
+    // One plane_chosen per decode sweep, immediately before its
+    // decode_step, with matching batch size.
+    let mut chosen = 0usize;
+    for pair in hybrid.windows(2) {
+        if let EventKind::PlaneChosen { batch, .. } = &pair[0] {
+            chosen += 1;
+            match &pair[1] {
+                EventKind::DecodeStep { n_seqs } => assert_eq!(batch, n_seqs),
+                other => panic!("plane_chosen not followed by decode_step: {other:?}"),
+            }
+        }
+    }
+    let steps =
+        hybrid.iter().filter(|k| matches!(k, EventKind::DecodeStep { .. })).count();
+    assert_eq!(chosen, steps, "one plane_chosen per decode sweep");
+
+    // The chosen sequence really visits both planes — the scenario is a
+    // switch sequence, not a constant plane relabelled.
+    let flags: Vec<bool> = hybrid
+        .iter()
+        .filter_map(|k| match k {
+            EventKind::PlaneChosen { pipelined, .. } => Some(*pipelined),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        flags.windows(2).any(|p| p[0] != p[1]),
+        "decaying batch under threshold 6 must switch planes"
+    );
+}
